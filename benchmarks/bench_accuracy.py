@@ -1,0 +1,45 @@
+"""Paper Figures 5-6: max error over runs + error by score group."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.baselines import linearize, montecarlo, power
+from repro.core import build
+from repro.graph import generators
+
+
+def run(n: int = 300, eps: float = 0.1, n_runs: int = 3):
+    g = generators.barabasi_albert(n, 3, seed=0, directed=False)
+    S = power.all_pairs(g, c=0.6, iters=50)
+    iu = np.triu_indices(g.n, 1)
+    true = S[iu]
+    groups = {"S1[0.1,1]": true >= 0.1,
+              "S2[0.01,0.1)": (true >= 0.01) & (true < 0.1),
+              "S3[<0.01)": true < 0.01}
+
+    max_errs, grp_errs = [], {k: [] for k in groups}
+    for run_i in range(n_runs):
+        idx = build.build_index(g, eps=eps, seed=run_i)
+        est = idx.query_pairs(iu[0], iu[1])
+        err = np.abs(est - true)
+        max_errs.append(err.max())
+        for k, m in groups.items():
+            if m.any():
+                grp_errs[k].append(err[m].mean())
+    emit(f"fig5/accuracy/sling_max_err/n={n}", 1e6 * float(np.max(max_errs)),
+         f"eps={eps};runs={n_runs};below_eps={np.max(max_errs) <= eps}")
+    for k in groups:
+        emit(f"fig6/accuracy/sling_avg_err/{k}", 
+             1e6 * float(np.mean(grp_errs[k])), "x1e-6 scale")
+
+    lin = linearize.build(g, R=100, seed=0)
+    errs = [abs(linearize.query_pair(lin, g, int(u), int(v)) - S[u, v])
+            for u, v in zip(iu[0][::37], iu[1][::37])]
+    emit(f"fig5/accuracy/linearize_max_err/n={n}", 1e6 * float(np.max(errs)),
+         "no worst-case guarantee")
+    mc = montecarlo.build(g, eps=eps, seed=0, n_w_override=2000)
+    errs = [abs(montecarlo.query_pair(mc, int(u), int(v)) - S[u, v])
+            for u, v in zip(iu[0][::37], iu[1][::37])]
+    emit(f"fig5/accuracy/mc_max_err/n={n}", 1e6 * float(np.max(errs)),
+         "n_w=2000")

@@ -1,0 +1,44 @@
+"""Paper Figure 3 + Section 5.1: preprocessing cost.
+
+SLING with Algorithm 1 vs Algorithm 4 d_k estimation (the paper's
+adaptive-sampling claim), HP-table construction, MC and Linearize."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.baselines import linearize, montecarlo
+from repro.core import build, diagonal, hp_index, theory
+from repro.graph import generators
+
+
+def run(sizes=(300, 1000), eps: float = 0.2):
+    for n in sizes:
+        g = generators.barabasi_albert(n, 3, seed=0, directed=False)
+        p = theory.plan(eps=eps, n=g.n)
+
+        t0 = time.perf_counter()
+        diagonal.estimate_diagonal(g, p, seed=0, adaptive=False)
+        t_alg1 = time.perf_counter() - t0
+        emit(f"fig3/preprocess/d_alg1/n={n}", 1e6 * t_alg1, "fixed budget")
+
+        t0 = time.perf_counter()
+        diagonal.estimate_diagonal(g, p, seed=0, adaptive=True)
+        t_alg4 = time.perf_counter() - t0
+        emit(f"fig3/preprocess/d_alg4/n={n}", 1e6 * t_alg4,
+             f"adaptive;speedup={t_alg1 / max(t_alg4, 1e-9):.1f}x")
+
+        t0 = time.perf_counter()
+        hp_index.build_hp_table(g, p.theta, p.sqrt_c, p.l_max, block=256)
+        emit(f"fig3/preprocess/hp_table/n={n}",
+             1e6 * (time.perf_counter() - t0), f"theta={p.theta:.2e}")
+
+        t0 = time.perf_counter()
+        montecarlo.build(g, eps=eps, seed=0, n_w_override=1000)
+        emit(f"fig3/preprocess/mc/n={n}",
+             1e6 * (time.perf_counter() - t0), "n_w=1000")
+
+        t0 = time.perf_counter()
+        linearize.build(g, R=100, seed=0)
+        emit(f"fig3/preprocess/linearize/n={n}",
+             1e6 * (time.perf_counter() - t0), "R=100,L=3")

@@ -1,0 +1,50 @@
+"""Paper Figure 1: average single-pair query cost.
+
+SLING's three query paths (host merge-join = the paper's access
+pattern; batched device searchsorted; Pallas hp_join kernel in
+interpret mode) vs Linearize and MC.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.baselines import linearize, montecarlo
+from repro.core import build
+from repro.graph import generators
+
+
+def run(sizes=(300, 1000, 3000), eps: float = 0.15, n_q: int = 200):
+    for n in sizes:
+        g = generators.barabasi_albert(n, 3, seed=0, directed=False)
+        idx = build.build_index(g, eps=eps, seed=0)
+        rng = np.random.default_rng(0)
+        us_q = rng.integers(0, g.n, n_q)
+        vs_q = rng.integers(0, g.n, n_q)
+
+        t = timeit(lambda: [idx.query_pair_host(int(u), int(v))
+                            for u, v in zip(us_q, vs_q)])
+        emit(f"fig1/single_pair/sling_host/n={n}", t / n_q,
+             f"m={g.m};eps={eps}")
+        idx.query_pairs(us_q, vs_q)  # warm the jit
+        t = timeit(lambda: idx.query_pairs(us_q, vs_q))
+        emit(f"fig1/single_pair/sling_device_batched/n={n}", t / n_q,
+             "amortized")
+        from repro.kernels.hp_join import ops as hops
+        hops.query_pairs_kernel(idx, us_q[:64], vs_q[:64], bq=8)
+        t = timeit(lambda: hops.query_pairs_kernel(idx, us_q[:64],
+                                                   vs_q[:64], bq=8))
+        emit(f"fig1/single_pair/sling_pallas_interpret/n={n}", t / 64,
+             "interpret-mode")
+
+        lin = linearize.build(g, R=100, seed=0)
+        t = timeit(lambda: [linearize.query_pair(lin, g, int(u), int(v))
+                            for u, v in zip(us_q[:20], vs_q[:20])])
+        emit(f"fig1/single_pair/linearize/n={n}", t / 20, "T=11")
+
+        if n <= 1000:  # MC index is O(n/eps^2): small graphs only (paper)
+            mc = montecarlo.build(g, eps=eps, seed=0,
+                                  n_w_override=2000)
+            t = timeit(lambda: [montecarlo.query_pair(mc, int(u), int(v))
+                                for u, v in zip(us_q[:50], vs_q[:50])])
+            emit(f"fig1/single_pair/mc/n={n}", t / 50, "n_w=2000")

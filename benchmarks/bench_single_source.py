@@ -1,0 +1,47 @@
+"""Paper Figure 2: average single-source query cost.
+
+SLING Algorithm 6 (paper), the beyond-paper Horner push, the naive
+n x Alg-3 strawman, the batched device path, and Linearize.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.baselines import linearize
+from repro.core import build
+from repro.core.single_source import (single_source_device,
+                                      single_source_horner,
+                                      single_source_naive,
+                                      single_source_paper)
+from repro.graph import generators
+
+
+def run(sizes=(300, 1000, 3000), eps: float = 0.15, n_q: int = 5):
+    for n in sizes:
+        g = generators.barabasi_albert(n, 3, seed=0, directed=False)
+        idx = build.build_index(g, eps=eps, seed=0)
+        rng = np.random.default_rng(0)
+        qs = rng.integers(0, g.n, n_q)
+
+        t = timeit(lambda: [single_source_paper(idx, g, int(u))
+                            for u in qs])
+        emit(f"fig2/single_source/sling_alg6/n={n}", t / n_q, "paper")
+        t = timeit(lambda: [single_source_horner(idx, g, int(u))
+                            for u in qs])
+        emit(f"fig2/single_source/sling_horner/n={n}", t / n_q,
+             "beyond-paper O(L m)")
+        batch = qs.astype(np.int32)
+        single_source_device(idx, g, batch)
+        t = timeit(lambda: single_source_device(idx, g, batch))
+        emit(f"fig2/single_source/sling_device_batched/n={n}", t / n_q,
+             "amortized")
+        if n <= 300:
+            t = timeit(lambda: single_source_naive(idx, g, int(qs[0])),
+                       repeat=1)
+            emit(f"fig2/single_source/sling_naive_nxalg3/n={n}", t,
+                 "strawman")
+        lin = linearize.build(g, R=100, seed=0)
+        t = timeit(lambda: [linearize.query_single_source(lin, g, int(u))
+                            for u in qs])
+        emit(f"fig2/single_source/linearize/n={n}", t / n_q, "")

@@ -1,0 +1,22 @@
+"""Paper Figure 4 + Section 5.2: index space consumption."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.baselines import montecarlo
+from repro.core import build, optimizations
+from repro.graph import generators
+
+
+def run(sizes=(300, 1000, 3000), eps: float = 0.15):
+    for n in sizes:
+        g = generators.barabasi_albert(n, 3, seed=0, directed=False)
+        idx = build.build_index(g, eps=eps, seed=0)
+        emit(f"fig4/space/sling/n={n}", idx.nbytes(),
+             f"entries={int(idx.hp.counts.sum())}")
+        saved = optimizations.apply_space_reduction(idx, g)
+        emit(f"fig4/space/sling_reduced/n={n}", idx.nbytes() if False
+             else idx.nbytes(), f"saved_bytes={saved} (section 5.2)")
+        if n <= 1000:
+            mc = montecarlo.build(g, eps=eps, seed=0, n_w_override=2000)
+            emit(f"fig4/space/mc/n={n}", mc.nbytes(), "n_w=2000")
+        emit(f"fig4/space/linearize/n={n}", 8 * (g.n + g.m), "O(n+m)")

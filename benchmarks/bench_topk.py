@@ -1,0 +1,27 @@
+"""Paper Figure 7: precision of the top-k SimRank pairs."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.baselines import linearize, power
+from repro.core import build
+from repro.graph import generators
+
+
+def run(n: int = 300, eps: float = 0.1, ks=(100, 200, 400)):
+    g = generators.barabasi_albert(n, 3, seed=0, directed=False)
+    S = power.all_pairs(g, c=0.6, iters=50)
+    iu = np.triu_indices(g.n, 1)
+    true = S[iu]
+    idx = build.build_index(g, eps=eps, seed=0)
+    est = idx.query_pairs(iu[0], iu[1])
+    lin = linearize.build(g, R=100, seed=0)
+    lin_scores = np.array([linearize.query_pair(lin, g, int(u), int(v))
+                           for u, v in zip(iu[0], iu[1])])
+    for k in ks:
+        top_true = set(np.argsort(-true)[:k].tolist())
+        p_sling = len(top_true & set(np.argsort(-est)[:k].tolist())) / k
+        p_lin = len(top_true & set(np.argsort(-lin_scores)[:k].tolist())) / k
+        emit(f"fig7/topk/sling/k={k}", 1e6 * p_sling, "precision x1e-6")
+        emit(f"fig7/topk/linearize/k={k}", 1e6 * p_lin, "precision x1e-6")

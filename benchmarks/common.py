@@ -1,0 +1,25 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def timeit(fn, repeat: int = 3, number: int = 1):
+    """Median wall time of fn() in microseconds."""
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        for _ in range(number):
+            fn()
+        times.append((time.perf_counter() - t0) / number)
+    return 1e6 * float(np.median(times))
+
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}")

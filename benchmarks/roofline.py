@@ -1,0 +1,70 @@
+"""Roofline report: formats the dry-run JSON records (deliverable g).
+
+Reads dryrun_16x16.json (+ dryrun_2x16x16.json when present) produced by
+``python -m repro.launch.dryrun --all --out ...`` and prints the
+three-term table: compute / memory / collective seconds per step,
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs ratio, roofline MFU.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load(path: str):
+    with open(path) as f:
+        return json.load(f)
+
+
+def run(paths=None) -> None:
+    paths = paths or [os.path.join(REPO, "dryrun_16x16.json"),
+                      os.path.join(REPO, "dryrun_2x16x16.json")]
+    for path in paths:
+        if not os.path.exists(path):
+            print(f"# roofline: missing {path}; run "
+                  f"`python -m repro.launch.dryrun --all --out {path}`")
+            continue
+        for rec in load(path):
+            if not rec.get("ok"):
+                emit(f"roofline/{rec['mesh']}/{rec['arch']}x{rec['shape']}",
+                     -1.0, f"FAILED {rec.get('error', '')[:60]}")
+                continue
+            r = rec["roofline"]
+            step = max(r["t_compute_s"], r["t_memory_s"],
+                       r["t_collective_s"])
+            emit(
+                f"roofline/{rec['mesh']}/{rec['arch']}x{rec['shape']}",
+                1e6 * step,
+                f"bottleneck={r['bottleneck']};mfu={r['roofline_mfu']:.4f};"
+                f"useful={r['useful_ratio']:.3f};"
+                f"peakGiB={rec['bytes_per_device']['peak_est'] / 2**30:.2f}")
+
+
+def markdown_table(path: str) -> str:
+    """Markdown rendering used to refresh EXPERIMENTS.md."""
+    rows = [
+        "| arch | shape | mesh | t_compute | t_memory | t_collective "
+        "| bottleneck | peak GiB/dev | useful | roofline MFU |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load(path):
+        if not rec.get("ok"):
+            rows.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+                        f"| FAILED | | | | | | |")
+            continue
+        r = rec["roofline"]
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+            f"| {r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} "
+            f"| {r['t_collective_s']:.2e} | {r['bottleneck']} "
+            f"| {rec['bytes_per_device']['peak_est'] / 2**30:.2f} "
+            f"| {r['useful_ratio']:.3f} | {r['roofline_mfu']:.4f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    run()

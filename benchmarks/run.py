@@ -1,0 +1,53 @@
+"""Benchmark driver: one module per paper figure/table.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+``--fast`` shrinks graph sizes so the whole suite finishes in a few
+minutes on one CPU core; default sizes match the figures in
+EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: pair,source,preprocess,space,"
+                         "accuracy,topk,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name: str) -> bool:
+        return only is None or name in only
+
+    sizes = (300, 1000) if args.fast else (300, 1000, 3000)
+    print("name,us_per_call,derived")
+
+    if want("pair"):
+        from benchmarks import bench_single_pair
+        bench_single_pair.run(sizes=sizes)
+    if want("source"):
+        from benchmarks import bench_single_source
+        bench_single_source.run(sizes=sizes)
+    if want("preprocess"):
+        from benchmarks import bench_preprocess
+        bench_preprocess.run(sizes=sizes[:2])
+    if want("space"):
+        from benchmarks import bench_space
+        bench_space.run(sizes=sizes)
+    if want("accuracy"):
+        from benchmarks import bench_accuracy
+        bench_accuracy.run(n=300, n_runs=2 if args.fast else 3)
+    if want("topk"):
+        from benchmarks import bench_topk
+        bench_topk.run(n=300)
+    if want("roofline"):
+        from benchmarks import roofline
+        roofline.run()
+
+
+if __name__ == "__main__":
+    main()

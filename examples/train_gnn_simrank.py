@@ -1,0 +1,43 @@
+"""Train a GCN node classifier with SLING SimRank anchor features for a
+few hundred steps (paper technique as a first-class feature input).
+
+    PYTHONPATH=src python examples/train_gnn_simrank.py
+"""
+import dataclasses
+
+import jax.random as jr
+import numpy as np
+
+from repro.configs import base as cfg_base
+from repro.core import build
+from repro.core.single_source import single_source_device
+from repro.data import pipeline
+from repro.graph import generators
+from repro.models import gnn as G
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.train.trainer import TrainerConfig, fit
+
+g = generators.barabasi_albert(600, 4, seed=0, directed=False)
+print(f"graph n={g.n} m={g.m}")
+
+# SLING anchor features: single-source SimRank from 8 hub nodes
+idx = build.build_index(g, eps=0.2, seed=0)
+anchors = np.argsort(-g.in_deg)[:8].astype(np.int32)
+sim = single_source_device(idx, g, anchors).T  # (n, 8)
+print(f"SimRank anchor features: {sim.shape}, mean {sim.mean():.4f}")
+
+cfg = dataclasses.replace(cfg_base.get("gcn-cora").smoke(),
+                          d_in=16, sim_feats=8, d_hidden=16)
+batch = pipeline.gnn_batch(g, cfg.d_in, cfg.n_classes, sim_feat=sim)
+params = G.init_params(cfg, jr.PRNGKey(0))
+opt = AdamW(lr=cosine_schedule(1e-2, warmup=20, total=300),
+            weight_decay=0.01)
+params, _, hist = fit(lambda p, b: G.loss_fn(cfg, p, b), params,
+                      lambda s: batch, opt,
+                      TrainerConfig(steps=300, log_every=50))
+
+import jax.numpy as jnp
+out = G.forward(cfg, params, {k: jnp.asarray(v) for k, v in batch.items()})
+acc = float((np.argmax(np.asarray(out), -1) == batch["labels"]).mean())
+print(f"final train accuracy: {acc:.3f} (loss {hist[0][1]:.3f} -> "
+      f"{hist[-1][1]:.3f})")

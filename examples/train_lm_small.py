@@ -1,0 +1,30 @@
+"""Train a small LM (the smollm-135m family reduced config) for a few
+hundred steps with checkpoint/restart enabled.
+
+    PYTHONPATH=src python examples/train_lm_small.py
+"""
+import tempfile
+
+import jax.random as jr
+
+from repro.configs import base as cfg_base
+from repro.data import pipeline
+from repro.models import transformer as T
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.train.trainer import TrainerConfig, fit
+
+cfg = cfg_base.get("smollm-135m").smoke()
+params = T.init_params(cfg, jr.PRNGKey(0))
+n_params = sum(p.size for p in __import__("jax").tree.leaves(params))
+print(f"model: {cfg.name}, {n_params / 1e3:.0f}K params")
+
+stream = pipeline.TokenStream(vocab=cfg.vocab, batch=16, seq=64)
+opt = AdamW(lr=cosine_schedule(3e-3, warmup=20, total=300))
+with tempfile.TemporaryDirectory() as ckpt:
+    params, _, hist = fit(
+        lambda p, b: T.lm_loss(cfg, p, b["tokens"], b["targets"]),
+        params, stream.batch_at, opt,
+        TrainerConfig(steps=300, log_every=50, ckpt_dir=ckpt,
+                      ckpt_every=100))
+print(f"loss {hist[0][1]:.3f} -> {hist[-1][1]:.3f}")
+assert hist[-1][1] < hist[0][1]

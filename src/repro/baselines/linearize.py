@@ -1,0 +1,153 @@
+"""Linearization baseline (Maehara et al., paper Sections 3.3 / Appendix A).
+
+S = c P^T S P + D with D the diagonal correction matrix; given D,
+s(u,v) = sum_l c^l (P^l e_u)^T D (P^l e_v)   (Eq. 9, truncated at T).
+
+Preprocessing estimates p~^(l)_{k,i} (reverse-walk occupancy) with R
+walks truncated at T steps, assembles the linear system
+sum_{l,i} c^l (p~^(l)_{k,i})^2 D(i,i) = 1 (Eq. 19) and runs L
+Gauss-Seidel sweeps. Defaults follow the paper's recommendation
+T = 11, R = 100, L = 3 at c = 0.6.
+
+This method has NO worst-case accuracy guarantee (the paper's central
+criticism): the system matrix need not be diagonally dominant (the
+directed 4-cycle of Appendix A/Figure 8 violates it at c = 0.6 --
+``system_matrix_dd_margin`` exposes this) and Gauss-Seidel may not
+converge. We reproduce it faithfully as the primary comparison target.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.graph import csr
+
+
+@dataclasses.dataclass
+class LinearizeIndex:
+    c: float
+    T: int
+    D: np.ndarray  # (n,) diagonal of the correction matrix
+
+
+def _p_matvec(g: csr.Graph, x: np.ndarray) -> np.ndarray:
+    """y = P x: y[i] = sum_{j: edge i->j} x[j] / |I(j)|."""
+    deg = np.maximum(g.in_deg, 1).astype(np.float64)
+    y = np.zeros_like(x)
+    np.add.at(y, g.edge_src, x[g.edge_dst] / deg[g.edge_dst])
+    return y
+
+
+def _pt_matvec(g: csr.Graph, x: np.ndarray) -> np.ndarray:
+    """y = P^T x: y[j] = (1/|I(j)|) sum_{i in I(j)} x[i]."""
+    deg = np.maximum(g.in_deg, 1).astype(np.float64)
+    y = np.zeros_like(x)
+    np.add.at(y, g.edge_dst, x[g.edge_src] / deg[g.edge_dst])
+    return y
+
+
+def estimate_occupancies(g: csr.Graph, T: int, R: int, seed: int = 0):
+    """p~^(l)_{k,i} via R truncated reverse walks per node.
+
+    Returns list over l of (n, n) CSR-ish dense count matrices / R
+    (dense: baseline is used on small graphs, as in the paper's Fig 5-7).
+    """
+    rng = np.random.default_rng(seed)
+    n = g.n
+    deg = g.in_deg.astype(np.int64)
+    in_ptr = g.in_ptr.astype(np.int64)
+    pos = np.tile(np.arange(n, dtype=np.int64)[:, None], (1, R))
+    alive = deg[pos] > 0
+    out = []
+    eye = np.zeros((n, n)); eye[np.arange(n), np.arange(n)] = 1.0
+    out.append(eye)
+    for _ in range(1, T + 1):
+        d = deg[pos]
+        r = rng.integers(0, np.maximum(d, 1))
+        nxt = g.in_idx[np.minimum(in_ptr[pos] + r, max(g.m - 1, 0))]
+        pos = np.where(alive, nxt, pos)
+        alive = alive & (deg[pos] > 0)
+        p = np.zeros((n, n))
+        rows = np.repeat(np.arange(n), R)
+        occupied = alive.ravel()
+        np.add.at(p, (rows[occupied], pos.ravel()[occupied]), 1.0 / R)
+        out.append(p)
+    return out
+
+
+def system_matrix(g: csr.Graph, c: float, T: int, R: int | None,
+                  seed: int = 0) -> np.ndarray:
+    """M(k,i) = sum_l c^l (p^(l)_{k,i})^2. R=None -> exact occupancies."""
+    n = g.n
+    if R is None:
+        from repro.baselines import power
+        W = power.transition_dense(g)  # exact reverse-walk kernel
+        P_l = np.eye(n)
+        M = np.zeros((n, n))
+        for l in range(T + 1):
+            M += (c ** l) * P_l ** 2
+            P_l = W @ P_l if l + 1 <= T else P_l
+        return M
+    ps = estimate_occupancies(g, T, R, seed)
+    M = np.zeros((n, n))
+    for l, p in enumerate(ps):
+        M += (c ** l) * p ** 2
+    return M
+
+
+def system_matrix_dd_margin(M: np.ndarray) -> float:
+    """min_i (|M_ii| - sum_{j != i} |M_ij|); negative = not diagonally
+    dominant (Appendix A's failure condition)."""
+    off = np.abs(M).sum(axis=1) - np.abs(np.diag(M))
+    return float((np.abs(np.diag(M)) - off).min())
+
+
+def gauss_seidel(M: np.ndarray, iters: int = 3) -> tuple[np.ndarray, float]:
+    """L sweeps of Gauss-Seidel for M D = 1. Returns (D, residual)."""
+    n = M.shape[0]
+    D = np.zeros(n)
+    for _ in range(iters):
+        for i in range(n):
+            off = M[i] @ D - M[i, i] * D[i]
+            D[i] = (1.0 - off) / max(M[i, i], 1e-12)
+    resid = float(np.abs(M @ D - 1.0).max())
+    return D, resid
+
+
+def build(g: csr.Graph, c: float = 0.6, T: int = 11, R: int | None = 100,
+          L: int = 3, seed: int = 0) -> LinearizeIndex:
+    M = system_matrix(g, c, T, R, seed)
+    D, _ = gauss_seidel(M, iters=L)
+    return LinearizeIndex(c=c, T=T, D=D)
+
+
+def query_pair(lin: LinearizeIndex, g: csr.Graph, u: int, v: int) -> float:
+    if u == v:
+        return 1.0
+    n = g.n
+    eu = np.zeros(n); eu[u] = 1.0
+    ev = np.zeros(n); ev[v] = 1.0
+    s = 0.0
+    for l in range(lin.T + 1):
+        s += (lin.c ** l) * float((eu * lin.D * ev).sum())
+        if l < lin.T:
+            eu = _p_matvec(g, eu)
+            ev = _p_matvec(g, ev)
+    return s
+
+
+def query_single_source(lin: LinearizeIndex, g: csr.Graph,
+                        u: int) -> np.ndarray:
+    """S[:, u] = sum_l c^l (P^T)^l D P^l e_u, Horner-stacked."""
+    n = g.n
+    us = []
+    x = np.zeros(n); x[u] = 1.0
+    for _ in range(lin.T + 1):
+        us.append(x.copy())
+        x = _p_matvec(g, x)
+    acc = lin.D * us[lin.T]
+    for l in range(lin.T - 1, -1, -1):
+        acc = lin.D * us[l] + lin.c * _pt_matvec(g, acc)
+    acc[u] = 1.0
+    return acc

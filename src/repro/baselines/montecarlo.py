@@ -1,0 +1,84 @@
+"""Monte Carlo baseline (Fogaras & Racz, paper Section 3.2).
+
+Pre-computes n_w *truncated reverse random walks* per node (truncation
+at step t is what separates it from SLING's sqrt(c)-walks: every step of
+the classic walk continues w.p. 1, so the estimator c^tau must be
+truncated, biasing it by <= c^{t+1} -- Eq. 4). Query: pair (u, v) is
+estimated by (1/n_w) sum_l c^{tau_l} where tau_l is the first step at
+which the l-th walks from u and v coincide.
+
+Paper parameterization: t > log_c(eps/2) and
+n_w >= 14/(3 eps^2) (log(2/delta) + 2 log n) give eps error for ALL
+pairs w.p. >= 1 - delta. The index stores n * n_w * (t+1) node ids --
+the O(n log(n/delta) / eps^2) space cost that motivates SLING.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.random as jr
+import numpy as np
+
+from repro.graph import csr
+
+
+@dataclasses.dataclass
+class MCIndex:
+    c: float
+    t: int
+    n_w: int
+    walks: np.ndarray  # (n, n_w, t+1) int32, -1 once the walk is stuck
+
+    def nbytes(self) -> int:
+        return self.walks.nbytes
+
+
+def params_for(eps: float, delta: float, n: int, c: float):
+    t = max(1, int(math.ceil(math.log(eps / 2.0) / math.log(c))))
+    n_w = int(math.ceil(14.0 / (3.0 * eps * eps)
+                        * (math.log(2.0 / delta) + 2.0 * math.log(max(n, 2)))))
+    return t, n_w
+
+
+def build(g: csr.Graph, eps: float = 0.025, delta: float | None = None,
+          c: float = 0.6, seed: int = 0,
+          n_w_override: int | None = None) -> MCIndex:
+    delta = delta if delta is not None else 1.0 / g.n
+    t, n_w = params_for(eps, delta, g.n, c)
+    if n_w_override is not None:
+        n_w = n_w_override
+    rng = np.random.default_rng(seed)
+    n = g.n
+    walks = np.full((n, n_w, t + 1), -1, dtype=np.int32)
+    pos = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, n_w))
+    walks[:, :, 0] = pos
+    deg = g.in_deg.astype(np.int64)
+    in_ptr = g.in_ptr.astype(np.int64)
+    stuck = deg[pos] == 0
+    for step in range(1, t + 1):
+        d = deg[pos]
+        r = rng.integers(0, np.maximum(d, 1))
+        nxt = g.in_idx[np.minimum(in_ptr[pos] + r, g.m - 1)]
+        pos = np.where(stuck, pos, nxt).astype(np.int32)
+        walks[:, :, step] = np.where(stuck, -1, pos)
+        stuck = stuck | (deg[pos] == 0)
+    return MCIndex(c=c, t=t, n_w=n_w, walks=walks)
+
+
+def query_pair(mc: MCIndex, u: int, v: int) -> float:
+    if u == v:
+        return 1.0
+    wu = mc.walks[u]          # (n_w, t+1)
+    wv = mc.walks[v]
+    same = (wu == wv) & (wu >= 0)
+    # first meeting step per coupled walk pair, else t+1 (no meet)
+    first = np.where(same.any(axis=1), same.argmax(axis=1), mc.t + 1)
+    est = np.where(first <= mc.t, mc.c ** first, 0.0)
+    return float(est.mean())
+
+
+def query_single_source(mc: MCIndex, u: int) -> np.ndarray:
+    n = mc.walks.shape[0]
+    return np.array([1.0 if v == u else query_pair(mc, u, v)
+                     for v in range(n)])

@@ -1,0 +1,1 @@
+from repro.configs.base import all_archs, get  # noqa: F401

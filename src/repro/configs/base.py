@@ -1,0 +1,58 @@
+"""Config registry: every assigned architecture registers an ArchSpec.
+
+Each arch module defines ``full()`` (exact assigned config), ``smoke()``
+(reduced same-family config for CPU tests), and the list of shape cells
+it participates in. Families: "lm" | "gnn" | "recsys".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+LM_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+GNN_SHAPES = ("full_graph_sm", "minibatch_lg", "ogb_products", "molecule")
+RECSYS_SHAPES = ("train_batch", "serve_p99", "serve_bulk", "retrieval_cand")
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str
+    full: Callable[[], Any]
+    smoke: Callable[[], Any]
+    shapes: tuple
+    notes: str = ""
+
+
+_REGISTRY: dict[str, ArchSpec] = {}
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    _REGISTRY[spec.arch_id] = spec
+    return spec
+
+
+def get(arch_id: str) -> ArchSpec:
+    _ensure_loaded()
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch '{arch_id}'; have {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]
+
+
+def all_archs() -> dict[str, ArchSpec]:
+    _ensure_loaded()
+    return dict(_REGISTRY)
+
+
+_LOADED = False
+
+
+def _ensure_loaded():
+    global _LOADED
+    if _LOADED:
+        return
+    from repro.configs import (llama4_scout_17b_a16e, mixtral_8x22b,  # noqa
+                               gemma3_1b, qwen3_14b, smollm_135m,
+                               gcn_cora, pna, graphcast, gat_cora,
+                               xdeepfm, sling_paper)
+    _LOADED = True

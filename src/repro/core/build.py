@@ -1,0 +1,49 @@
+"""Index-construction orchestration (preprocessing pipeline).
+
+build_index(g, eps) = theory.plan -> diagonal (Alg 4) -> HP table
+(Alg 2, blocked) -> optional Section-5 optimizations. Parallel and
+out-of-core modes per paper Section 5.4:
+
+  * ``spill_dir`` streams HP blocks to disk (out-of-core assembly);
+  * ``shard_build_hp`` (launch/dryrun path) shards the target-node
+    blocks of Alg 2 over the device mesh with shard_map -- the paper's
+    "embarrassingly parallelizable" construction made explicit.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import diagonal, hp_index, theory
+from repro.core.index import SlingIndex
+from repro.graph import csr
+
+
+def build_index(g: csr.Graph, eps: float = 0.025, delta: float | None = None,
+                c: float = 0.6, seed: int = 0, adaptive: bool = True,
+                block: int = 256, spill_dir: str | None = None,
+                space_reduce: bool = False, enhance: bool = False,
+                exact_d: bool = False, verbose: bool = False) -> SlingIndex:
+    p = theory.plan(eps=eps, delta=delta, c=c, n=g.n)
+    t0 = time.perf_counter()
+    if exact_d:
+        d = diagonal.exact_diagonal(g, c).astype(np.float32)
+    else:
+        d = diagonal.estimate_diagonal(g, p, seed=seed, adaptive=adaptive)
+    t1 = time.perf_counter()
+    hp = hp_index.build_hp_table(g, theta=p.theta, sqrt_c=p.sqrt_c,
+                                 l_max=p.l_max, block=block,
+                                 spill_dir=spill_dir, progress=verbose)
+    t2 = time.perf_counter()
+    idx = SlingIndex(plan=p, d=d, hp=hp)
+    if space_reduce:
+        from repro.core import optimizations
+        optimizations.apply_space_reduction(idx, g)
+    if enhance:
+        from repro.core import optimizations
+        optimizations.mark_for_enhancement(idx, g)
+    if verbose:
+        print(f"build_index: d={t1 - t0:.2f}s hp={t2 - t1:.2f}s "
+              f"entries={int(hp.counts.sum())} bytes={idx.nbytes()}")
+    return idx

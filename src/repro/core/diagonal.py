@@ -1,0 +1,131 @@
+"""Correction-factor (d_k) estimation: Algorithms 1 and 4.
+
+d_k = P[two sqrt(c)-walks from v_k never meet after step 0]
+    = 1 - c/|I(k)| - c * mu_k,                          (Eq. 14)
+mu_k = (1/|I(k)|^2) * sum_{i != j in I(k)} s(v_i, v_j). (Eq. 15)
+
+Vectorization (DESIGN.md section 2): instead of the paper's per-node
+loop we sample in-neighbor start pairs for *all* nodes at once, run one
+big batch of paired sqrt(c)-walks (``walks.paired_meet_chunked``) and
+``segment_sum`` the meet indicators back per node. Algorithm 4's
+two-phase adaptive schedule becomes: phase 1 with n_r1 pairs for every
+node; nodes whose mu-hat exceeds eps_d get a ragged phase-2 batch sized
+by ``theory.phase2_pairs`` (the asymptotically optimal Bernoulli-mean
+sample count, Lemma 11).
+
+Exact shortcuts (beyond-paper, zero-error):
+  * in-degree 0: both walks stop immediately -> d_k = 1.
+  * in-degree 1: the only pair is (x, x), mu_k = 0 -> d_k = 1 - c.
+These skip sampling entirely for the long tail of low-degree nodes.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.random as jr
+import numpy as np
+
+from repro.core import theory, walks
+from repro.graph import csr
+
+
+def _sample_start_pairs(g: csr.Graph, nodes: np.ndarray,
+                        pair_counts: np.ndarray, rng: np.random.Generator):
+    """For each node k (repeated pair_counts[k] times) draw two uniform
+    in-neighbors. Returns (seg_ids, start_a, start_b, valid)."""
+    reps = pair_counts.astype(np.int64)
+    seg = np.repeat(np.arange(len(nodes)), reps)
+    ks = nodes[seg]
+    deg = g.in_deg[ks].astype(np.int64)
+    base = g.in_ptr[ks].astype(np.int64)
+    ra = rng.integers(0, np.maximum(deg, 1))
+    rb = rng.integers(0, np.maximum(deg, 1))
+    start_a = g.in_idx[base + ra]
+    start_b = g.in_idx[base + rb]
+    valid = start_a != start_b  # Alg 1 line 5: skip identical picks
+    return seg, start_a.astype(np.int32), start_b.astype(np.int32), valid
+
+
+def _count_meets(dg: walks.DeviceGraph, seg, sa, sb, valid, n_groups,
+                 key, sqrt_c, t_max, chunk):
+    met = walks.paired_meet_chunked(dg, sa, sb, key, sqrt_c, t_max, chunk)
+    met = met & valid
+    cnt = np.bincount(seg[met], minlength=n_groups)
+    return cnt.astype(np.int64)
+
+
+def estimate_diagonal(g: csr.Graph, plan: theory.SlingPlan,
+                      seed: int = 0, adaptive: bool = True,
+                      chunk: int = 1 << 19,
+                      dg: walks.DeviceGraph | None = None) -> np.ndarray:
+    """Estimate all d_k. ``adaptive=True`` is Algorithm 4; False is the
+    fixed-budget Algorithm 1 (kept as the paper-faithful baseline for the
+    preprocessing benchmark)."""
+    n = g.n
+    c, sc, t_max = plan.c, plan.sqrt_c, plan.t_max
+    rng = np.random.default_rng(seed)
+    key = jr.PRNGKey(seed)
+    dg = dg or walks.DeviceGraph.from_graph(g)
+
+    deg = g.in_deg
+    d = np.ones(n, dtype=np.float64)
+    d[deg == 1] = 1.0 - c  # exact: single in-neighbor pair always equal
+    sampled = np.flatnonzero(deg >= 2)
+    if len(sampled) == 0:
+        return d.astype(np.float32)
+
+    if adaptive:
+        n_r1 = plan.n_r1
+    else:
+        n_r1 = theory.alg1_pairs(plan.eps_d, plan.delta_d, c)
+
+    # ---- phase 1: uniform budget for all sampled nodes ----
+    counts = np.full(len(sampled), n_r1, dtype=np.int64)
+    seg, sa, sb, valid = _sample_start_pairs(g, sampled, counts, rng)
+    key, k1 = jr.split(key)
+    cnt1 = _count_meets(dg, seg, sa, sb, valid, len(sampled), k1, sc,
+                        t_max, chunk)
+    mu_hat = cnt1 / n_r1
+
+    if not adaptive:
+        mu = mu_hat
+        d[sampled] = 1.0 - c / deg[sampled] - c * mu
+        return d.astype(np.float32)
+
+    # ---- phase 2 (Alg 4 lines 12-19): only nodes with mu_hat > eps_d ----
+    need = np.flatnonzero(mu_hat > plan.eps_d)
+    if len(need):
+        extra = np.array(
+            [max(0, theory.phase2_pairs(float(mu_hat[i]), plan.eps_d,
+                                        plan.delta_d, c) - n_r1)
+             for i in need], dtype=np.int64)
+        seg2, sa2, sb2, valid2 = _sample_start_pairs(
+            g, sampled[need], extra, rng)
+        key, k2 = jr.split(key)
+        cnt2 = _count_meets(dg, seg2, sa2, sb2, valid2, len(need), k2, sc,
+                            t_max, chunk)
+        total = extra + n_r1
+        mu_hat[need] = (cnt1[need] + cnt2) / total
+
+    d[sampled] = 1.0 - c / deg[sampled] - c * mu_hat
+    return d.astype(np.float32)
+
+
+def exact_diagonal(g: csr.Graph, c: float, iters: int = 50) -> np.ndarray:
+    """Ground-truth d_k from the power method (tests only; O(n^2) space).
+
+    Uses Eq. 14 with exact SimRank scores of in-neighbor pairs.
+    """
+    from repro.baselines import power
+    S = power.all_pairs(g, c=c, iters=iters)
+    n = g.n
+    d = np.ones(n, dtype=np.float64)
+    for k in range(n):
+        nbrs = g.in_neighbors(k)
+        dk = len(nbrs)
+        if dk == 0:
+            continue
+        sub = S[np.ix_(nbrs, nbrs)]
+        off_diag = sub.sum() - np.trace(sub)
+        d[k] = 1.0 - c / dk - c * off_diag / (dk * dk)
+    return d

@@ -1,0 +1,176 @@
+"""Hitting-probability index construction: Algorithm 2, TPU-native.
+
+Paper Alg 2 does a per-target hash-map local push. The TPU formulation
+(DESIGN.md section 2) processes a *block* of B target nodes as a dense
+(n, B) frontier and applies the pull operator
+
+    (A_hat x)(v) = sqrt(c) / |I(v)| * sum_{u in I(v)} x(u)
+
+via an edge gather + segment_sum (and optionally the Pallas ELL kernel
+in repro.kernels.spmv_ell). Entries <= theta are zeroed *before* each
+propagation -- exactly Alg 2's prune -- so the computed values equal the
+paper's h~ entry for entry. Kept entries at step l are the elements of
+H(.) with key l*n + k.
+
+Lemma 7 guarantees: theta < h~ <= h, per-step deficit
+<= (1 - (sqrt c)^l)/(1 - sqrt c) * theta, and |H(v)| = O(1/theta).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph import csr
+
+INT32_PAD_KEY = np.int32(2**31 - 1)
+
+
+@partial(jax.jit, static_argnames=("n",), donate_argnums=(0,))
+def _push_block(h, edge_src, edge_dst, w, theta, n: int):
+    """One pruned pull step for a (n, B) frontier block.
+
+    Returns (h_pruned, h_next): h_pruned is the >theta part recorded
+    into H at this step; h_next is A_hat @ h_pruned.
+    """
+    hp = jnp.where(h > theta, h, 0.0)
+    msgs = hp[edge_src] * w[:, None]                 # (m, B)
+    h_next = jax.ops.segment_sum(msgs, edge_dst, num_segments=n)
+    return hp, h_next
+
+
+@dataclasses.dataclass
+class HPTable:
+    """Fixed-width packed H sets for the whole graph.
+
+    keys[i] : int32 sorted ascending, key = l * n + k, padded with
+              INT32_PAD_KEY; vals[i] aligned; counts[i] = live entries.
+    """
+    n: int
+    width: int
+    keys: np.ndarray    # (n, width) int32
+    vals: np.ndarray    # (n, width) float32
+    counts: np.ndarray  # (n,) int32
+    theta: float
+    sqrt_c: float
+    l_max: int
+
+    def entries(self, v: int):
+        """Decode H(v) -> list of (l, k, value)."""
+        c = int(self.counts[v])
+        ks = self.keys[v, :c]
+        return [(int(k) // self.n, int(k) % self.n, float(x))
+                for k, x in zip(ks, self.vals[v, :c])]
+
+    def nbytes(self) -> int:
+        return self.keys.nbytes + self.vals.nbytes + self.counts.nbytes
+
+
+def build_hp_table(g: csr.Graph, theta: float, sqrt_c: float,
+                   l_max: int, block: int = 256,
+                   width: int | None = None,
+                   spill_dir: str | None = None,
+                   progress: bool = False) -> HPTable:
+    """Construct H(v) for all v by blocked dense propagation.
+
+    ``spill_dir``: out-of-core mode (paper Section 5.4) -- per-block COO
+    triples are written to .npy spill files and assembled by an external
+    merge instead of being held in RAM.
+    """
+    n = g.n
+    assert (l_max + 1) * n < 2**31 - 1, "int32 key space exceeded"
+    edge_src = jnp.asarray(g.edge_src)
+    edge_dst = jnp.asarray(g.edge_dst)
+    w = jnp.asarray(csr.normalized_pull_weights(g, sqrt_c))
+
+    src_acc, key_acc, val_acc = [], [], []
+    spill_files = []
+    import os
+    for b0 in range(0, n, block):
+        b1 = min(b0 + block, n)
+        B = b1 - b0
+        h = jnp.zeros((n, B), dtype=jnp.float32).at[
+            jnp.arange(b0, b1), jnp.arange(B)].set(1.0)
+        blk_src, blk_key, blk_val = [], [], []
+        for l in range(l_max + 1):
+            hp, h_next = _push_block(h, edge_src, edge_dst, w,
+                                     jnp.float32(theta), n)
+            hp_np = np.asarray(hp)
+            i_idx, b_idx = np.nonzero(hp_np)
+            if len(i_idx):
+                blk_src.append(i_idx.astype(np.int32))
+                blk_key.append((np.int64(l) * n + b0 + b_idx).astype(np.int32))
+                blk_val.append(hp_np[i_idx, b_idx].astype(np.float32))
+            h = h_next
+            if not bool(jnp.any(h > theta)):
+                break
+        if blk_src:
+            s = np.concatenate(blk_src)
+            k = np.concatenate(blk_key)
+            v = np.concatenate(blk_val)
+            if spill_dir is not None:
+                os.makedirs(spill_dir, exist_ok=True)
+                path = os.path.join(spill_dir, f"hp_block_{b0}.npz")
+                np.savez(path, src=s, key=k, val=v)
+                spill_files.append(path)
+            else:
+                src_acc.append(s); key_acc.append(k); val_acc.append(v)
+        if progress and (b0 // block) % 8 == 0:
+            print(f"  hp block {b0}/{n}")
+
+    if spill_dir is not None:
+        for path in spill_files:
+            z = np.load(path)
+            src_acc.append(z["src"]); key_acc.append(z["key"])
+            val_acc.append(z["val"])
+
+    if not src_acc:
+        width = width or 1
+        return HPTable(n=n, width=width,
+                       keys=np.full((n, width), INT32_PAD_KEY, np.int32),
+                       vals=np.zeros((n, width), np.float32),
+                       counts=np.zeros(n, np.int32),
+                       theta=theta, sqrt_c=sqrt_c, l_max=l_max)
+
+    src = np.concatenate(src_acc)
+    key = np.concatenate(key_acc)
+    val = np.concatenate(val_acc)
+    # group by source node, then sort each row's keys (external-sort
+    # analogue of paper Section 5.4's batch assembly)
+    order = np.lexsort((key, src))
+    src, key, val = src[order], key[order], val[order]
+    counts = np.bincount(src, minlength=n).astype(np.int32)
+    w_actual = int(counts.max()) if len(counts) else 1
+    width = max(width or 0, w_actual, 1)
+    keys = np.full((n, width), INT32_PAD_KEY, dtype=np.int32)
+    vals = np.zeros((n, width), dtype=np.float32)
+    row_start = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(counts, out=row_start[1:])
+    for v_ in range(n):
+        c0, c1 = row_start[v_], row_start[v_ + 1]
+        keys[v_, : c1 - c0] = key[c0:c1]
+        vals[v_, : c1 - c0] = val[c0:c1]
+    return HPTable(n=n, width=width, keys=keys, vals=vals, counts=counts,
+                   theta=theta, sqrt_c=sqrt_c, l_max=l_max)
+
+
+def exact_hp_vectors(g: csr.Graph, targets: np.ndarray, sqrt_c: float,
+                     l_max: int) -> np.ndarray:
+    """Un-thresholded HP vectors h^(l)(., k) for test oracles.
+
+    Returns (l_max+1, n, len(targets)) float64.
+    """
+    n = g.n
+    w = csr.normalized_pull_weights(g, sqrt_c).astype(np.float64)
+    h = np.zeros((n, len(targets)))
+    h[targets, np.arange(len(targets))] = 1.0
+    out = [h.copy()]
+    for _ in range(l_max):
+        nxt = np.zeros_like(h)
+        np.add.at(nxt, g.edge_dst, h[g.edge_src] * w[:, None])
+        out.append(nxt.copy())
+        h = nxt
+    return np.stack(out)

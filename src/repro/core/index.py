@@ -1,0 +1,143 @@
+"""The SLING index object and single-pair queries (Algorithm 3).
+
+Index = { d~_k for all k }  +  packed HP table { H(v) for all v }.
+
+Single-pair query (Alg 3): s~(u,v) = sum over matching (l,k) keys of
+h~(u;l,k) * d_k * h~(v;l,k). With keys sorted per row this is a merge
+join, O(|H(u)| + |H(v)|) = O(1/eps):
+
+  * ``query_pair_host``  -- paper-faithful scalar NumPy path (latency
+    microbenchmark; mirrors the C++ implementation's access pattern).
+  * ``query_pairs``      -- batched device path: vmapped searchsorted
+    join, the TPU-idiomatic realization (DESIGN.md section 2); also
+    available as a Pallas kernel in repro.kernels.hp_join.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hp_index, theory
+from repro.core.hp_index import INT32_PAD_KEY, HPTable
+
+
+@dataclasses.dataclass
+class SlingIndex:
+    plan: theory.SlingPlan
+    d: np.ndarray          # (n,) float32 correction factors
+    hp: HPTable
+    # section 5.2 space reduction state (host path only)
+    reduced: np.ndarray | None = None   # (n,) bool -- step-1/2 dropped
+    # section 5.3 accuracy-enhancement marks: per node, indices into H rows
+    marks: np.ndarray | None = None     # (n, n_marks) int32, -1 = none
+
+    @property
+    def n(self) -> int:
+        return self.hp.n
+
+    # ------------------------------------------------------------------
+    # host single-pair query (Alg 3, merge join)
+    # ------------------------------------------------------------------
+    def _host_entries(self, v: int, g=None):
+        """Keys/vals of H(v), re-materializing dropped step-1/2 entries
+        (section 5.2) and on-the-fly enhancement (section 5.3)."""
+        cnt = int(self.hp.counts[v])
+        keys = self.hp.keys[v, :cnt].astype(np.int64)
+        vals = self.hp.vals[v, :cnt].astype(np.float64)
+        if self.reduced is not None and self.reduced[v]:
+            assert g is not None, "reduced index needs the graph at query time"
+            from repro.core import optimizations
+            k2, v2 = optimizations.exact_step12(g, v, self.plan.sqrt_c)
+            keep = (keys // self.n == 0) | (keys // self.n > 2)
+            keys = np.concatenate([keys[keep], k2])
+            vals = np.concatenate([vals[keep], v2])
+            order = np.argsort(keys)
+            keys, vals = keys[order], vals[order]
+        if self.marks is not None and g is not None:
+            from repro.core import optimizations
+            keys, vals = optimizations.enhance_entries(
+                self, g, v, keys, vals)
+        return keys, vals
+
+    def query_pair_host(self, u: int, v: int, g=None) -> float:
+        ku, vu = self._host_entries(u, g)
+        kv, vv = self._host_entries(v, g)
+        i = j = 0
+        s = 0.0
+        n = self.n
+        d = self.d
+        while i < len(ku) and j < len(kv):
+            a, b = ku[i], kv[j]
+            if a == b:
+                s += vu[i] * float(d[a % n]) * vv[j]
+                i += 1
+                j += 1
+            elif a < b:
+                i += 1
+            else:
+                j += 1
+        return float(s)
+
+    # ------------------------------------------------------------------
+    # batched device single-pair queries
+    # ------------------------------------------------------------------
+    def device_arrays(self):
+        return (jnp.asarray(self.hp.keys), jnp.asarray(self.hp.vals),
+                jnp.asarray(self.d.astype(np.float32)))
+
+    def query_pairs(self, us: np.ndarray, vs: np.ndarray) -> np.ndarray:
+        keys, vals, d = self.device_arrays()
+        out = _pair_query_batch(keys, vals, d, jnp.asarray(us, jnp.int32),
+                                jnp.asarray(vs, jnp.int32), self.n)
+        return np.asarray(out)
+
+    # ------------------------------------------------------------------
+    def nbytes(self) -> int:
+        return self.hp.nbytes() + self.d.nbytes
+
+    def save(self, path: str) -> None:
+        meta = dataclasses.asdict(self.plan)
+        np.savez_compressed(
+            path, d=self.d, keys=self.hp.keys, vals=self.hp.vals,
+            counts=self.hp.counts,
+            reduced=(self.reduced if self.reduced is not None
+                     else np.zeros(0, bool)),
+            marks=(self.marks if self.marks is not None
+                   else np.zeros((0, 0), np.int32)),
+            meta=json.dumps(meta))
+
+    @staticmethod
+    def load(path: str) -> "SlingIndex":
+        z = np.load(path, allow_pickle=False)
+        meta = json.loads(str(z["meta"]))
+        plan = theory.SlingPlan(**meta)
+        n, width = z["keys"].shape
+        hp = HPTable(n=n, width=width, keys=z["keys"], vals=z["vals"],
+                     counts=z["counts"], theta=plan.theta,
+                     sqrt_c=plan.sqrt_c, l_max=plan.l_max)
+        reduced = z["reduced"] if z["reduced"].size else None
+        marks = z["marks"] if z["marks"].size else None
+        return SlingIndex(plan=plan, d=z["d"], hp=hp, reduced=reduced,
+                          marks=marks)
+
+
+@partial(jax.jit, static_argnames=("n",))
+def _pair_query_batch(keys, vals, d, us, vs, n: int):
+    """vmapped sorted-key join. keys (N, K) int32 ascending w/ PAD."""
+    K = keys.shape[1]
+
+    def one(u, v):
+        ku, xu = keys[u], vals[u]
+        kv, xv = keys[v], vals[v]
+        idx = jnp.searchsorted(kv, ku)
+        idx_c = jnp.clip(idx, 0, K - 1)
+        match = (kv[idx_c] == ku) & (ku != INT32_PAD_KEY)
+        dk = d[jnp.clip(ku % n, 0, n - 1)]
+        return jnp.sum(jnp.where(match, xu * xv[idx_c] * dk, 0.0))
+
+    return jax.vmap(one)(us, vs)

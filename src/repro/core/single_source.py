@@ -1,0 +1,217 @@
+"""Single-source SimRank queries (Algorithm 6) + the Horner-stacked
+beyond-paper variant.
+
+Paper Alg 6: for every step l present in H(u), seed
+rho^0(k) = h~^(l)(u,k) * d_k and push l times through the *same* pull
+operator A_hat used to build the index (the paper phrases it as an
+out-neighbor push; for each out-neighbor v_y of v_x the update is
+rho(v_y) += sqrt(c)/|I(v_y)| * rho(v_x), i.e. exactly
+rho^(t) = A_hat rho^(t-1)). Entries <= (sqrt c)^l * theta are pruned per
+step. Total work O(sum_l l * m) = O(m log^2 (1/eps)) (Lemma 12).
+
+Beyond-paper optimization ("Horner push", EXPERIMENTS.md §Perf): the
+answer is sum_l A_hat^l seed_l, which Horner-factorizes as
+
+    acc = seed_L;  for l = L-1 .. 0:  acc = A_hat acc + seed_l
+
+-- L pushes instead of L(L+1)/2, an O(L) speedup with *tighter* error:
+we prune at the smallest of the paper's per-group thresholds
+tau = (sqrt c)^L * theta, so every dropped contribution is one the paper
+would also have dropped. Accuracy therefore dominates Alg 6's.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hp_index import INT32_PAD_KEY
+from repro.graph import csr
+
+
+def _seed_matrix(idx, u: int, g: csr.Graph) -> np.ndarray:
+    """(L+1, n) float64: seeds[l, k] = h~^(l)(u,k) * d_k."""
+    n = idx.n
+    seeds = np.zeros((idx.plan.l_max + 1, n), dtype=np.float64)
+    keys, vals = idx._host_entries(u, g)
+    ls = keys // n
+    ks = keys % n
+    seeds[ls, ks] += vals * idx.d[ks].astype(np.float64)
+    return seeds
+
+
+def single_source_paper(idx, g: csr.Graph, u: int) -> np.ndarray:
+    """Faithful Alg 6 on dense n-vectors (host/NumPy)."""
+    n = idx.n
+    sc = idx.plan.sqrt_c
+    theta = idx.plan.theta
+    w = csr.normalized_pull_weights(g, sc).astype(np.float64)
+    seeds = _seed_matrix(idx, u, g)
+    out = np.zeros(n, dtype=np.float64)
+    for l in range(seeds.shape[0]):
+        rho = seeds[l]
+        if not rho.any():
+            continue
+        tau = (sc ** l) * theta
+        for _ in range(l):
+            rho = np.where(rho > tau, rho, 0.0)
+            nxt = np.zeros(n, dtype=np.float64)
+            np.add.at(nxt, g.edge_dst, rho[g.edge_src] * w)
+            rho = nxt
+        out += rho
+    return out
+
+
+def single_source_horner(idx, g: csr.Graph, u: int) -> np.ndarray:
+    """Beyond-paper Horner-stacked push (host/NumPy)."""
+    n = idx.n
+    sc = idx.plan.sqrt_c
+    theta = idx.plan.theta
+    w = csr.normalized_pull_weights(g, sc).astype(np.float64)
+    seeds = _seed_matrix(idx, u, g)
+    L = seeds.shape[0] - 1
+    tau = (sc ** L) * theta
+    acc = seeds[L].copy()
+    for l in range(L - 1, -1, -1):
+        acc = np.where(acc > tau, acc, 0.0)
+        nxt = np.zeros(n, dtype=np.float64)
+        np.add.at(nxt, g.edge_dst, acc[g.edge_src] * w)
+        acc = nxt + seeds[l]
+    return acc
+
+
+# ----------------------------------------------------------------------
+# batched device path: (B,) query nodes -> (B, n) scores
+# ----------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("n", "l_max"))
+def batched_single_source(keys, vals, d, edge_src, edge_dst, w,
+                          us, theta, n: int, l_max: int):
+    """Horner push for a batch of sources entirely on device.
+
+    keys/vals: packed HP table (N, K); us: (B,) int32.
+    Returns (B, n) float32.
+    """
+    B = us.shape[0]
+    ku = keys[us]                       # (B, K)
+    xu = vals[us]
+    ls = jnp.where(ku == INT32_PAD_KEY, -1, ku // n)
+    ks = jnp.clip(ku % n, 0, n - 1)
+    contrib = xu * d[ks]                # (B, K)
+    sc = w  # alias note: w already includes sqrt(c)
+    tau = theta * (0.7746 ** l_max)     # refined below by caller threshold
+
+    def seed(l):
+        sel = jnp.where(ls == l, contrib, 0.0)          # (B, K)
+        z = jnp.zeros((B, n), jnp.float32)
+        return z.at[jnp.arange(B)[:, None], ks].add(sel)
+
+    def push(x):
+        xp = jnp.where(x > tau, x, 0.0)                 # (B, n)
+        msgs = xp[:, edge_src] * w[None, :]             # (B, m)
+        return jax.vmap(
+            lambda mm: jax.ops.segment_sum(mm, edge_dst, num_segments=n)
+        )(msgs)
+
+    acc = seed(l_max)
+    for l in range(l_max - 1, -1, -1):  # unrolled; l_max is static
+        acc = push(acc) + seed(l)
+    return acc
+
+
+def single_source_device(idx, g: csr.Graph, us: np.ndarray) -> np.ndarray:
+    keys = jnp.asarray(idx.hp.keys)
+    vals = jnp.asarray(idx.hp.vals)
+    d = jnp.asarray(idx.d.astype(np.float32))
+    w = jnp.asarray(csr.normalized_pull_weights(g, idx.plan.sqrt_c))
+    out = batched_single_source(
+        keys, vals, d, jnp.asarray(g.edge_src), jnp.asarray(g.edge_dst),
+        w, jnp.asarray(us, jnp.int32), jnp.float32(idx.plan.theta),
+        idx.n, idx.plan.l_max)
+    return np.asarray(out)
+
+
+def single_source_naive(idx, g: csr.Graph, u: int) -> np.ndarray:
+    """n invocations of Alg 3 (the paper's strawman; Figure 2)."""
+    return np.array([idx.query_pair_host(u, v, g) for v in range(idx.n)])
+
+
+# ----------------------------------------------------------------------
+# pod-scale path: shard_map Horner push with dst-partitioned edges
+# ----------------------------------------------------------------------
+def batched_single_source_sharded(keys, vals, d, blk_src, blk_dstl,
+                                  blk_w, us, theta: float, n: int,
+                                  l_max: int, mesh,
+                                  bf16_frontier: bool = False):
+    """Pod-scale Alg 6 (Horner form): queries sharded over the data
+    axes, nodes over "model"; per push the frontier is all-gathered over
+    "model" only (the single collective) and the segment-sum lands on
+    local node rows via dst-partitioned edge blocks -- the same layout
+    and argument as models/gnn_sharded.py (GSPMD's scatter handling
+    otherwise all-reduces the full (B, n) frontier per push;
+    EXPERIMENTS.md section Perf, sling-serve iteration).
+
+    keys/vals: (B?, no -- full (N, W)) packed rows gathered for us on
+    the fly; blk_*: (NS_m, E_max) edges grouped by dst model-shard.
+    Returns (B, n) scores sharded (data, model).
+    """
+    from jax.sharding import PartitionSpec as P
+    data_axes = tuple(a for a in ("pod", "data")
+                      if a in mesh.shape and mesh.shape[a] > 1)
+    ns_m = mesh.shape["model"]
+    n_l = n // ns_m
+    manual = set(data_axes) | {"model"}
+
+    def local(ku, xu, d_full, bs, bd, bw):
+        # ku/xu: (B_l, W) packed H rows of this shard's queries
+        B_l, W = ku.shape
+        midx = jax.lax.axis_index("model")
+        ls = jnp.where(ku == INT32_PAD_KEY, -1, ku // n)
+        ks = jnp.clip(ku % n, 0, n - 1)
+        contrib = xu * d_full[ks]
+        k_loc = ks - midx * n_l
+        in_shard = (k_loc >= 0) & (k_loc < n_l)
+        k_loc = jnp.clip(k_loc, 0, n_l - 1)
+        rows = jnp.arange(B_l, dtype=jnp.int32)[:, None]
+        src, dstl, w_e = bs[0], bd[0], bw[0]
+        tau = theta * (0.7746 ** l_max)
+
+        def seed(l):
+            sel = jnp.where((ls == l) & in_shard, contrib, 0.0)
+            z = jnp.zeros((B_l, n_l), jnp.float32)
+            return z.at[rows, k_loc].add(sel)
+
+        def push(x):
+            xp = jnp.where(x > tau, x, 0.0)
+            if bf16_frontier:
+                # halves the dominant AG payload; bf16 rel-err ~2^-8
+                # per push accumulates to <~1% of each score -- callers
+                # must fold it into the eps budget (perf-mode only).
+                # optimization_barrier stops XLA's simplifier from
+                # commuting the converts back across the all-gather.
+                xp = jax.lax.optimization_barrier(
+                    xp.astype(jnp.bfloat16))
+            x_full = jax.lax.all_gather(xp, "model", axis=1, tiled=True)
+            if bf16_frontier:
+                x_full = jax.lax.optimization_barrier(x_full)
+            x_full = x_full.astype(jnp.float32)
+            msgs = x_full[:, src] * w_e[None, :]          # (B_l, E_max)
+            return jax.vmap(lambda mm: jax.ops.segment_sum(
+                mm, dstl, num_segments=n_l))(msgs)
+
+        acc = seed(l_max)
+        for l in range(l_max - 1, -1, -1):
+            acc = push(acc) + seed(l)
+        return acc
+
+    sm = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(data_axes, None), P(data_axes, None), P(),
+                  P(("model",), None), P(("model",), None),
+                  P(("model",), None)),
+        out_specs=P(data_axes, ("model",)),
+        axis_names=manual, check_vma=False)
+    ku = keys[us]
+    xu = vals[us]
+    return sm(ku, xu, d, blk_src, blk_dstl, blk_w)

@@ -1,0 +1,99 @@
+"""Error-budget planner (Theorem 1) and accounting helpers.
+
+Theorem 1: with |d~_k - d_k| <= eps_d for all k (w.p. >= 1 - delta via
+delta_d <= delta/n per node) and the Alg-2 HP error bound of Lemma 7,
+every SimRank estimate satisfies |s~ - s| <= eps provided
+
+    eps_d / (1 - c)  +  2*sqrt(c) * theta / ((1 - sqrt(c)) * (1 - c))  <=  eps.
+
+``plan`` splits eps between the two terms (paper Section 7.1 uses
+eps_d = 0.005, theta = 0.000725 for eps = 0.025 at c = 0.6; we keep the
+same proportions by default) and additionally accounts for the JAX walk
+cap: truncating sqrt(c)-walks at t_max perturbs each meeting probability
+by at most (sqrt c)^t_max, which inflates the effective eps_d by the
+same amount (meeting probabilities enter d_k scaled by c < 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class SlingPlan:
+    c: float
+    eps: float
+    delta: float
+    eps_d: float          # additive error allowed in each d_k
+    theta: float          # HP prune threshold (Alg 2)
+    delta_d: float        # per-node failure probability
+    t_max: int            # walk step cap (JAX adaptation)
+    l_max: int            # max HP step: (sqrt c)^l <= theta
+    n_r1: int             # Alg 4 phase-1 pair count
+    walk_tail: float      # (sqrt c)^t_max
+
+    @property
+    def sqrt_c(self) -> float:
+        return math.sqrt(self.c)
+
+    def error_bound(self) -> float:
+        """LHS of Theorem 1's condition (must be <= eps)."""
+        sc = self.sqrt_c
+        return (self.eps_d / (1 - self.c)
+                + 2 * sc * self.theta / ((1 - sc) * (1 - self.c)))
+
+    def hp_entry_bound(self) -> int:
+        """Lemma 7: |H(v)| <= sum_l (sqrt c)^l / theta = O(1/theta)."""
+        return int(math.ceil(1.0 / ((1 - self.sqrt_c) * self.theta)))
+
+
+def plan(eps: float = 0.025, delta: float | None = None, c: float = 0.6,
+         n: int = 1 << 20, eps_d_frac: float = 0.5,
+         walk_tail: float = 1e-4) -> SlingPlan:
+    """Choose (eps_d, theta, delta_d, t_max, l_max, n_r1) for a target eps.
+
+    eps_d_frac controls the split of the Theorem-1 budget between the
+    d_k term and the HP term. Defaults reproduce the paper's setting at
+    eps = 0.025 (eps_d = 0.005 -> frac = eps_d/((1-c)*eps) = 0.5).
+    """
+    if not (0 < eps < 1):
+        raise ValueError("eps must be in (0,1)")
+    sc = math.sqrt(c)
+    delta = delta if delta is not None else 1.0 / n
+    # budget split: eps = eps_d/(1-c) + 2 sc theta /((1-sc)(1-c))
+    eps_d_raw = eps_d_frac * eps * (1 - c)
+    theta = (1 - eps_d_frac) * eps * (1 - c) * (1 - sc) / (2 * sc)
+    # walk cap and its bias: meeting probs are truncated by <= tail;
+    # d_k = 1 - c/deg - c*mu so the d_k bias is <= c*tail. Reserve it.
+    t_max = max(1, int(math.ceil(math.log(walk_tail) / math.log(sc))))
+    tail = sc ** t_max
+    eps_d = eps_d_raw - c * tail
+    if eps_d <= 0:
+        raise ValueError("walk tail consumed the whole eps_d budget; "
+                         "raise eps or lower walk_tail")
+    delta_d = delta / max(n, 1)
+    l_max = max(1, int(math.ceil(math.log(theta) / math.log(sc))))
+    eps_star = eps_d / c
+    n_r1 = int(math.ceil(14.0 / (3.0 * eps_star) * math.log(4.0 / delta_d)))
+    p = SlingPlan(c=c, eps=eps, delta=delta, eps_d=eps_d, theta=theta,
+                  delta_d=delta_d, t_max=t_max, l_max=l_max, n_r1=n_r1,
+                  walk_tail=tail)
+    # sanity: Theorem-1 condition holds with the *raw* eps_d budget
+    assert (eps_d_raw / (1 - c)
+            + 2 * sc * theta / ((1 - sc) * (1 - c))) <= eps * (1 + 1e-9)
+    return p
+
+
+def phase2_pairs(mu_hat: float, eps_d: float, delta_d: float,
+                 c: float) -> int:
+    """Alg 4 lines 12-13: total pair budget n_r* for phase 2."""
+    eps_star = eps_d / c
+    mu_star = mu_hat + math.sqrt(mu_hat * eps_star)
+    return int(math.ceil((2 * mu_star + (2.0 / 3.0) * eps_star)
+                         / (eps_star ** 2) * math.log(4.0 / delta_d)))
+
+
+def alg1_pairs(eps_d: float, delta_d: float, c: float) -> int:
+    """Alg 1 line 1: fixed pair budget (the unimproved estimator)."""
+    return int(math.ceil((2 * c * c + c * eps_d) / (eps_d ** 2)
+                         * math.log(2.0 / delta_d)))

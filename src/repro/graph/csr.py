@@ -1,0 +1,140 @@
+"""Compressed sparse graph representation used across the framework.
+
+Directed, unweighted graph G with n nodes and m edges. SimRank only ever
+consumes *in*-neighbor structure for walks/HPs and *out*-neighbor
+structure for local (forward) pushes, so we store both orientations:
+
+  - in-CSR : ``in_ptr``  (n+1,), ``in_idx``  (m,)  -- I(v) = in_idx[in_ptr[v]:in_ptr[v+1]]
+  - out-CSR: ``out_ptr`` (n+1,), ``out_idx`` (m,)  -- O(v) = out_idx[out_ptr[v]:out_ptr[v+1]]
+  - edge list in "pull" orientation: for each directed edge (u -> v),
+    ``edge_dst = v`` and ``edge_src = u``; grouped by dst so that
+    segment reductions over ``edge_dst`` are contiguous.
+
+All arrays are NumPy on host; device code receives them as jnp arrays.
+Nodes with no in-neighbors are *absorbing* for reverse walks (a \\sqrt{c}
+walk at such a node stops; equivalently I(v) = {} means every walk
+terminates there). The paper implicitly assumes I(v) nonempty for the
+d_k formula -- we define d_k = 1 for in-degree-0 nodes (two walks from v
+can never meet after step 0 because both stop immediately).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    n: int
+    m: int
+    in_ptr: np.ndarray   # (n+1,) int32
+    in_idx: np.ndarray   # (m,)  int32, concatenated in-neighbor lists
+    out_ptr: np.ndarray  # (n+1,) int32
+    out_idx: np.ndarray  # (m,)  int32
+    # pull-oriented edge list grouped by destination (== flattened in-CSR)
+    edge_dst: np.ndarray  # (m,) int32  edge (src -> dst): dst
+    edge_src: np.ndarray  # (m,) int32  edge (src -> dst): src
+
+    @property
+    def in_deg(self) -> np.ndarray:
+        return np.diff(self.in_ptr)
+
+    @property
+    def out_deg(self) -> np.ndarray:
+        return np.diff(self.out_ptr)
+
+    def in_neighbors(self, v: int) -> np.ndarray:
+        return self.in_idx[self.in_ptr[v]:self.in_ptr[v + 1]]
+
+    def out_neighbors(self, v: int) -> np.ndarray:
+        return self.out_idx[self.out_ptr[v]:self.out_ptr[v + 1]]
+
+    def validate(self) -> None:
+        assert self.in_ptr.shape == (self.n + 1,)
+        assert self.out_ptr.shape == (self.n + 1,)
+        assert self.in_idx.shape == (self.m,)
+        assert self.out_idx.shape == (self.m,)
+        assert self.in_ptr[0] == 0 and self.in_ptr[-1] == self.m
+        assert self.out_ptr[0] == 0 and self.out_ptr[-1] == self.m
+        if self.m:
+            assert self.in_idx.min() >= 0 and self.in_idx.max() < self.n
+            assert self.out_idx.min() >= 0 and self.out_idx.max() < self.n
+
+
+def from_edges(n: int, src: np.ndarray, dst: np.ndarray,
+               dedup: bool = True) -> Graph:
+    """Build a :class:`Graph` from a directed edge list (src -> dst)."""
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    if dedup and len(src):
+        key = src * n + dst
+        key, keep = np.unique(key, return_index=True)
+        src, dst = src[keep], dst[keep]
+    m = len(src)
+
+    # in-CSR: group by dst
+    order_in = np.argsort(dst, kind="stable")
+    dst_in = dst[order_in]
+    src_in = src[order_in]
+    in_ptr = np.zeros(n + 1, dtype=np.int64)
+    np.add.at(in_ptr, dst + 1, 1)
+    in_ptr = np.cumsum(in_ptr)
+
+    # out-CSR: group by src
+    order_out = np.argsort(src, kind="stable")
+    out_ptr = np.zeros(n + 1, dtype=np.int64)
+    np.add.at(out_ptr, src + 1, 1)
+    out_ptr = np.cumsum(out_ptr)
+
+    g = Graph(
+        n=n, m=m,
+        in_ptr=in_ptr.astype(np.int64),
+        in_idx=src_in.astype(np.int32),
+        out_ptr=out_ptr.astype(np.int64),
+        out_idx=dst[order_out].astype(np.int32),
+        edge_dst=dst_in.astype(np.int32),
+        edge_src=src_in.astype(np.int32),
+    )
+    g.validate()
+    return g
+
+
+def undirected(n: int, a: np.ndarray, b: np.ndarray) -> Graph:
+    """Symmetrize: every undirected {a,b} becomes both (a->b) and (b->a)."""
+    src = np.concatenate([a, b])
+    dst = np.concatenate([b, a])
+    return from_edges(n, src, dst)
+
+
+def to_ell(g: Graph, max_deg: Optional[int] = None,
+           pad_value: int = -1) -> tuple[np.ndarray, np.ndarray, int]:
+    """Pack the in-neighbor lists into ELL format (n, max_deg).
+
+    Returns (ell_idx int32 (n, D), ell_mask bool (n, D), D). Rows with
+    in-degree > D are *not truncated* -- D defaults to the true max.
+    ELL is the TPU-friendly layout for the Pallas SpMV kernel: uniform
+    row width -> static BlockSpec tiling.
+    """
+    deg = g.in_deg
+    D = int(deg.max()) if max_deg is None else int(max_deg)
+    D = max(D, 1)
+    ell = np.full((g.n, D), pad_value, dtype=np.int32)
+    mask = np.zeros((g.n, D), dtype=bool)
+    for v in range(g.n):
+        nb = g.in_neighbors(v)
+        k = min(len(nb), D)
+        ell[v, :k] = nb[:k]
+        mask[v, :k] = True
+    return ell, mask, D
+
+
+def normalized_pull_weights(g: Graph, sqrt_c: float) -> np.ndarray:
+    """Per-edge weight sqrt(c)/|I(dst)| for the pull operator Â.
+
+    Â x |_v = sqrt(c)/|I(v)| * sum_{u in I(v)} x_u; applying Â to the
+    one-hot of k and iterating gives the HP vectors h^(l)(., k).
+    """
+    deg = np.maximum(g.in_deg, 1).astype(np.float64)
+    return (sqrt_c / deg[g.edge_dst]).astype(np.float32)

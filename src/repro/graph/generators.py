@@ -1,0 +1,103 @@
+"""Synthetic graph generators.
+
+The paper evaluates on 12 public SNAP/LAW graphs; this container is
+offline, so we generate synthetic graphs with matching regimes:
+Erdos-Renyi (uniform sparse), Barabasi-Albert (power-law in-degree, the
+shape of web/social graphs in Table 3), 2D grid/mesh (GraphCast-like),
+bipartite (recsys click graphs), and the 4-cycle adversarial graph from
+Appendix A that breaks the linearization method's Gauss-Seidel solve.
+All generators are deterministic in ``seed``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import csr
+
+
+def erdos_renyi(n: int, m: int, seed: int = 0, directed: bool = True) -> csr.Graph:
+    rng = np.random.default_rng(seed)
+    # sample with light oversampling, dedup down to ~m
+    src = rng.integers(0, n, size=int(m * 1.2), dtype=np.int64)
+    dst = rng.integers(0, n, size=int(m * 1.2), dtype=np.int64)
+    keep = src != dst
+    src, dst = src[keep][:m], dst[keep][:m]
+    if directed:
+        return csr.from_edges(n, src, dst)
+    return csr.undirected(n, src, dst)
+
+
+def barabasi_albert(n: int, k: int = 4, seed: int = 0,
+                    directed: bool = True) -> csr.Graph:
+    """Preferential attachment; new node draws k targets ~ degree."""
+    rng = np.random.default_rng(seed)
+    targets = list(range(min(k, n)))
+    src_l, dst_l = [], []
+    repeated = list(targets)
+    for v in range(len(targets), n):
+        # sample k distinct targets proportional to degree (via repeated list)
+        choice = rng.choice(len(repeated), size=min(k, len(repeated)), replace=False)
+        picks = {repeated[c] for c in choice}
+        for t in picks:
+            src_l.append(v)
+            dst_l.append(t)
+            repeated.append(t)
+            repeated.append(v)
+    src = np.array(src_l, dtype=np.int64)
+    dst = np.array(dst_l, dtype=np.int64)
+    if directed:
+        # half the edges point v->t, half t->v, giving both hubs-in and hubs-out
+        flip = rng.random(len(src)) < 0.5
+        s = np.where(flip, dst, src)
+        d = np.where(flip, src, dst)
+        return csr.from_edges(n, s, d)
+    return csr.undirected(n, src, dst)
+
+
+def grid2d(rows: int, cols: int) -> csr.Graph:
+    """4-neighbor undirected grid (mesh-GNN-like regular graph)."""
+    n = rows * cols
+    a_l, b_l = [], []
+    for r in range(rows):
+        for c in range(cols):
+            v = r * cols + c
+            if c + 1 < cols:
+                a_l.append(v); b_l.append(v + 1)
+            if r + 1 < rows:
+                a_l.append(v); b_l.append(v + cols)
+    return csr.undirected(n, np.array(a_l), np.array(b_l))
+
+
+def bipartite(n_users: int, n_items: int, m: int, seed: int = 0) -> csr.Graph:
+    """User->item click graph, symmetrized (SimRank needs in-edges both ways)."""
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, n_users, size=m, dtype=np.int64)
+    i = rng.zipf(1.5, size=m) % n_items  # power-law item popularity
+    return csr.undirected(n_users + n_items, u, n_users + i)
+
+
+def cycle(n: int) -> csr.Graph:
+    """Directed n-cycle: the Appendix-A adversarial case for Linearize
+    (its Gauss-Seidel system matrix is not diagonally dominant at c=0.6)."""
+    v = np.arange(n, dtype=np.int64)
+    return csr.from_edges(n, v, (v + 1) % n)
+
+
+def star(n: int) -> csr.Graph:
+    """Hub node 0 with n-1 spokes, undirected. Extreme degree skew."""
+    spokes = np.arange(1, n, dtype=np.int64)
+    return csr.undirected(n, np.zeros(n - 1, dtype=np.int64), spokes)
+
+
+def paper_scale(name: str, seed: int = 0) -> csr.Graph:
+    """Synthetic stand-ins matching Table 3's (n, m) regimes."""
+    table = {
+        "GrQc":      (5_242, 14_496, False),
+        "AS":        (6_474, 13_895, False),
+        "Wiki-Vote": (7_115, 103_689, True),
+        "HepTh":     (9_877, 25_998, False),
+        "Enron":     (36_692, 183_831, False),
+    }
+    n, m, directed = table[name]
+    return barabasi_albert(n, max(2, m // (n * (1 if directed else 2))),
+                           seed=seed, directed=directed)

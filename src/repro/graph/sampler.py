@@ -1,0 +1,83 @@
+"""Neighbor sampler for minibatch GNN training (GraphSAGE-style).
+
+Real fanout sampling over the in-CSR: for each seed node draw up to
+fanout[0] in-neighbors, then fanout[1] of theirs, etc. Emits a padded
+fixed-shape subgraph (the minibatch_lg shape cell's contract): node
+table, edge (src, dst) pairs in *local* subgraph ids, masks.
+
+Optional ``weights="simrank"``: neighbors are sampled proportionally
+to their SLING single-source SimRank score from the seed -- the paper's
+technique as a sampling prior (DESIGN.md section 5).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.graph import csr
+
+
+@dataclasses.dataclass
+class SampledSubgraph:
+    node_ids: np.ndarray    # (N_pad,) global ids, -1 padding
+    edge_src: np.ndarray    # (M_pad,) local ids
+    edge_dst: np.ndarray    # (M_pad,)
+    edge_mask: np.ndarray   # (M_pad,) float32
+    node_mask: np.ndarray   # (N_pad,)
+    seed_index: np.ndarray  # (B,) local ids of the seed nodes
+
+
+def sample_subgraph(g: csr.Graph, seeds: np.ndarray, fanout, rng,
+                    n_pad: int, m_pad: int,
+                    sim_index=None) -> SampledSubgraph:
+    local: dict[int, int] = {}
+    node_ids: list[int] = []
+
+    def intern(v: int) -> int:
+        if v not in local:
+            local[v] = len(node_ids)
+            node_ids.append(v)
+        return local[v]
+
+    for s in seeds:
+        intern(int(s))
+    frontier = [int(s) for s in seeds]
+    es, ed = [], []
+    for f in fanout:
+        nxt = []
+        for v in frontier:
+            nbrs = g.in_neighbors(v)
+            if len(nbrs) == 0:
+                continue
+            k = min(f, len(nbrs))
+            if sim_index is not None:
+                from repro.core.single_source import single_source_horner
+                w = single_source_horner(sim_index, g, v)[nbrs] + 1e-9
+                p = w / w.sum()
+                picks = rng.choice(nbrs, size=k, replace=False, p=p)
+            else:
+                picks = rng.choice(nbrs, size=k, replace=False)
+            for u in picks:
+                ui = intern(int(u))
+                es.append(ui)
+                ed.append(local[v])
+                nxt.append(int(u))
+        frontier = nxt
+
+    N, M = len(node_ids), len(es)
+    assert N <= n_pad and M <= m_pad, (N, n_pad, M, m_pad)
+    out = SampledSubgraph(
+        node_ids=np.full(n_pad, -1, np.int32),
+        edge_src=np.zeros(m_pad, np.int32),
+        edge_dst=np.zeros(m_pad, np.int32),
+        edge_mask=np.zeros(m_pad, np.float32),
+        node_mask=np.zeros(n_pad, np.float32),
+        seed_index=np.array([local[int(s)] for s in seeds], np.int32),
+    )
+    out.node_ids[:N] = node_ids
+    out.edge_src[:M] = es
+    out.edge_dst[:M] = ed
+    out.edge_mask[:M] = 1.0
+    out.node_mask[:N] = 1.0
+    return out

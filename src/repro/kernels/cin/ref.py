@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for one CIN layer (xDeepFM, arXiv:1803.05170).
+
+x0 (B, m, D), xk (B, h, D), W (h', h, m):
+    out[b, i, d] = sum_{a, j} W[i, a, j] * xk[b, a, d] * x0[b, j, d]
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cin_layer_ref(x0, xk, W):
+    outer = jnp.einsum("bhd,bmd->bhmd", xk, x0)
+    return jnp.einsum("bhmd,ihm->bid", outer, W)

@@ -1,0 +1,45 @@
+"""jit'd wrapper: batched single-pair queries through the join kernel."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.kernels.hp_join import ref as ref_mod
+from repro.kernels.hp_join.hp_join import hp_join
+
+
+def fold_sqrt_d(index):
+    """Pre-multiply packed HP values by sqrt(d_k) (key % n -> k).
+
+    Returns (keys, folded_vals) ready for the kernel; see ref.py."""
+    n = index.n
+    keys = index.hp.keys
+    vals = index.hp.vals.astype(np.float64)
+    ks = (keys.astype(np.int64) % n).clip(0, n - 1)
+    sd = np.sqrt(np.maximum(index.d.astype(np.float64), 0.0))
+    folded = (vals * sd[ks]).astype(np.float32)
+    folded[keys == np.int32(2**31 - 1)] = 0.0
+    return keys, folded
+
+
+def query_pairs_kernel(index, us, vs, bq: int = 8,
+                       interpret: bool = True) -> np.ndarray:
+    keys, folded = fold_sqrt_d(index)
+    B = len(us)
+    pad = (-B) % bq
+    us_p = np.concatenate([us, np.zeros(pad, us.dtype)])
+    vs_p = np.concatenate([vs, np.zeros(pad, vs.dtype)])
+    ku = jnp.asarray(keys[us_p])
+    vu = jnp.asarray(folded[us_p])
+    kv = jnp.asarray(keys[vs_p])
+    vv = jnp.asarray(folded[vs_p])
+    out = hp_join(ku, vu, kv, vv, bq=bq, interpret=interpret)
+    return np.asarray(out)[:B]
+
+
+def query_pairs_reference(index, us, vs) -> np.ndarray:
+    keys, folded = fold_sqrt_d(index)
+    out = ref_mod.join_ref(jnp.asarray(keys[us]), jnp.asarray(folded[us]),
+                           jnp.asarray(keys[vs]), jnp.asarray(folded[vs]))
+    return np.asarray(out)

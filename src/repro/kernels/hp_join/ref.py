@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the batched single-pair query join (Alg 3).
+
+Given packed H rows for query pairs -- keys sorted ascending with
+INT32_PAD_KEY padding and values PRE-MULTIPLIED by sqrt(d_k)
+(the sqrt-d folding trick: h_u * d_k * h_v = (h_u sqrt(d_k)) *
+(h_v sqrt(d_k)), valid since d_k >= 1-c > 0; it removes the random
+d-gather from the kernel's inner loop) -- computes
+
+    s~(u, v) = sum over matching keys of vu_i * vv_j.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+PAD = jnp.int32(2**31 - 1)
+
+
+def join_ref(ku, vu, kv, vv):
+    """ku/vu/kv/vv: (B, K). Returns (B,) f32."""
+    import jax
+    K = ku.shape[1]
+    idx = jax.vmap(jnp.searchsorted)(kv, ku)
+    idx_c = jnp.clip(idx, 0, K - 1)
+    match = (jnp.take_along_axis(kv, idx_c, axis=1) == ku) & (ku != PAD)
+    gathered = jnp.take_along_axis(vv, idx_c, axis=1)
+    return jnp.where(match, vu * gathered, 0.0).sum(axis=1)

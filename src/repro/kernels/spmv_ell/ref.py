@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the block-CSR segment-sum SpMM kernel.
+
+Operation: out[v, :] = sum_{e : dst_e = v} w_e * x[src_e, :]
+-- the pull operator A_hat behind both SLING's HP propagation
+(Equation 16 / Algorithm 2) and GNN message passing.
+
+Format ("block-aligned CSR", built by ``ops.block_align``): edges are
+grouped by destination-node block of size BN and padded to a multiple
+of the edge-block size BE, so that every (node-block, edge-chunk) grid
+cell touches exactly one output block -- the property that lets the
+Pallas kernel accumulate with a one-hot matmul on the MXU instead of a
+data-dependent scatter.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmm_ref(x, edge_src, edge_dst, w, n: int):
+    """Plain segment-sum reference (any edge order)."""
+    msgs = x[edge_src] * w[:, None]
+    return jax.ops.segment_sum(msgs, edge_dst, num_segments=n)
+
+
+def spmm_block_ref(x, blk_src, blk_dst_local, blk_w, n: int, bn: int):
+    """Reference on the block-aligned layout.
+
+    blk_src (NB, EB) int32 global src ids; blk_dst_local (NB, EB) int32
+    in [0, bn) destination offset within the block (-1 = padding);
+    blk_w (NB, EB) f32. Output (NB*bn, F) trimmed to n rows by caller.
+    """
+    NB, EB = blk_src.shape
+    F = x.shape[1]
+    valid = blk_dst_local >= 0
+    msgs = x[jnp.clip(blk_src, 0, x.shape[0] - 1)] * blk_w[..., None]
+    msgs = jnp.where(valid[..., None], msgs, 0.0)
+    onehot = jax.nn.one_hot(jnp.clip(blk_dst_local, 0, bn - 1), bn,
+                            dtype=msgs.dtype)            # (NB, EB, bn)
+    out = jnp.einsum("neb,nef->nbf", onehot, msgs)       # (NB, bn, F)
+    return out.reshape(NB * bn, F)

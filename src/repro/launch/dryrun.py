@@ -1,0 +1,125 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input shape) cell, lower + compile the cell's
+step on the production mesh -- 16x16 single-pod and 2x16x16 multi-pod --
+and record memory_analysis / cost_analysis / collective traffic for the
+roofline (EXPERIMENTS.md sections Dry-run and Roofline).
+
+The XLA_FLAGS line above MUST precede any jax import (jax locks the
+device count at first init); this module is the only place the 512
+placeholder devices exist -- tests and benches see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gcn-cora --shape full_graph_sm
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import base as cfg_base  # noqa: E402
+from repro.launch import hlo_analysis, specs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
+             rules: dict | None = None, verbose: bool = True) -> dict:
+    from repro.launch import sharding as sh
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    t0 = time.time()
+    # tracing must happen inside use_mesh_rules so the models' logical()
+    # activation annotations resolve against this mesh; the cell may
+    # refine the rules (e.g. decode's split-KV overrides)
+    cell = specs.make_cell(arch_id, shape_name, mesh, rules)
+    with mesh, sh.use_mesh_rules(mesh, cell.rules):
+        lowered = cell.jitted().lower(*cell.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    ma = compiled.memory_analysis()
+    roof = hlo_analysis.analyze_compiled(compiled, cell.model_flops, n_dev)
+    rec = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "ok": True,
+        "t_lower_s": round(t_lower, 2), "t_compile_s": round(t_compile, 2),
+        "model_flops": cell.model_flops,
+        "bytes_per_device": {
+            "argument": int(ma.argument_size_in_bytes),
+            "output": int(ma.output_size_in_bytes),
+            "temp": int(ma.temp_size_in_bytes),
+            "alias": int(ma.alias_size_in_bytes),
+            "peak_est": int(ma.argument_size_in_bytes
+                            + ma.temp_size_in_bytes
+                            + ma.output_size_in_bytes
+                            - ma.alias_size_in_bytes),
+        },
+        "roofline": roof.row(),
+        "collectives": hlo_analysis.collective_stats(
+            compiled.as_text()).summary(),
+    }
+    if verbose:
+        bpd = rec["bytes_per_device"]["peak_est"] / 2**30
+        r = rec["roofline"]
+        print(f"[{rec['mesh']}] {arch_id} x {shape_name}: "
+              f"compile {t_compile:.1f}s peak~{bpd:.2f}GiB/dev "
+              f"t=(c {r['t_compute_s']:.2e}, m {r['t_memory_s']:.2e}, "
+              f"x {r['t_collective_s']:.2e}) -> {r['bottleneck']} "
+              f"mfu~{r['roofline_mfu']:.3f}")
+    return rec
+
+
+def all_cells() -> list[tuple[str, str]]:
+    out = []
+    for arch_id, spec in sorted(cfg_base.all_archs().items()):
+        if spec.family == "sling":
+            continue  # extra cell, run explicitly
+        for shape in spec.shapes:
+            out.append((arch_id, shape))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = all_cells() if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for arch_id, shape in cells:
+        for mp in meshes:
+            try:
+                results.append(run_cell(arch_id, shape, multi_pod=mp))
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                results.append({"arch": arch_id, "shape": shape,
+                                "mesh": "2x16x16" if mp else "16x16",
+                                "ok": False, "error": str(e)[:500]})
+    n_ok = sum(r["ok"] for r in results)
+    print(f"\n{n_ok}/{len(results)} cells compiled OK")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

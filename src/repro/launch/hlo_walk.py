@@ -1,0 +1,283 @@
+"""Trip-count-aware structural analysis of compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE --
+a scan over 48 layers reports 1/48th of the real FLOPs (verified
+empirically in this repo; see EXPERIMENTS.md section Dry-run). Since all
+production models here scan over layers / attention chunks / loss
+chunks, we re-derive the three roofline terms by walking the HLO text:
+
+  1. parse every computation block and each op's result shape;
+  2. build the call graph: ENTRY -> while bodies (x trip count, parsed
+     from the loop condition's compare-against-constant), fusions,
+     conditionals (x1), calls;
+  3. per computation, accumulate
+       - dot FLOPs: 2 * prod(result dims) * prod(contracting dims),
+       - HBM bytes: operand + result bytes of top-level (fusion-sized)
+         ops, skipping shape-only ops (tuple/gte/bitcast/parameter),
+       - collective bytes with the standard ring models;
+  4. total = sum over computations of cost * trip multiplier.
+
+This is a structural estimator (fusion boundaries on the CPU backend
+differ from TPU), but unlike cost_analysis it is *consistent across the
+program structure*, which is what roofline comparisons need.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8,
+    "u64": 8, "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+)(?:\.v\d+)? \(")
+_ASSIGN = re.compile(r"^\s*(?:ROOT )?%([\w\.\-]+) = (.+)$")
+_OP_NAME = re.compile(r"([a-z][a-z0-9\-]*)\(")
+_TRIP_CFG = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_CALLEE = re.compile(r"(?:body|condition|to_apply|calls|branch_computations)="
+                     r"\{?%?([\w\.\-]+)")
+_FUSION_CALLEE = re.compile(r"calls=%?([\w\.\-]+)")
+_WHILE_PAIR = re.compile(r"condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS = re.compile(r"\(([^)]*)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(shape_str):
+        nb = _DTYPE_BYTES.get(dt, 4)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += nb * n
+    return total
+
+
+def _shape_elems(shape_str: str) -> int:
+    n_total = 0
+    for _, dims in _SHAPE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        n_total += n
+    return n_total
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_op: dict = dataclasses.field(default_factory=dict)
+    callees: list = dataclasses.field(default_factory=list)  # (name, kind)
+
+
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "copy", "copy-start", "copy-done", "after-all",
+             "partition-id", "replica-id", "iota", "broadcast", "reshape"}
+
+_COLL_OPS = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute", "all-gather-start", "all-reduce-start",
+             "collective-permute-start"}
+
+
+def parse_hlo(text: str):
+    """Returns (comps: name -> CompCost, entry_name, while_pairs,
+    shapes: name -> per-computation {op: shape_str})."""
+    comps: dict[str, CompCost] = {}
+    entry = None
+    cur = None
+    cur_shapes: dict[str, str] = {}
+    shapes_by_comp: dict[str, dict] = {}
+    while_pairs: list[tuple[str, str, str]] = []  # (comp, cond, body)
+    const_ints: dict[str, dict[str, int]] = defaultdict(dict)
+
+    trips_cfg: dict[str, int] = {}
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line.startswith((" ", "\t")):
+            hdr = _COMP_HDR.match(line)
+            if hdr and line.endswith("{") and " -> " in line:
+                cur = hdr.group(1)
+                comps[cur] = CompCost()
+                cur_shapes = {}
+                shapes_by_comp[cur] = cur_shapes
+                if raw.startswith("ENTRY"):
+                    entry = cur
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        ma = _ASSIGN.match(line)
+        if not ma:
+            continue
+        name, rhs = ma.group(1), ma.group(2)
+        mo = _OP_NAME.search(rhs)
+        if not mo:
+            continue
+        shape_str = rhs[:mo.start()].strip()
+        op = mo.group(1)
+        cur_shapes[name] = shape_str
+        cc = comps[cur]
+        ci = _CONST_INT.search(line)
+        if op == "constant" and ci:
+            const_ints[cur][name] = int(ci.group(1))
+
+        if op == "while":
+            wp = _WHILE_PAIR.search(line)
+            if wp:
+                while_pairs.append((cur, wp.group(1), wp.group(2)))
+                cc.callees.append((wp.group(2), "while"))
+                tc = _TRIP_CFG.search(line)
+                if tc:
+                    trips_cfg[wp.group(2)] = int(tc.group(1))
+            continue
+        if op == "fusion":
+            fc = _FUSION_CALLEE.search(line)
+            if fc:
+                cc.callees.append((fc.group(1), "fusion"))
+            # fusion op: HBM traffic = operands + result
+            cc.bytes += _shape_bytes(shape_str)
+            try:
+                inner = line[line.index("fusion(") + 7:]
+                args = inner.split(")")[0].split(",")
+                for a in args:
+                    nm = a.strip().lstrip("%")
+                    if nm in cur_shapes:
+                        cc.bytes += _shape_bytes(cur_shapes[nm])
+            except ValueError:
+                pass
+            continue
+        if op in ("call", "conditional", "async-start"):
+            for callee in _CALLEE.findall(line):
+                cc.callees.append((callee, "call"))
+            continue
+        if op == "dot":
+            res_elems = _shape_elems(shape_str)
+            contract = 1
+            cm = _CONTRACT.search(line)
+            if cm and cm.group(1):
+                # operand shapes: first operand name inside dot(...)
+                inner = line[line.index("dot(") + 4:]
+                args = inner.split(")")[0].split(",")
+                lhs_name = args[0].strip().lstrip("%")
+                lhs_shape = cur_shapes.get(lhs_name, "")
+                dims = _SHAPE.search(lhs_shape)
+                if dims and dims.group(2):
+                    lhs_dims = [int(x) for x in dims.group(2).split(",")]
+                    for ci_ in cm.group(1).split(","):
+                        idx = int(ci_)
+                        if idx < len(lhs_dims):
+                            contract *= lhs_dims[idx]
+            cc.flops += 2.0 * res_elems * contract
+            cc.bytes += _shape_bytes(shape_str)
+            try:
+                inner = line[line.index("dot(") + 4:]
+                for a in inner.split(")")[0].split(","):
+                    nm = a.strip().lstrip("%")
+                    if nm in cur_shapes:
+                        cc.bytes += _shape_bytes(cur_shapes[nm])
+            except ValueError:
+                pass
+            continue
+        if op in _COLL_OPS:
+            base = op.replace("-start", "")
+            size = _shape_bytes(shape_str)
+            if base == "all-gather" and op.endswith("-start"):
+                # start op result is a tuple (operand, result): halve
+                size = size / 2
+            k = 2
+            g = _GROUPS_RE.search(line)
+            if g:
+                k = len(g.group(1).split(","))
+            else:
+                g2 = _GROUPS_V2_RE.search(line)
+                if g2:
+                    k = int(g2.group(2))
+            frac = (k - 1) / max(k, 1)
+            if base == "all-reduce":
+                moved = 2.0 * size * frac
+            elif base == "collective-permute":
+                moved = float(size)
+            else:
+                moved = size * frac
+            cc.coll_bytes += moved
+            cc.coll_by_op[base] = cc.coll_by_op.get(base, 0.0) + moved
+            cc.bytes += size
+            continue
+        if op in _SKIP_OPS or op.endswith("-done"):
+            continue
+        # generic op: elementwise-ish; flops ~ result elems, bytes = result
+        cc.flops += _shape_elems(shape_str)
+        cc.bytes += _shape_bytes(shape_str)
+
+    # trip counts: prefer XLA's known_trip_count backend_config; fall
+    # back to the loop condition's compare-against-constant
+    trips: dict[str, int] = {}
+    for comp, cond, body in while_pairs:
+        if body in trips_cfg:
+            trips[body] = max(trips_cfg[body], 1)
+            continue
+        t = 1
+        cvals = const_ints.get(cond, {})
+        if cvals:
+            t = max(cvals.values())
+        trips[body] = max(t, 1)
+    return comps, entry, trips
+
+
+@dataclasses.dataclass
+class WalkTotals:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    coll_by_op: dict
+
+
+def analyze(text: str) -> WalkTotals:
+    comps, entry, trips = parse_hlo(text)
+    if entry is None:
+        return WalkTotals(0, 0, 0, {})
+    # fusion bodies live in registers/VMEM: their internal ops
+    # contribute FLOPs but not HBM bytes
+    fusion_bodies = {callee for cc in comps.values()
+                     for callee, kind in cc.callees if kind == "fusion"}
+    # propagate multipliers down the (acyclic) call graph; each call
+    # edge forwards the increment, so multi-caller nodes sum correctly
+    mult: dict[str, float] = defaultdict(float)
+    import sys
+    sys.setrecursionlimit(100000)
+
+    def add(name: str, m: float, depth: int = 0):
+        mult[name] += m
+        cc = comps.get(name)
+        if cc is None or depth > 64:
+            return
+        for callee, kind in cc.callees:
+            t = trips.get(callee, 1) if kind == "while" else 1
+            add(callee, m * t, depth + 1)
+
+    add(entry, 1.0)
+    tot = WalkTotals(0.0, 0.0, 0.0, defaultdict(float))
+    for name, cc in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        tot.flops += m * cc.flops
+        tot.hbm_bytes += m * (0.0 if name in fusion_bodies else cc.bytes)
+        tot.coll_bytes += m * cc.coll_bytes
+        for k, v in cc.coll_by_op.items():
+            tot.coll_by_op[k] += m * v
+    tot.coll_by_op = dict(tot.coll_by_op)
+    return tot

@@ -1,0 +1,64 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Per-cell HLO inspection: top tensors and collectives (perf tooling).
+
+  PYTHONPATH=src python -m repro.launch.inspect_cell --arch gcn-cora \
+      --shape ogb_products [--multi-pod]
+"""
+import argparse  # noqa: E402
+import re  # noqa: E402
+from collections import Counter  # noqa: E402
+
+from repro.launch import hlo_walk, specs  # noqa: E402
+from repro.launch import sharding as sh  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+_DB = {"bf16": 2, "f32": 4, "s32": 4, "u32": 4, "pred": 1, "f16": 2,
+       "s8": 1, "u8": 1, "s64": 8}
+
+
+def inspect(arch, shape, multi_pod=False, top=14):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = specs.make_cell(arch, shape, mesh)
+    with mesh, sh.use_mesh_rules(mesh, cell.rules):
+        compiled = cell.jitted().lower(*cell.args).compile()
+    txt = compiled.as_text()
+    w = hlo_walk.analyze(txt)
+    print(f"walk: flops {w.flops:.3e} hbm {w.hbm_bytes:.3e} "
+          f"coll {w.coll_bytes:.3e}")
+    print("coll by op (GB):",
+          {k: round(v / 1e9, 2) for k, v in w.coll_by_op.items()})
+    pat = re.compile(
+        r"= \(?([a-z0-9]+)\[([0-9,]+)\]\S*\)? "
+        r"(all-reduce|all-gather|all-to-all|collective-permute|fusion|"
+        r"dot|dynamic-update-slice|scatter|gather)")
+    c = Counter()
+    sz = {}
+    for line in txt.splitlines():
+        m = pat.search(line)
+        if m:
+            n = 1
+            for d in m.group(2).split(","):
+                n *= int(d)
+            key = m.group(3) + " " + m.group(1) + "[" + m.group(2) + "]"
+            c[key] += 1
+            sz[key] = n * _DB.get(m.group(1), 4)
+    print("--- top tensors (body-once counts) ---")
+    for key, cnt in sorted(c.items(), key=lambda kv: -sz[kv[0]])[:top]:
+        print(f"{sz[key] / 2**20:10.1f} MiB x{cnt:3d}  {key}")
+    return compiled, txt, w
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    inspect(args.arch, args.shape, args.multi_pod)
+
+
+if __name__ == "__main__":
+    main()

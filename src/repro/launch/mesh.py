@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+Single pod = 16x16 = 256 chips (TPU v5e pod slice), axes
+("data", "model"). Multi-pod = 2 pods = 512 chips with a leading "pod"
+axis for the cross-pod (DCN-ish) dimension: gradient reduction crosses
+it, tensor-parallel collectives never do.
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (dryrun.py must set XLA_FLAGS before any jax initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU tests (requires >= prod(shape) local devices)."""
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

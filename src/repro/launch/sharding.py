@@ -1,0 +1,225 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility-aware
+fallbacks.
+
+Models annotate activations with *logical* names via ``logical(x, ...)``
+and parameters are assigned PartitionSpecs by ``param_spec`` from a rule
+table. Rules map logical names -> mesh axis (or tuple of axes). A rule
+is applied only when the dimension size is divisible by the product of
+the mesh axis sizes -- otherwise the dimension falls through to the next
+candidate axis (or replication), which keeps every (arch x shape x mesh)
+cell lowerable without per-arch special cases.
+
+The active mesh + rules live in a context set by the launcher
+(``use_mesh_rules``). With no context, all annotations are no-ops so the
+same model code runs in single-device smoke tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX: dict[str, Any] = {"mesh": None, "rules": None}
+
+# Each logical name maps to a preference list of mesh-axis assignments;
+# the first candidate whose axes all exist in the mesh AND divide the
+# dimension is used. `None` = replicate.
+DEFAULT_RULES: dict[str, list[Any]] = {
+    # --- activations ---
+    "batch":        [("pod", "data"), ("data",)],
+    "seq":          [None],
+    "q_seq":        [("model",)],   # sequence-parallel attention (train/prefill)
+    "kv_time":      [None],         # kv positions replicated over model
+    "kv_seq":       [None],         # decode cells override to ("model",)
+    "heads":        [("model",)],
+    "kv_heads":     [("model",)],
+    "head_dim":     [("model",)],   # fallback TP when head counts don't divide
+    "embed":        [None],
+    "dff":          [("model",)],
+    "vocab":        [("model",)],
+    "experts":      [("model",)],
+    "capacity":     [("pod", "data"), ("data",)],
+    "tokens":       [("pod", "data"), ("data",)],   # flattened T*k routing dim
+    # --- graph / recsys activations ---
+    "nodes":        [("pod", "data", "model"), ("data", "model")],
+    "edges":        [("pod", "data", "model"), ("data", "model")],
+    "feat":         [None],
+    "table_rows":   [("model",)],
+    "fields":       [None],
+    "candidates":   [("pod", "data", "model"), ("data", "model")],
+    # --- weight dims (FSDP axis) ---
+    "embed_w":      [("pod", "data"), ("data",)],
+    "dff_w":        [("model",)],
+    "heads_w":      [("model",)],
+    "kv_heads_w":   [("model",)],
+    "head_dim_w":   [("model",)],
+    "vocab_w":      [("model",)],
+    "experts_w":    [("model",)],
+    "layers":       [None],
+    "hidden_w":     [None],
+    "table_rows_w": [("model",)],
+}
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh: Mesh, rules: Optional[dict] = None):
+    prev = dict(_CTX)
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    _CTX["mesh"], _CTX["rules"] = mesh, merged
+    try:
+        yield
+    finally:
+        _CTX.update(prev)
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX["mesh"]
+
+
+def data_group_count() -> int:
+    """Product of the data-parallel mesh axes (1 without a mesh).
+
+    Used by the grouped MoE dispatch so per-shard routing matches the
+    data sharding of the token stream."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return 1
+    g = 1
+    for ax in ("pod", "data"):
+        g *= mesh.shape.get(ax, 1)
+    return g
+
+
+def _resolve_axis(name: Optional[str], dim: int, mesh: Mesh,
+                  used: set, exact: bool):
+    """Pick the first viable candidate for a logical name.
+
+    ``exact=True`` requires the dim to divide evenly; ``exact=False``
+    also accepts uneven (GSPMD-padded) sharding as long as dim >= size.
+    """
+    if name is None:
+        return None
+    rules = _CTX["rules"] or DEFAULT_RULES
+    for cand in rules.get(name, [None]):
+        if cand is None:
+            return None
+        axes = (cand,) if isinstance(cand, str) else tuple(cand)
+        if not all(a in mesh.shape for a in axes):
+            continue
+        if any(a in used for a in axes):
+            continue
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if dim % size == 0 or (not exact and dim >= size):
+            return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def spec_for(shape: Sequence[int], names: Sequence[Optional[str]],
+             mesh: Optional[Mesh] = None, allow_uneven: bool = False) -> P:
+    """Two-round assignment: round 1 gives every dim its best
+    exactly-divisible candidate (so e.g. head_dim=128 wins the "model"
+    axis over heads=40 on a 16-way axis); round 2 (activations only --
+    jit inputs must divide exactly) fills remaining dims with uneven
+    GSPMD-padded sharding, e.g. 40 heads over a 16-way axis."""
+    mesh = mesh or _CTX["mesh"]
+    if mesh is None:
+        return P()
+    assert len(shape) == len(names), (shape, names)
+    used: set[str] = set()
+    parts: list = [None] * len(shape)
+    rounds = (True, False) if allow_uneven else (True,)
+    for exact in rounds:
+        for i, (dim, name) in enumerate(zip(shape, names)):
+            if parts[i] is not None:
+                continue
+            ax = _resolve_axis(name, dim, mesh, used, exact)
+            if ax is None:
+                continue
+            flat = (ax,) if isinstance(ax, str) else tuple(ax)
+            used.update(flat)
+            parts[i] = ax
+    return P(*parts)
+
+
+def logical(x, *names: Optional[str]):
+    """Annotate an activation with logical dim names (no-op w/o mesh)."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    spec = spec_for(x.shape, names, mesh, allow_uneven=True)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ----------------------------------------------------------------------
+# parameter specs: rule table keyed by path regex -> logical dim names
+# ----------------------------------------------------------------------
+PARAM_RULES: list[tuple[str, tuple[Optional[str], ...]]] = [
+    # transformer
+    (r"^embed$",           ("vocab_w", "embed_w")),
+    (r"blocks/ln\d?$",     ("layers", None)),
+    (r"blocks/(qnorm|knorm)$", ("layers", None)),
+    (r"blocks/wq$",        ("layers", "embed_w", "heads_w", "head_dim_w")),
+    (r"blocks/wk$",        ("layers", "embed_w", "kv_heads_w", "head_dim_w")),
+    (r"blocks/wv$",        ("layers", "embed_w", "kv_heads_w", "head_dim_w")),
+    (r"blocks/wo$",        ("layers", "heads_w", "head_dim_w", "embed_w")),
+    (r"blocks/w_(gate|up)$",  ("layers", "embed_w", "dff_w")),
+    (r"blocks/w_down$",    ("layers", "dff_w", "embed_w")),
+    (r"blocks/router$",    ("layers", "embed_w", None)),
+    (r"blocks/moe_w_(gate|up)$", ("layers", "experts_w", "embed_w", "dff_w")),
+    (r"blocks/moe_w_down$", ("layers", "experts_w", "dff_w", "embed_w")),
+    (r"ln_f$",             (None,)),
+    # gnn
+    (r"gnn/.*w\d?$",       ("hidden_w", None)),
+    (r"gnn/.*",            (None,)),
+    # recsys: stacked per-field tables (F, V, D) -- shard vocab rows
+    (r"tables/.*",         (None, "table_rows_w", None)),
+    (r"recsys/.*",         (None,)),
+]
+
+
+def param_spec(path: str, shape: Sequence[int],
+               mesh: Optional[Mesh] = None) -> P:
+    mesh = mesh or _CTX["mesh"]
+    if mesh is None:
+        return P()
+    for pat, names in PARAM_RULES:
+        if re.search(pat, path):
+            if len(names) != len(shape):
+                # rank mismatch (e.g. scalar scale): replicate
+                return P()
+            return spec_for(shape, names, mesh)
+    return P()
+
+
+def tree_paths(tree) -> list[tuple[str, Any]]:
+    out = []
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        path = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        out.append((path, leaf))
+    return out
+
+
+def tree_specs(tree, mesh: Optional[Mesh] = None):
+    """PartitionSpec pytree matching ``tree``."""
+    mesh = mesh or _CTX["mesh"]
+    flat, tdef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = []
+    for kp, leaf in flat:
+        path = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        shape = getattr(leaf, "shape", ())
+        specs.append(param_spec(path, shape, mesh))
+    return jax.tree_util.tree_unflatten(tdef, specs)
+
+
+def tree_shardings(tree, mesh: Optional[Mesh] = None):
+    mesh = mesh or _CTX["mesh"]
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs(tree, mesh),
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,431 @@
+"""Cell builder: (architecture x input-shape) -> lowerable jit spec.
+
+Every cell yields a ``Cell`` with the step function, ShapeDtypeStruct
+arguments (no allocation -- the shannon/kernels pattern), in/out
+shardings derived from the logical-axis rules, and analytic
+MODEL_FLOPS for the roofline "useful compute" ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import jax.random as jr
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import base as cfg_base
+from repro.launch import sharding as sh
+from repro.optim.adamw import AdamW, AdamWState
+from repro.train import steps
+
+S = jax.ShapeDtypeStruct
+
+LM_SHAPE_DEFS = {
+    "train_4k":    dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k":  dict(kind="decode", seq=32768, batch=128),
+    "long_500k":   dict(kind="decode", seq=524288, batch=1),
+}
+GNN_SHAPE_DEFS = {
+    # minibatch_lg: sampled subgraph sizes from batch_nodes=1024 with
+    # fanout 15-10 over the (232965, 114.6M) parent graph; d_feat=602
+    # (Reddit). molecule: 128 graphs x (30 nodes, 64 edges) flattened.
+    "full_graph_sm": dict(n=2708, m=10556, d_feat=1433),
+    "minibatch_lg":  dict(n=169984, m=168960, d_feat=602),
+    "ogb_products":  dict(n=2449029, m=61859140, d_feat=100),
+    "molecule":      dict(n=3840, m=8192, d_feat=64),
+}
+RECSYS_SHAPE_DEFS = {
+    "train_batch":    dict(kind="train", batch=65536),
+    "serve_p99":      dict(kind="serve", batch=512),
+    "serve_bulk":     dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="retrieval", n_candidates=1_000_000),
+}
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    fn: Callable
+    args: tuple
+    in_shardings: tuple
+    out_shardings: Any            # None -> let GSPMD choose
+    donate_argnums: tuple
+    model_flops: float            # analytic useful FLOPs per step
+    rules: Optional[dict] = None  # logical-rule overrides used
+
+    def jitted(self):
+        kw = {}
+        if self.out_shardings is not None:
+            kw["out_shardings"] = self.out_shardings
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       donate_argnums=self.donate_argnums, **kw)
+
+
+def _ns(mesh, *parts):
+    return NamedSharding(mesh, P(*parts))
+
+
+def _pad512(x: int) -> int:
+    """jit in_shardings require exact divisibility; graph/candidate
+    arrays are padded (mask-neutral) to a multiple of 512 = lcm of both
+    production mesh sizes, exactly as a production TPU input pipeline
+    pads ragged data to shard boundaries."""
+    return -(-x // 512) * 512
+
+
+def _batch_shardings(mesh, tree_of_names: dict, shapes: dict):
+    out = {}
+    for k, names in tree_of_names.items():
+        out[k] = NamedSharding(mesh, sh.spec_for(shapes[k].shape, names, mesh))
+    return out
+
+
+# ----------------------------------------------------------------------
+# analytic model-FLOPs helpers (roofline numerator)
+# ----------------------------------------------------------------------
+def lm_model_flops(cfg, kind: str, batch: int, seq: int) -> float:
+    """Useful FLOPs (no remat recompute): 6ND train / 2ND inference
+    plus causal attention 2*B*S^2*H*dh per layer fwd (x3 for train)."""
+    n_act = cfg.active_param_count()
+    tokens = batch * seq
+    attn_fwd = 2.0 * cfg.n_layers * cfg.n_heads * cfg.d_head * seq * tokens / 2
+    if kind == "train":
+        return 6.0 * n_act * tokens + 3.0 * attn_fwd
+    if kind == "prefill":
+        return 2.0 * n_act * tokens + attn_fwd
+    # decode: one token vs full cache
+    return (2.0 * n_act * batch
+            + 4.0 * cfg.n_layers * cfg.n_heads * cfg.d_head * seq * batch)
+
+
+def gnn_model_flops(cfg, n: int, m: int, d_feat: int) -> float:
+    dh = cfg.d_hidden
+    per_layer = 2.0 * n * dh * dh + 2.0 * m * dh
+    fwd = 2.0 * n * d_feat * dh + cfg.n_layers * per_layer
+    if cfg.kind == "pna":
+        fwd *= len(cfg.aggregators) * len(cfg.scalers) * 0.5 + 1
+    if cfg.kind == "graphcast":
+        fwd = 2.0 * n * d_feat * dh + cfg.n_layers * (
+            2.0 * m * (2 * dh) * dh + 2.0 * n * (2 * dh) * dh)
+    return 3.0 * fwd  # train = fwd + 2x bwd
+
+
+def recsys_model_flops(cfg, batch: int, train: bool) -> float:
+    F, D = cfg.n_fields, cfg.embed_dim
+    cin = 0.0
+    h_prev = F
+    for h in cfg.cin_layers:
+        cin += 2.0 * batch * h * h_prev * F * D
+        h_prev = h
+    mlp = 0.0
+    prev = F * D
+    for m_ in cfg.mlp_layers:
+        mlp += 2.0 * batch * prev * m_
+        prev = m_
+    fwd = cin + mlp
+    return 3.0 * fwd if train else fwd
+
+
+# ----------------------------------------------------------------------
+# cell constructors
+# ----------------------------------------------------------------------
+def make_cell(arch_id: str, shape_name: str, mesh,
+              rules: Optional[dict] = None,
+              variant: str = "base") -> Cell:
+    spec = cfg_base.get(arch_id)
+    if spec.family == "lm":
+        return _lm_cell(spec, shape_name, mesh, rules)
+    if spec.family == "gnn":
+        if variant == "shardmap":
+            return _gnn_cell_shardmap(spec, shape_name, mesh, rules)
+        return _gnn_cell(spec, shape_name, mesh, rules)
+    if spec.family == "recsys":
+        return _recsys_cell(spec, shape_name, mesh, rules)
+    if spec.family == "sling":
+        return _sling_cell(spec, shape_name, mesh, rules)
+    raise ValueError(spec.family)
+
+
+def _lm_cell(spec, shape_name, mesh, rules) -> Cell:
+    from repro.models import transformer as T
+    d = LM_SHAPE_DEFS[shape_name]
+    cfg = spec.full()
+    opt = AdamW(lr=1e-4)
+    if d["kind"] == "prefill":
+        # output KV cache shards its sequence axis over "model"
+        rules = dict(rules or {}, **{"kv_seq": [("model",)]})
+    elif d["kind"] == "decode":
+        # split-KV ("flash decoding"): the cache's sequence axis carries
+        # the model axis (data too when batch=1); heads/head_dim stay
+        # unsharded so score contractions are local
+        decode_rules = {"kv_seq": [("model",)], "heads": [None],
+                        "kv_heads": [None], "head_dim": [None],
+                        "q_seq": [None]}
+        if d["batch"] == 1:
+            decode_rules["kv_seq"] = [("pod", "data", "model"),
+                                      ("data", "model")]
+        rules = dict(rules or {}, **decode_rules)
+    with sh.use_mesh_rules(mesh, rules):
+        params = jax.eval_shape(lambda: T.init_params(cfg, jr.PRNGKey(0)))
+        pshard = sh.tree_shardings(params, mesh)
+        if d["kind"] == "train":
+            opt_state = jax.eval_shape(opt.init, params)
+            oshard = AdamWState(step=_ns(mesh), m=pshard, v=pshard)
+            batch = {"tokens": S((d["batch"], d["seq"]), jnp.int32),
+                     "targets": S((d["batch"], d["seq"]), jnp.int32)}
+            bshard = {k: NamedSharding(
+                mesh, sh.spec_for(v.shape, ("batch", "seq"), mesh))
+                for k, v in batch.items()}
+            fn = steps.lm_train_step(cfg, opt)
+            return Cell(spec.arch_id, shape_name, fn,
+                        (params, opt_state, batch),
+                        (pshard, oshard, bshard),
+                        (pshard, oshard, _ns(mesh)),
+                        donate_argnums=(0, 1),
+                        model_flops=lm_model_flops(cfg, "train", d["batch"],
+                                                   d["seq"]),
+                        rules=rules)
+        if d["kind"] == "prefill":
+            batch = {"tokens": S((d["batch"], d["seq"]), jnp.int32)}
+            bshard = {"tokens": NamedSharding(
+                mesh, sh.spec_for((d["batch"], d["seq"]), ("batch", "seq"),
+                                  mesh))}
+            fn = steps.lm_prefill_step(cfg)
+            return Cell(spec.arch_id, shape_name, fn, (params, batch),
+                        (pshard, bshard), None, (),
+                        lm_model_flops(cfg, "prefill", d["batch"], d["seq"]),
+                        rules)
+        # decode
+        B, Sq = d["batch"], d["seq"]
+        cshape = (cfg.n_layers, B, Sq, cfg.n_kv_heads, cfg.d_head)
+        cnames = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+        cache = {"k": S(cshape, cfg.dtype), "v": S(cshape, cfg.dtype),
+                 "len": S((), jnp.int32)}
+        cspec = sh.spec_for(cshape, cnames, mesh)
+        cshard = {"k": NamedSharding(mesh, cspec),
+                  "v": NamedSharding(mesh, cspec), "len": _ns(mesh)}
+        batch = {"token": S((B,), jnp.int32)}
+        bshard = {"token": NamedSharding(
+            mesh, sh.spec_for((B,), ("batch",), mesh))}
+        fn = steps.lm_decode_step(cfg)
+        logits_shard = NamedSharding(
+            mesh, sh.spec_for((B, cfg.vocab), ("batch", "vocab"), mesh))
+        out = {"logits": logits_shard, "cache": cshard}
+        return Cell(spec.arch_id, shape_name, fn, (params, cache, batch),
+                    (pshard, cshard, bshard), out, (1,),
+                    lm_model_flops(cfg, "decode", B, Sq), rules)
+
+
+def _gnn_cell(spec, shape_name, mesh, rules) -> Cell:
+    import dataclasses as dc
+    d = GNN_SHAPE_DEFS[shape_name]
+    cfg = dc.replace(spec.full(), d_in=d["d_feat"])
+    from repro.models import gnn as G
+    opt = AdamW(lr=1e-3)
+    flops = gnn_model_flops(cfg, d["n"], d["m"], d["d_feat"])
+    n, m = _pad512(d["n"]), _pad512(d["m"])
+    with sh.use_mesh_rules(mesh, rules):
+        params = jax.eval_shape(lambda: G.init_params(cfg, jr.PRNGKey(0)))
+        pshard = sh.tree_shardings(params, mesh)
+        opt_state = jax.eval_shape(opt.init, params)
+        oshard = AdamWState(step=_ns(mesh), m=pshard, v=pshard)
+
+        if cfg.kind == "graphcast":
+            n_grid, n_tot = n, 2 * n
+            batch = {
+                "feats": S((n_tot, d["d_feat"]), jnp.float32),
+                "edge_src": S((m,), jnp.int32),
+                "edge_dst": S((m,), jnp.int32),
+                "edge_mask": S((m,), jnp.float32),
+                "node_mask": S((n_tot,), jnp.float32),
+                "n_grid": S((), jnp.int32),
+                "g2m_src": S((2 * n,), jnp.int32),
+                "g2m_dst": S((2 * n,), jnp.int32),
+                "g2m_mask": S((2 * n,), jnp.float32),
+                "m2g_src": S((2 * n,), jnp.int32),
+                "m2g_dst": S((2 * n,), jnp.int32),
+                "m2g_mask": S((2 * n,), jnp.float32),
+                "targets": S((n_tot, cfg.n_vars), jnp.float32),
+            }
+            names = {
+                "feats": ("nodes", "feat"), "edge_src": ("edges",),
+                "edge_dst": ("edges",), "edge_mask": ("edges",),
+                "node_mask": ("nodes",), "n_grid": (),
+                "g2m_src": ("edges",), "g2m_dst": ("edges",),
+                "g2m_mask": ("edges",), "m2g_src": ("edges",),
+                "m2g_dst": ("edges",), "m2g_mask": ("edges",),
+                "targets": ("nodes", "feat"),
+            }
+        else:
+            batch = {
+                "feats": S((n, d["d_feat"]), jnp.float32),
+                "edge_src": S((m,), jnp.int32),
+                "edge_dst": S((m,), jnp.int32),
+                "edge_mask": S((m,), jnp.float32),
+                "node_mask": S((n,), jnp.float32),
+                "labels": S((n,), jnp.int32),
+            }
+            names = {
+                "feats": ("nodes", "feat"), "edge_src": ("edges",),
+                "edge_dst": ("edges",), "edge_mask": ("edges",),
+                "node_mask": ("nodes",), "labels": ("nodes",),
+            }
+        bshard = {k: NamedSharding(mesh, sh.spec_for(batch[k].shape,
+                                                     names[k], mesh))
+                  for k in batch}
+        fn = steps.gnn_train_step(cfg, opt)
+        return Cell(spec.arch_id, shape_name, fn,
+                    (params, opt_state, batch),
+                    (pshard, oshard, bshard),
+                    (pshard, oshard, _ns(mesh)), (0, 1),
+                    flops, rules)
+
+
+def _gnn_cell_shardmap(spec, shape_name, mesh, rules) -> Cell:
+    """Optimized GCN cell: dst-partitioned edges + shard_map message
+    passing (EXPERIMENTS.md section Perf, gnn-shardmap iteration)."""
+    import dataclasses as dc
+    d = GNN_SHAPE_DEFS[shape_name]
+    cfg = dc.replace(spec.full(), d_in=d["d_feat"])
+    assert cfg.kind == "gcn", "shardmap variant implemented for GCN"
+    from repro.models import gnn as G
+    from repro.models.gnn_sharded import gcn_loss_sharded
+    opt = AdamW(lr=1e-3)
+    flops = gnn_model_flops(cfg, d["n"], d["m"], d["d_feat"])
+    n = _pad512(d["n"])
+    ns = mesh.size
+    e_max = int(-(-int(d["m"] * 1.3 / ns) // 8) * 8)
+    with sh.use_mesh_rules(mesh, rules):
+        params = jax.eval_shape(lambda: G.init_params(cfg, jr.PRNGKey(0)))
+        pshard = sh.tree_shardings(params, mesh)
+        opt_state = jax.eval_shape(opt.init, params)
+        oshard = AdamWState(step=_ns(mesh), m=pshard, v=pshard)
+        axes = tuple(a for a in ("pod", "data", "model")
+                     if a in mesh.shape and mesh.shape[a] > 1)
+        batch = {
+            "feats": S((n, d["d_feat"]), jnp.float32),
+            "blk_src": S((ns, e_max), jnp.int32),
+            "blk_dstl": S((ns, e_max), jnp.int32),
+            "blk_w": S((ns, e_max), jnp.float32),
+            "w_self": S((n,), jnp.float32),
+            "labels": S((n,), jnp.int32),
+            "node_mask": S((n,), jnp.float32),
+        }
+        from jax.sharding import NamedSharding as NS_, PartitionSpec as P_
+        bshard = {
+            "feats": NS_(mesh, P_(axes, None)),
+            "blk_src": NS_(mesh, P_(axes, None)),
+            "blk_dstl": NS_(mesh, P_(axes, None)),
+            "blk_w": NS_(mesh, P_(axes, None)),
+            "w_self": NS_(mesh, P_(axes)),
+            "labels": NS_(mesh, P_(axes)),
+            "node_mask": NS_(mesh, P_(axes)),
+        }
+
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: gcn_loss_sharded(cfg, p, batch))(params)
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, opt_state, {"loss": loss}
+
+        return Cell(spec.arch_id, shape_name + "+shardmap", step,
+                    (params, opt_state, batch),
+                    (pshard, oshard, bshard),
+                    (pshard, oshard, _ns(mesh)), (0, 1), flops, rules)
+
+
+def _recsys_cell(spec, shape_name, mesh, rules) -> Cell:
+    d = RECSYS_SHAPE_DEFS[shape_name]
+    cfg = spec.full()
+    from repro.models import recsys as R
+    with sh.use_mesh_rules(mesh, rules):
+        params = jax.eval_shape(lambda: R.init_params(cfg, jr.PRNGKey(0)))
+        pshard = sh.tree_shardings(params, mesh)
+        if d["kind"] == "retrieval":
+            C = _pad512(d["n_candidates"])
+            n_item = cfg.n_fields - cfg.n_user_fields
+            batch = {"user_ids": S((cfg.n_user_fields,), jnp.int32),
+                     "cand_ids": S((C, n_item), jnp.int32)}
+            bshard = {"user_ids": _ns(mesh),
+                      "cand_ids": NamedSharding(
+                          mesh, sh.spec_for((C, n_item),
+                                            ("candidates", "fields"), mesh))}
+            fn = steps.recsys_retrieval_step(cfg)
+            return Cell(spec.arch_id, shape_name, fn, (params, batch),
+                        (pshard, bshard), None, (),
+                        recsys_model_flops(cfg, C, train=False), rules)
+        B = d["batch"]
+        batch = {"ids": S((B, cfg.n_fields), jnp.int32),
+                 "mh_ids": S((B, cfg.multi_hot_fields, cfg.bag_size),
+                             jnp.int32)}
+        bnames = {"ids": ("batch", "fields"),
+                  "mh_ids": ("batch", "fields", None)}
+        if d["kind"] == "train":
+            batch["labels"] = S((B,), jnp.int32)
+            bnames["labels"] = ("batch",)
+            opt = AdamW(lr=1e-3)
+            opt_state = jax.eval_shape(opt.init, params)
+            oshard = AdamWState(step=_ns(mesh), m=pshard, v=pshard)
+            bshard = {k: NamedSharding(
+                mesh, sh.spec_for(batch[k].shape, bnames[k], mesh))
+                for k in batch}
+            fn = steps.recsys_train_step(cfg, opt)
+            return Cell(spec.arch_id, shape_name, fn,
+                        (params, opt_state, batch),
+                        (pshard, oshard, bshard),
+                        (pshard, oshard, _ns(mesh)), (0, 1),
+                        recsys_model_flops(cfg, B, train=True), rules)
+        bshard = {k: NamedSharding(
+            mesh, sh.spec_for(batch[k].shape, bnames[k], mesh))
+            for k in batch}
+        fn = steps.recsys_serve_step(cfg)
+        return Cell(spec.arch_id, shape_name, fn, (params, batch),
+                    (pshard, bshard), None, (),
+                    recsys_model_flops(cfg, B, train=False), rules)
+
+
+def _sling_cell(spec, shape_name, mesh, rules,
+                variant: str = "shardmap") -> Cell:
+    from jax.sharding import PartitionSpec as P
+    cfg = spec.full()
+    cfg = dataclasses.replace(cfg, n=_pad512(cfg.n), m=_pad512(cfg.m))
+    n, m, W, B = cfg.n, cfg.m, cfg.hp_width, cfg.batch
+    with sh.use_mesh_rules(mesh, rules):
+        index = {"keys": S((n, W), jnp.int32), "vals": S((n, W), jnp.float32),
+                 "d": S((n,), jnp.float32)}
+        batch = {"us": S((B,), jnp.int32)}
+        # useful flops: L pushes of 2m MACs per query + seed scatter
+        flops = 2.0 * B * cfg.l_max * m
+        ishard = {"keys": NamedSharding(mesh, sh.spec_for((n, W), ("nodes", None), mesh)),
+                  "vals": NamedSharding(mesh, sh.spec_for((n, W), ("nodes", None), mesh)),
+                  "d": NamedSharding(mesh, sh.spec_for((n,), ("nodes",), mesh))}
+        bshard = {"us": NamedSharding(mesh, sh.spec_for((B,), ("batch",), mesh))}
+        if variant == "shardmap":
+            ns_m = mesh.shape["model"]
+            e_max = int(-(-int(m * 1.3 / ns_m) // 8) * 8)
+            graph = {"blk_src": S((ns_m, e_max), jnp.int32),
+                     "blk_dstl": S((ns_m, e_max), jnp.int32),
+                     "blk_w": S((ns_m, e_max), jnp.float32)}
+            gshard = {k: NamedSharding(mesh, P(("model",), None))
+                      for k in graph}
+            # index rows are gathered per query batch: replicate d,
+            # shard keys/vals over nodes as before
+            fn = steps.sling_serve_step_sharded(cfg, mesh)
+            ishard["d"] = NamedSharding(mesh, P())
+            return Cell(spec.arch_id, shape_name + "+shardmap", fn,
+                        (index, graph, batch), (ishard, gshard, bshard),
+                        None, (), flops, rules)
+        graph = {"edge_src": S((m,), jnp.int32),
+                 "edge_dst": S((m,), jnp.int32),
+                 "w": S((m,), jnp.float32)}
+        gshard = {k: NamedSharding(mesh, sh.spec_for((m,), ("edges",), mesh))
+                  for k in graph}
+        fn = steps.sling_serve_step(cfg)
+        return Cell(spec.arch_id, shape_name, fn, (index, graph, batch),
+                    (ishard, gshard, bshard), None, (),
+                    flops, rules)

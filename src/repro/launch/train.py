@@ -1,0 +1,78 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it runs reduced (smoke) configs end-to-end; on a
+pod the same entrypoint takes the full config + production mesh (the
+dry-run in launch/dryrun.py proves those lower & compile).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax.random as jr
+import numpy as np
+
+from repro.configs import base as cfg_base
+from repro.data import pipeline
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.train.trainer import TrainerConfig, fit
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--full", action="store_true",
+                    help="full config (pod-scale; default smoke)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    spec = cfg_base.get(args.arch)
+    cfg = spec.full() if args.full else spec.smoke()
+    opt = AdamW(lr=cosine_schedule(args.lr, warmup=10, total=args.steps))
+    tcfg = TrainerConfig(steps=args.steps, ckpt_dir=args.ckpt_dir)
+
+    if spec.family == "lm":
+        from repro.models import transformer as T
+        params = T.init_params(cfg, jr.PRNGKey(0))
+        stream = pipeline.TokenStream(cfg.vocab, args.batch, args.seq)
+        loss = lambda p, b: T.lm_loss(cfg, p, b["tokens"], b["targets"])
+        fit(loss, params, stream.batch_at, opt, tcfg)
+    elif spec.family == "gnn":
+        from repro.graph import generators
+        from repro.models import gnn as G
+        g = generators.barabasi_albert(256, 3, seed=0, directed=False)
+        batch = pipeline.gnn_batch(g, cfg.d_in, max(cfg.n_classes, 1))
+        if cfg.kind == "graphcast":
+            rng = np.random.default_rng(0)
+            n = g.n
+            batch.update({
+                "n_grid": np.int32(n // 2),
+                "g2m_src": rng.integers(0, n // 2, n).astype(np.int32),
+                "g2m_dst": rng.integers(n // 2, n, n).astype(np.int32),
+                "g2m_mask": np.ones(n, np.float32),
+                "m2g_src": rng.integers(n // 2, n, n).astype(np.int32),
+                "m2g_dst": rng.integers(0, n // 2, n).astype(np.int32),
+                "m2g_mask": np.ones(n, np.float32),
+                "targets": np.random.default_rng(1).normal(
+                    size=(n, cfg.n_vars)).astype(np.float32),
+            })
+        params = G.init_params(cfg, jr.PRNGKey(0))
+        fit(lambda p, b: G.loss_fn(cfg, p, b), params,
+            lambda step: batch, opt, tcfg)
+    elif spec.family == "recsys":
+        from repro.models import recsys as R
+        params = R.init_params(cfg, jr.PRNGKey(0))
+        stream = pipeline.RecsysStream(cfg.n_fields, cfg.vocab_per_field,
+                                       args.batch, cfg.multi_hot_fields,
+                                       cfg.bag_size)
+        fit(lambda p, b: R.loss_fn(cfg, p, b), params, stream.batch_at,
+            opt, tcfg)
+    else:
+        raise SystemExit(f"family {spec.family} has no train entrypoint")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Embedding lookup + EmbeddingBag built from jnp.take / segment_sum.
+
+JAX has no native nn.EmbeddingBag and no CSR sparse -- the taxonomy
+explicitly makes this part of the system. Two paths:
+
+  * ``lookup``      -- single-valued categorical field: plain take.
+  * ``embedding_bag`` -- ragged multi-hot field flattened to
+    (ids, bag_ids) pairs, reduced per bag with segment_sum / mean / max.
+
+Tables are annotated ("table_rows_w", None) so GSPMD row(vocab)-shards
+them over the "model" axis; the gather then lowers to a sharded gather
++ reduce (the collective content measured in the recsys roofline).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import logical
+
+
+def lookup(table, ids):
+    """table (V, D), ids (...,) -> (..., D)."""
+    return jnp.take(table, ids, axis=0)
+
+
+def embedding_bag(table, ids, bag_ids, n_bags: int, mode: str = "sum",
+                  weights=None):
+    """EmbeddingBag: gather rows then segment-reduce into bags.
+
+    ids      (M,) int32 row indices (flattened multi-hot)
+    bag_ids  (M,) int32 destination bag per id (sorted not required)
+    weights  optional (M,) per-sample weights (sum mode only)
+    """
+    rows = jnp.take(table, ids, axis=0)                     # (M, D)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, bag_ids, num_segments=n_bags)
+    if mode == "mean":
+        s = jax.ops.segment_sum(rows, bag_ids, num_segments=n_bags)
+        c = jax.ops.segment_sum(jnp.ones_like(ids, jnp.float32), bag_ids,
+                                num_segments=n_bags)
+        return s / jnp.maximum(c, 1.0)[:, None]
+    if mode == "max":
+        return jax.ops.segment_max(rows, bag_ids, num_segments=n_bags)
+    raise ValueError(mode)
+
+
+def field_lookup_all(tables, ids):
+    """ids (B, n_fields) against per-field stacked tables
+    (n_fields, V, D) -> (B, n_fields, D)."""
+    B, F = ids.shape
+    flat = tables[jnp.arange(F)[None, :], ids]              # (B, F, D)
+    return logical(flat, "batch", "fields", None)

@@ -1,0 +1,123 @@
+"""Flash attention in pure JAX with a custom VJP.
+
+Differentiating through a ``lax.scan`` online-softmax stacks the
+per-chunk score/probability tensors as residuals -- O(S^2) memory, the
+exact thing chunking is meant to avoid (observed as 144 GiB stacked
+f32[(n_chunks, B, H, S, C)] residuals in the smollm train_4k dry-run).
+The fix is the FlashAttention-2 factorization: forward saves only
+(q, k, v, out, m, l); backward recomputes scores chunk by chunk.
+
+Masking supports causal + sliding-window + per-layer global flag
+(is_global passed as a float 0/1 array so it can flow through
+custom_vjp; window/chunk are static). Positions are arange(S) --
+serving decode uses the dense path, not this one.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.sharding import logical
+
+NEG = -1e30
+
+
+def _mask(q_pos, k_pos, isg, window: int):
+    causal = k_pos[None, :] <= q_pos[:, None]
+    if window <= 0:
+        return causal.astype(jnp.float32)
+    local = (k_pos[None, :] > (q_pos[:, None] - window)).astype(jnp.float32)
+    return causal.astype(jnp.float32) * jnp.maximum(isg, local)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def flash_attention(q, k, v, isg, window: int, chunk: int):
+    """q/k/v: (B, S, H, dh) (kv already GQA-expanded); isg: () float
+    0/1 per-layer global flag. Returns (B, S, H, dh)."""
+    out, _, _ = _fwd_impl(q, k, v, isg, window, chunk)
+    return out
+
+
+def _fwd_impl(q, k, v, isg, window: int, chunk: int):
+    B, Sq, H, dh = q.shape
+    nc = Sq // chunk
+    scale = 1.0 / np.sqrt(dh)
+    qT = q.transpose(0, 2, 1, 3).astype(jnp.float32)       # (B,H,S,dh)
+    kc = k.reshape(B, nc, chunk, H, dh).transpose(1, 0, 3, 2, 4)  # (nc,B,H,C,dh)
+    vc = v.reshape(B, nc, chunk, H, dh).transpose(1, 0, 3, 2, 4)
+    q_pos = jnp.arange(Sq, dtype=jnp.int32)
+    kp = q_pos.reshape(nc, chunk)
+
+    def body(carry, xs):
+        acc, m, l = carry
+        kci, vci, kpi = xs
+        s = jnp.einsum("bhsk,bhtk->bhst", qT, kci.astype(jnp.float32)) * scale
+        s = logical(s, "batch", None, "q_seq", None)
+        msk = _mask(q_pos, kpi, isg, window)
+        s = s + (1.0 - msk)[None, None] * NEG
+        m_new = jnp.maximum(m, s.max(-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhst,bhtk->bhsk", p, vci.astype(jnp.float32))
+        acc_new = logical(acc_new, "batch", None, "q_seq", "head_dim")
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, H, Sq, dh), jnp.float32)
+    m0 = jnp.full((B, H, Sq), NEG, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (kc, vc, kp))
+    linv = 1.0 / jnp.maximum(l, 1e-30)
+    out = (acc * linv[..., None]).transpose(0, 2, 1, 3).astype(q.dtype)
+    return out, m, l
+
+
+def _flash_fwd(q, k, v, isg, window: int, chunk: int):
+    out, m, l = _fwd_impl(q, k, v, isg, window, chunk)
+    return out, (q, k, v, isg, out, m, l)
+
+
+def _flash_bwd(window: int, chunk: int, res, dout):
+    q, k, v, isg, out, m, l = res
+    B, Sq, H, dh = q.shape
+    nc = Sq // chunk
+    scale = 1.0 / np.sqrt(dh)
+    qT = q.transpose(0, 2, 1, 3).astype(jnp.float32)        # (B,H,S,dh)
+    doT = dout.transpose(0, 2, 1, 3).astype(jnp.float32)
+    oT = out.transpose(0, 2, 1, 3).astype(jnp.float32)
+    # softmax denominator and row dot D_i = sum_k dOut_ik Out_ik
+    linv = 1.0 / jnp.maximum(l, 1e-30)
+    D = (doT * oT).sum(-1)                                   # (B,H,S)
+    kc = k.reshape(B, nc, chunk, H, dh).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, nc, chunk, H, dh).transpose(1, 0, 3, 2, 4)
+    q_pos = jnp.arange(Sq, dtype=jnp.int32)
+    kp = q_pos.reshape(nc, chunk)
+
+    def body(dq, xs):
+        kci, vci, kpi = xs
+        s = jnp.einsum("bhsk,bhtk->bhst", qT, kci.astype(jnp.float32)) * scale
+        msk = _mask(q_pos, kpi, isg, window)
+        s = s + (1.0 - msk)[None, None] * NEG
+        p = jnp.exp(s - m[..., None]) * linv[..., None]      # true softmax
+        p = logical(p, "batch", None, "q_seq", None)
+        dv_c = jnp.einsum("bhst,bhsk->bhtk", p, doT)
+        dp = jnp.einsum("bhsk,bhtk->bhst", doT, vci.astype(jnp.float32))
+        ds = p * (dp - D[..., None]) * scale
+        dq = dq + jnp.einsum("bhst,bhtk->bhsk", ds, kci.astype(jnp.float32))
+        dk_c = jnp.einsum("bhst,bhsk->bhtk", ds, qT)
+        return dq, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((B, H, Sq, dh), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (kc, vc, kp))
+    dq = dq.transpose(0, 2, 1, 3).astype(q.dtype)
+    # (nc, B, H, C, dh) -> (B, S, H, dh)
+    dk = dks.transpose(1, 0, 3, 2, 4).reshape(B, Sq, H, dh).astype(k.dtype)
+    dv = dvs.transpose(1, 0, 3, 2, 4).reshape(B, Sq, H, dh).astype(v.dtype)
+    return dq, dk, dv, jnp.zeros_like(res[3])
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

@@ -1,0 +1,265 @@
+"""GNN family: GCN, GAT, PNA, and a GraphCast-style
+encoder-processor-decoder mesh GNN.
+
+Message passing is built on edge-index gather + ``jax.ops.segment_sum``
+/ ``segment_max`` (JAX has no CSR SpMM -- DESIGN.md section 2); this is
+the *same* pull operator that powers the SLING HP index, and both share
+the Pallas ELL kernel (repro.kernels.spmv_ell) on the hot path.
+
+All models consume a ``GraphBatch`` of static shapes:
+  feats (N, F), edge_src (M,), edge_dst (M,), edge_mask (M,),
+  node_mask (N,), labels (N,) or targets (N, out_dim)
+Padded edges carry src=dst=0 with edge_mask=0 so segment ops stay
+shape-static. Batched small graphs (``molecule`` shape) are flattened
+into one big graph with node offsets by the data pipeline.
+
+SLING integration (DESIGN.md section 5): ``sim_feat`` -- an optional
+(N, k_sim) block of SimRank single-source scores against k_sim anchor
+nodes, produced offline by the SLING index -- is concatenated to the
+input features when cfg.sim_feats > 0.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import jax.random as jr
+import numpy as np
+
+from repro.launch.sharding import logical
+from repro.models.layers import dense_init, leaky_relu, segment_softmax
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    kind: str                  # gcn | gat | pna | graphcast
+    n_layers: int
+    d_hidden: int
+    d_in: int
+    n_classes: int = 0         # 0 -> regression with out_dim = d_out
+    d_out: int = 0
+    n_heads: int = 1           # gat
+    aggregators: tuple = ("mean",)
+    scalers: tuple = ("identity",)
+    mesh_refinement: int = 0   # graphcast
+    n_vars: int = 0            # graphcast
+    sim_feats: int = 0         # SLING feature block width
+    dtype: Any = jnp.float32
+
+    @property
+    def d_input_total(self) -> int:
+        return self.d_in + self.sim_feats
+
+    @property
+    def out_dim(self) -> int:
+        return self.n_classes if self.n_classes > 0 else self.d_out
+
+
+# ----------------------------------------------------------------------
+# params
+# ----------------------------------------------------------------------
+def init_params(cfg: GNNConfig, key) -> dict:
+    ks = iter(jr.split(key, 4 * cfg.n_layers + 8))
+    d_in, dh = cfg.d_input_total, cfg.d_hidden
+    p: dict = {"gnn": {}}
+    g = p["gnn"]
+    if cfg.kind == "gcn":
+        dims = [d_in] + [dh] * (cfg.n_layers - 1) + [cfg.out_dim]
+        g["w"] = [dense_init(next(ks), (dims[i], dims[i + 1]))
+                  for i in range(cfg.n_layers)]
+        g["b"] = [jnp.zeros((dims[i + 1],)) for i in range(cfg.n_layers)]
+    elif cfg.kind == "gat":
+        H, dh_ = cfg.n_heads, cfg.d_hidden
+        g["w"] = [dense_init(next(ks), (d_in, H * dh_))]
+        g["a_src"] = [dense_init(next(ks), (H, dh_))]
+        g["a_dst"] = [dense_init(next(ks), (H, dh_))]
+        for _ in range(cfg.n_layers - 2):
+            g["w"].append(dense_init(next(ks), (H * dh_, H * dh_)))
+            g["a_src"].append(dense_init(next(ks), (H, dh_)))
+            g["a_dst"].append(dense_init(next(ks), (H, dh_)))
+        # output layer: single head to out_dim
+        g["w"].append(dense_init(next(ks), (H * dh_, cfg.out_dim)))
+        g["a_src"].append(dense_init(next(ks), (1, cfg.out_dim)))
+        g["a_dst"].append(dense_init(next(ks), (1, cfg.out_dim)))
+    elif cfg.kind == "pna":
+        n_agg = len(cfg.aggregators) * len(cfg.scalers)
+        dims = [d_in] + [dh] * cfg.n_layers
+        g["w_pre"] = [dense_init(next(ks), (dims[i], dh))
+                      for i in range(cfg.n_layers)]
+        g["w_post"] = [dense_init(next(ks), (dh * n_agg + dims[i], dims[i + 1]))
+                       for i in range(cfg.n_layers)]
+        g["w_out"] = dense_init(next(ks), (dh, cfg.out_dim))
+    elif cfg.kind == "graphcast":
+        dh = cfg.d_hidden
+        g["enc_grid"] = dense_init(next(ks), (d_in, dh))
+        g["enc_mesh"] = dense_init(next(ks), (d_in, dh))
+        g["g2m_edge"] = dense_init(next(ks), (2 * dh, dh))
+        g["proc_edge"] = [dense_init(next(ks), (2 * dh, dh))
+                          for _ in range(cfg.n_layers)]
+        g["proc_node"] = [dense_init(next(ks), (2 * dh, dh))
+                          for _ in range(cfg.n_layers)]
+        g["m2g_edge"] = dense_init(next(ks), (2 * dh, dh))
+        g["dec"] = dense_init(next(ks), (dh, cfg.n_vars))
+    else:
+        raise ValueError(cfg.kind)
+    return p
+
+
+# ----------------------------------------------------------------------
+# message-passing primitives
+# ----------------------------------------------------------------------
+def gcn_norm_weights(edge_src, edge_dst, edge_mask, n: int):
+    """Symmetric normalization: edge weight 1/sqrt(d~_src d~_dst) and
+    self-loop weight 1/d~_v, with d~ = deg + 1 (Kipf & Welling)."""
+    ones = edge_mask.astype(jnp.float32)
+    deg = jax.ops.segment_sum(ones, edge_dst, num_segments=n) + 1.0
+    deg_s = jax.ops.segment_sum(ones, edge_src, num_segments=n) + 1.0
+    w_edge = ones * jax.lax.rsqrt(deg_s[edge_src]) * jax.lax.rsqrt(deg[edge_dst])
+    w_self = 1.0 / deg
+    return w_edge, w_self
+
+
+def spmm(h, edge_src, edge_dst, w_edge, n: int):
+    """segment-sum SpMM: out[v] = sum_{e: dst=v} w_e * h[src_e]."""
+    msgs = h[edge_src] * w_edge[:, None]
+    msgs = logical(msgs, "edges", "feat")
+    return jax.ops.segment_sum(msgs, edge_dst, num_segments=n)
+
+
+# ----------------------------------------------------------------------
+# forward passes
+# ----------------------------------------------------------------------
+def forward(cfg: GNNConfig, params: dict, batch: dict):
+    feats = batch["feats"]
+    if cfg.sim_feats > 0:
+        feats = jnp.concatenate([feats, batch["sim_feat"]], axis=-1)
+    feats = logical(feats, "nodes", "feat")
+    es, ed = batch["edge_src"], batch["edge_dst"]
+    em = batch["edge_mask"]
+    n = feats.shape[0]
+    g = params["gnn"]
+
+    if cfg.kind == "gcn":
+        w_e, w_self = gcn_norm_weights(es, ed, em, n)
+        h = feats
+        for i in range(cfg.n_layers):
+            h = h @ g["w"][i] + g["b"][i]
+            h = spmm(h, es, ed, w_e, n) + h * w_self[:, None]
+            h = logical(h, "nodes", "feat")
+            if i < cfg.n_layers - 1:
+                h = jax.nn.relu(h)
+        return h
+
+    if cfg.kind == "gat":
+        h = feats
+        L = cfg.n_layers
+        for i in range(L):
+            H = cfg.n_heads if i < L - 1 else 1
+            dh = cfg.d_hidden if i < L - 1 else cfg.out_dim
+            z = (h @ g["w"][i]).reshape(n, H, dh)
+            sc_src = (z * g["a_src"][i][None]).sum(-1)   # (N, H)
+            sc_dst = (z * g["a_dst"][i][None]).sum(-1)
+            e = leaky_relu(sc_src[es] + sc_dst[ed])      # (M, H)
+            e = jnp.where(em[:, None] > 0, e, -1e30)
+            alpha = jax.vmap(
+                lambda col: segment_softmax(col, ed, n), in_axes=1,
+                out_axes=1)(e)
+            alpha = alpha * em[:, None]
+            msgs = z[es] * alpha[:, :, None]             # (M, H, dh)
+            agg = jax.ops.segment_sum(msgs, ed, num_segments=n)
+            h = agg.reshape(n, H * dh)
+            h = logical(h, "nodes", "feat")
+            if i < L - 1:
+                h = jax.nn.elu(h)
+        return h
+
+    if cfg.kind == "pna":
+        ones = em.astype(jnp.float32)
+        deg = jax.ops.segment_sum(ones, ed, num_segments=n)
+        log_deg = jnp.log1p(deg)[:, None]
+        mean_log_deg = jnp.mean(log_deg) + 1e-6
+        h = feats
+        for i in range(cfg.n_layers):
+            z = jax.nn.relu(h @ g["w_pre"][i])           # (N, dh)
+            msgs = z[es] * em[:, None]
+            s_sum = jax.ops.segment_sum(msgs, ed, num_segments=n)
+            s_mean = s_sum / jnp.maximum(deg, 1.0)[:, None]
+            neg_inf = jnp.where(em[:, None] > 0, z[es], -1e30)
+            s_max = jax.ops.segment_max(neg_inf, ed, num_segments=n)
+            s_max = jnp.where(jnp.isfinite(s_max), s_max, 0.0)
+            pos_inf = jnp.where(em[:, None] > 0, z[es], 1e30)
+            s_min = -jax.ops.segment_max(-pos_inf, ed, num_segments=n)
+            s_min = jnp.where(jnp.isfinite(s_min), s_min, 0.0)
+            sq = jax.ops.segment_sum(msgs * msgs, ed, num_segments=n)
+            var = sq / jnp.maximum(deg, 1.0)[:, None] - s_mean ** 2
+            s_std = jnp.sqrt(jnp.maximum(var, 0.0))
+            aggs = {"mean": s_mean, "max": s_max, "min": s_min, "std": s_std,
+                    "sum": s_sum}
+            cols = []
+            for a in cfg.aggregators:
+                base = aggs[a]
+                for s in cfg.scalers:
+                    if s == "identity":
+                        cols.append(base)
+                    elif s == "amplification":
+                        cols.append(base * (log_deg / mean_log_deg))
+                    elif s == "attenuation":
+                        cols.append(base * (mean_log_deg / jnp.maximum(log_deg, 1e-6)))
+            h = jnp.concatenate(cols + [h], axis=-1) @ g["w_post"][i]
+            h = logical(jax.nn.relu(h), "nodes", "feat")
+        return h @ g["w_out"]
+
+    if cfg.kind == "graphcast":
+        # grid nodes [0, n_grid), mesh nodes [n_grid, n): encoder moves
+        # grid state onto the mesh, n_layers of mesh message passing,
+        # decoder returns to grid and predicts n_vars channels.
+        n_grid = batch["n_grid"]
+        hg = jax.nn.relu(feats @ g["enc_grid"])          # (N, dh) grid part
+        hm = jax.nn.relu(feats @ g["enc_mesh"])          # mesh part
+        h = jnp.where((jnp.arange(n) < n_grid)[:, None], hg, hm)
+        # grid->mesh edges
+        g2m_s, g2m_d, g2m_m = batch["g2m_src"], batch["g2m_dst"], batch["g2m_mask"]
+        pair = logical(jnp.concatenate([h[g2m_s], h[g2m_d]], -1),
+                       "edges", "feat")
+        msg = jax.nn.relu(pair @ g["g2m_edge"])
+        msg = logical(msg, "edges", "feat")
+        h = h + jax.ops.segment_sum(msg * g2m_m[:, None], g2m_d,
+                                    num_segments=n)
+        # mesh processor
+        for i in range(cfg.n_layers):
+            pair = logical(jnp.concatenate([h[es], h[ed]], -1),
+                           "edges", "feat")
+            msg = jax.nn.relu(pair @ g["proc_edge"][i])
+            msg = logical(msg, "edges", "feat")
+            agg = jax.ops.segment_sum(msg * em[:, None], ed, num_segments=n)
+            h = h + jax.nn.relu(
+                jnp.concatenate([h, agg], -1) @ g["proc_node"][i])
+            h = logical(h, "nodes", "feat")
+        # mesh->grid
+        m2g_s, m2g_d, m2g_m = batch["m2g_src"], batch["m2g_dst"], batch["m2g_mask"]
+        pair = logical(jnp.concatenate([h[m2g_s], h[m2g_d]], -1),
+                       "edges", "feat")
+        msg = jax.nn.relu(pair @ g["m2g_edge"])
+        msg = logical(msg, "edges", "feat")
+        h = h + jax.ops.segment_sum(msg * m2g_m[:, None], m2g_d,
+                                    num_segments=n)
+        return h @ g["dec"]
+
+    raise ValueError(cfg.kind)
+
+
+def loss_fn(cfg: GNNConfig, params: dict, batch: dict):
+    out = forward(cfg, params, batch)
+    mask = batch["node_mask"].astype(jnp.float32)
+    if cfg.n_classes > 0:
+        logits = out.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, batch["labels"][:, None], axis=-1)[:, 0]
+        nll = (logz - gold) * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    err = (out - batch["targets"]) ** 2
+    return (err.mean(-1) * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,65 @@
+"""Shared neural-net building blocks (pure JAX, no flax offline)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import jax.random as jr
+import numpy as np
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary embedding. x: (..., S, H, Dh), positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense_init(key, shape, scale: float | None = None, dtype=jnp.float32):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jr.normal(key, shape, dtype=jnp.float32) * s).astype(dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = silu(x @ w_gate)
+    return (g * (x @ w_up)) @ w_down
+
+
+def softmax_cross_entropy(logits, labels, mask=None):
+    """logits (..., V) fp32-safe CE with integer labels."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def leaky_relu(x, slope: float = 0.2):
+    return jnp.where(x >= 0, x, slope * x)
+
+
+def segment_softmax(scores, seg_ids, num_segments: int):
+    """Softmax over groups (e.g. GAT edge scores grouped by dst node)."""
+    smax = jax.ops.segment_max(scores, seg_ids, num_segments=num_segments)
+    ex = jnp.exp(scores - smax[seg_ids])
+    den = jax.ops.segment_sum(ex, seg_ids, num_segments=num_segments)
+    return ex / jnp.maximum(den[seg_ids], 1e-20)

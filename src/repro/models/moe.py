@@ -1,0 +1,110 @@
+"""Mixture-of-Experts layer with shard_map-local dispatch.
+
+Evolution (EXPERIMENTS.md section Perf, llama4-scout x train_4k):
+  v1  global argsort dispatch under pure GSPMD: the permuted token
+      gather/scatter all-gathered the full (1M, 5120) token tensor --
+      3 x 20 GB AG + AR per MoE layer.
+  v2  grouped (per-data-shard) ranks, still jnp.take_along_axis: XLA
+      collapses the batched gather's group dim, GSPMD re-replicates.
+  v3  sortless cumsum ranks + scatter-only: batched scatter is also
+      replicated by GSPMD.
+  v4  (this file) ``jax.shard_map`` manual over the data axes with the
+      "model" axis left auto: dispatch (argsort, rank, gather, scatter)
+      runs on each data shard's LOCAL tokens with per-device capacity
+      C_l = ceil(T_l * k / E * cf) -- zero dispatch collectives by
+      construction; the expert einsums stay under GSPMD so expert
+      weights remain sharded over "model" (EP/TP), with the combine
+      reduce crossing only the model axis. This is the production TPU
+      MoE layout (per-device capacity, local permute, EP collectives
+      only on the expert axis).
+
+Without a mesh (CPU tests/examples) the same local function runs
+directly; semantics match a one-group capacity-limited router.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.sharding import active_mesh, logical
+from repro.models.layers import silu
+
+
+def _moe_local(x, router_w, w_gate, w_up, w_down, top_k: int,
+               capacity_factor: float):
+    """Dispatch + expert FFN + combine on a LOCAL token block (T_l, d).
+
+    Inside shard_map the only sharded dims left are the auto axes
+    ("model"), carried by the expert-weight shardings and the
+    "experts"/"dff" constraints below."""
+    T, d = x.shape
+    E = router_w.shape[-1]
+    C = max(1, int(math.ceil(T * top_k / E * capacity_factor)))
+
+    logits = x.astype(jnp.float32) @ router_w.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)    # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = expert_idx.reshape(-1)                        # (T*k,)
+    flat_w = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se = flat_e[order]
+    sw = flat_w[order]
+    st = order // top_k
+
+    first = jnp.searchsorted(se, se, side="left")
+    rank = jnp.arange(T * top_k, dtype=jnp.int32) - first.astype(jnp.int32)
+    ok = rank < C
+    rank_c = jnp.clip(rank, 0, C - 1)
+
+    gathered = jnp.where(ok[:, None], x[st], 0.0)          # local gather
+    buf = jnp.zeros((E, C, d), dtype=x.dtype)
+    buf = buf.at[se, rank_c].add(gathered)
+    buf = logical(buf, "experts", None, "embed")
+
+    h = jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(buf.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up.astype(buf.dtype))
+    h = logical(silu(h) * u, "experts", None, "dff")
+    out_buf = jnp.einsum("ecf,efd->ecd", h, w_down.astype(h.dtype))
+    out_buf = logical(out_buf, "experts", None, "embed")
+
+    back = out_buf[se, rank_c] * jnp.where(ok, sw, 0.0)[:, None].astype(x.dtype)
+    y = jnp.zeros((T, d), dtype=x.dtype).at[st].add(back)
+
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(expert_idx, E, dtype=jnp.float32).sum(1), axis=0)
+    aux = E * jnp.sum(frac_tokens * probs.mean(0))
+    return y, aux
+
+
+def moe_ffn(x, router_w, w_gate, w_up, w_down, top_k: int,
+            capacity_factor: float = 1.25):
+    """x: (T, d) tokens; returns (T, d), aux load-balance loss."""
+    mesh = active_mesh()
+    manual = tuple(a for a in ("pod", "data") if mesh is not None
+                   and a in mesh.shape and mesh.shape[a] > 1)
+    T = x.shape[0]
+    G = 1
+    if mesh is not None:
+        import numpy as np
+        G = int(np.prod([mesh.shape[a] for a in manual])) if manual else 1
+    if mesh is None or not manual or T % G != 0:
+        return _moe_local(x, router_w, w_gate, w_up, w_down, top_k,
+                          capacity_factor)
+
+    def local_fn(xl, rw, wg, wu, wd):
+        y, aux = _moe_local(xl, rw, wg, wu, wd, top_k, capacity_factor)
+        return y, aux.reshape(1)
+
+    sm = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(manual, None), P(), P(), P(), P()),
+        out_specs=(P(manual, None), P(manual)),
+        axis_names=set(manual), check_vma=False)
+    y, aux = sm(x, router_w, w_gate, w_up, w_down)
+    return y, aux.mean()

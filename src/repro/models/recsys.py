@@ -1,0 +1,174 @@
+"""xDeepFM (Lian et al., KDD'18): linear + CIN + deep MLP over sparse
+field embeddings.
+
+Assigned config: 39 sparse fields, embed_dim 10, CIN layers 200-200-200,
+MLP 400-400. The embedding *lookup* is the hot path (huge vocab tables,
+row-sharded over the "model" mesh axis). The CIN layer
+    x^k_{h,d} = sum_{i,j} W^k_{h,i,j} * x^{k-1}_{i,d} * x^0_{j,d}
+is an outer-product + contraction per embedding dim; we compute it as
+einsums and also ship a fused Pallas kernel (repro.kernels.cin).
+
+Shape cells: train_batch (65536 BCE training), serve_p99 (512 online),
+serve_bulk (262144 offline), retrieval_cand (1 user vs 1e6 candidates;
+user-field embeddings broadcast, item fields vary per candidate).
+
+SLING integration (DESIGN.md section 5): ``score_with_simrank`` fuses a
+SimRank single-source prior over the user-item click graph into the
+retrieval logits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import jax.random as jr
+import numpy as np
+
+from repro.launch.sharding import logical
+from repro.models import embeddings
+from repro.models.layers import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    n_fields: int = 39
+    vocab_per_field: int = 1_000_000
+    embed_dim: int = 10
+    cin_layers: tuple = (200, 200, 200)
+    mlp_layers: tuple = (400, 400)
+    n_user_fields: int = 20     # retrieval: fields fixed per query user
+    multi_hot_fields: int = 2   # trailing fields use EmbeddingBag
+    bag_size: int = 8
+    sim_prior: bool = False     # fuse SLING SimRank retrieval prior
+    dtype: Any = jnp.float32
+
+    def param_count(self) -> int:
+        e = self.n_fields * self.vocab_per_field * self.embed_dim
+        lin = self.n_fields * self.vocab_per_field
+        cin = 0
+        h_prev = self.n_fields
+        for h in self.cin_layers:
+            cin += h * h_prev * self.n_fields
+            h_prev = h
+        d0 = self.n_fields * self.embed_dim
+        mlp = 0
+        prev = d0
+        for m in self.mlp_layers:
+            mlp += prev * m + m
+            prev = m
+        return e + lin + cin + mlp + prev + sum(self.cin_layers)
+
+
+def init_params(cfg: RecsysConfig, key) -> dict:
+    ks = iter(jr.split(key, 16))
+    F, V, D = cfg.n_fields, cfg.vocab_per_field, cfg.embed_dim
+    p: dict = {
+        "tables": {
+            "embed": dense_init(next(ks), (F, V, D), scale=0.01),
+            "linear": dense_init(next(ks), (F, V, 1), scale=0.01),
+        },
+        "recsys": {},
+    }
+    r = p["recsys"]
+    h_prev = F
+    r["cin_w"] = []
+    for h in cfg.cin_layers:
+        r["cin_w"].append(dense_init(next(ks), (h, h_prev, F)))
+        h_prev = h
+    prev = F * D
+    r["mlp_w"], r["mlp_b"] = [], []
+    for m in cfg.mlp_layers:
+        r["mlp_w"].append(dense_init(next(ks), (prev, m)))
+        r["mlp_b"].append(jnp.zeros((m,)))
+        prev = m
+    r["mlp_out"] = dense_init(next(ks), (prev, 1))
+    r["cin_out"] = dense_init(next(ks), (sum(cfg.cin_layers), 1))
+    r["bias"] = jnp.zeros(())
+    if cfg.sim_prior:
+        r["sim_w"] = jnp.ones(()) * 0.1
+    return p
+
+
+def cin(x0, weights, use_kernel: bool = False):
+    """Compressed Interaction Network.
+
+    x0 (B, F, D); weights: list of (H_k, H_{k-1}, F).
+    Returns (B, sum_k H_k) sum-pooled features.
+    """
+    if use_kernel:
+        from repro.kernels.cin import ops as cin_ops
+        return cin_ops.cin_forward(x0, weights)
+    xk = x0
+    pooled = []
+    for W in weights:
+        # outer (B, H_prev, F, D) -> contract (h_prev, F) with W
+        outer = jnp.einsum("bhd,bfd->bhfd", xk, x0)
+        xk = jnp.einsum("bhfd,ihf->bid", outer, W)
+        pooled.append(xk.sum(-1))                  # (B, H_k)
+    return jnp.concatenate(pooled, axis=-1)
+
+
+def forward(cfg: RecsysConfig, params: dict, batch: dict):
+    """batch: ids (B, F) int32 [+ optional bag_ids/bag_vals for
+    multi-hot fields] -> logits (B,)."""
+    ids = batch["ids"]
+    B, F = ids.shape
+    emb = embeddings.field_lookup_all(params["tables"]["embed"], ids)
+    if cfg.multi_hot_fields > 0 and "mh_ids" in batch:
+        # trailing fields are multi-hot: EmbeddingBag overrides the
+        # single-id lookup for those field slots
+        mh = batch["mh_ids"]                       # (B, n_mh, bag)
+        n_mh = mh.shape[1]
+        f0 = F - n_mh
+        V, D = cfg.vocab_per_field, cfg.embed_dim
+        flat_table = params["tables"]["embed"][f0:].reshape(n_mh * V, D)
+        rows = (mh + jnp.arange(n_mh)[None, :, None] * V).reshape(-1)
+        bag = jnp.repeat(jnp.arange(B * n_mh), cfg.bag_size)
+        bagged = embeddings.embedding_bag(flat_table, rows, bag,
+                                          B * n_mh, mode="mean")
+        emb = emb.at[:, f0:, :].set(bagged.reshape(B, n_mh, D))
+    emb = logical(emb, "batch", "fields", None)
+
+    lin = embeddings.field_lookup_all(params["tables"]["linear"], ids)
+    lin_logit = lin.sum(axis=(1, 2))               # (B,)
+
+    r = params["recsys"]
+    cin_feat = cin(emb, r["cin_w"])
+    cin_logit = (cin_feat @ r["cin_out"])[:, 0]
+
+    h = emb.reshape(B, F * cfg.embed_dim)
+    for w, b in zip(r["mlp_w"], r["mlp_b"]):
+        h = jax.nn.relu(h @ w + b)
+        h = logical(h, "batch", None)
+    mlp_logit = (h @ r["mlp_out"])[:, 0]
+
+    logit = lin_logit + cin_logit + mlp_logit + r["bias"]
+    if cfg.sim_prior and "sim_scores" in batch:
+        logit = logit + r["sim_w"] * batch["sim_scores"]
+    return logit
+
+
+def loss_fn(cfg: RecsysConfig, params: dict, batch: dict):
+    logit = forward(cfg, params, batch).astype(jnp.float32)
+    y = batch["labels"].astype(jnp.float32)
+    # numerically stable BCE-with-logits
+    return jnp.mean(jnp.maximum(logit, 0) - logit * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+def score_candidates(cfg: RecsysConfig, params: dict, batch: dict):
+    """Retrieval cell: one user (n_user_fields ids) x C candidates
+    (remaining fields per candidate). Returns (C,) scores."""
+    user_ids = batch["user_ids"]        # (n_user_fields,)
+    cand_ids = batch["cand_ids"]        # (C, F - n_user_fields)
+    C = cand_ids.shape[0]
+    full = jnp.concatenate(
+        [jnp.tile(user_ids[None], (C, 1)), cand_ids], axis=1)
+    full = logical(full, "candidates", "fields")
+    scores = forward(cfg, params, {"ids": full})
+    if cfg.sim_prior and "sim_scores" in batch:
+        scores = scores + params["recsys"]["sim_w"] * batch["sim_scores"]
+    return logical(scores, "candidates")

@@ -1,0 +1,394 @@
+"""Decoder-only LM covering the 5 assigned transformer architectures.
+
+Features: GQA (grouped KV heads), RoPE, RMSNorm, SwiGLU FFN or MoE
+(top-1 / top-2), sliding-window attention, Gemma-style local:global
+layer interleave, Qwen-style qk-norm, scan-over-layers with stacked
+(L, ...) parameters + optional per-layer remat, chunked (online-softmax)
+attention for long sequences, and chunked cross-entropy so the (T, V)
+logits tensor never fully materializes.
+
+Entry points:
+  init_params / train_step-ready ``loss_fn``      (train_4k)
+  prefill     -> (last-token logits, KV cache)    (prefill_32k)
+  decode_step -> one token against a KV cache     (decode_32k, long_500k)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import jax.random as jr
+import numpy as np
+
+from repro.launch.sharding import logical
+from repro.models import moe as moe_lib
+from repro.models.layers import dense_init, rms_norm, rope, silu
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    capacity_factor: float = 1.25
+    window: int = 0            # sliding-window size for local layers
+    global_every: int = 0      # >0: layer l is global iff (l+1) % global_every == 0
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    attn_chunk: int = 0        # 0 = dense attention
+    loss_chunk: int = 0        # 0 = unchunked CE
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe_experts > 0
+
+    def layer_is_global(self) -> np.ndarray:
+        if self.window == 0:
+            return np.ones(self.n_layers, dtype=bool)
+        if self.global_every == 0:
+            return np.zeros(self.n_layers, dtype=bool)  # all windowed (SWA)
+        return np.array([(l + 1) % self.global_every == 0
+                         for l in range(self.n_layers)])
+
+    def param_count(self) -> int:
+        d, f, V = self.d_model, self.d_ff, self.vocab
+        attn = d * (self.n_heads + 2 * self.n_kv_heads) * self.d_head \
+            + self.n_heads * self.d_head * d
+        if self.is_moe:
+            ffn = 3 * d * f * self.moe_experts + d * self.moe_experts
+        else:
+            ffn = 3 * d * f
+        per_layer = attn + ffn + 2 * d
+        return V * d + self.n_layers * per_layer + d
+
+    def active_param_count(self) -> int:
+        if not self.is_moe:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        dense = self.param_count() - 3 * d * f * self.moe_experts * self.n_layers
+        return dense + 3 * d * f * max(self.moe_top_k, 1) * self.n_layers
+
+
+# ----------------------------------------------------------------------
+# params
+# ----------------------------------------------------------------------
+def init_params(cfg: LMConfig, key) -> dict:
+    L, d, H, K, dh, f, V = (cfg.n_layers, cfg.d_model, cfg.n_heads,
+                            cfg.n_kv_heads, cfg.d_head, cfg.d_ff, cfg.vocab)
+    ks = jr.split(key, 12)
+    blocks = {
+        "ln1": jnp.zeros((L, d), jnp.float32),
+        "ln2": jnp.zeros((L, d), jnp.float32),
+        "wq": dense_init(ks[0], (L, d, H, dh)),
+        "wk": dense_init(ks[1], (L, d, K, dh)),
+        "wv": dense_init(ks[2], (L, d, K, dh)),
+        "wo": dense_init(ks[3], (L, H, dh, d), scale=1.0 / np.sqrt(H * dh)),
+    }
+    if cfg.qk_norm:
+        blocks["qnorm"] = jnp.zeros((L, dh), jnp.float32)
+        blocks["knorm"] = jnp.zeros((L, dh), jnp.float32)
+    if cfg.is_moe:
+        E = cfg.moe_experts
+        blocks["router"] = dense_init(ks[4], (L, d, E))
+        blocks["moe_w_gate"] = dense_init(ks[5], (L, E, d, f))
+        blocks["moe_w_up"] = dense_init(ks[6], (L, E, d, f))
+        blocks["moe_w_down"] = dense_init(ks[7], (L, E, f, d),
+                                          scale=1.0 / np.sqrt(f))
+    else:
+        blocks["w_gate"] = dense_init(ks[5], (L, d, f))
+        blocks["w_up"] = dense_init(ks[6], (L, d, f))
+        blocks["w_down"] = dense_init(ks[7], (L, f, d),
+                                      scale=1.0 / np.sqrt(f))
+    return {
+        "embed": dense_init(ks[8], (V, d), scale=0.02),
+        "blocks": blocks,
+        "ln_f": jnp.zeros((d,), jnp.float32),
+    }
+
+
+# ----------------------------------------------------------------------
+# attention
+# ----------------------------------------------------------------------
+def _project_qkv(cfg: LMConfig, lp: dict, h, positions):
+    dt = cfg.dtype
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["qnorm"])
+        k = rms_norm(k, lp["knorm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    # sequence-parallel attention: queries (and scores) shard the query
+    # sequence over "model"; KV stays replicated across "model" so the
+    # score contraction needs no all-reduce (see DESIGN.md section 4)
+    q = logical(q, "batch", "q_seq", "heads", "head_dim")
+    k = logical(k, "batch", "kv_time", None, None)
+    v = logical(v, "batch", "kv_time", None, None)
+    return q, k, v
+
+
+def _expand_kv(cfg: LMConfig, k):
+    """(B, S, K, dh) -> (B, S, H, dh) by repeating each KV head."""
+    reps = cfg.n_heads // cfg.n_kv_heads
+    return jnp.repeat(k, reps, axis=2)
+
+
+def _attn_mask(q_pos, k_pos, is_global, window):
+    causal = k_pos[None, :] <= q_pos[:, None]
+    if window <= 0:
+        return causal
+    local = k_pos[None, :] > (q_pos[:, None] - window)
+    return causal & (is_global | local)
+
+
+def dense_attention(cfg: LMConfig, q, k, v, q_pos, k_pos, is_global):
+    k = _expand_kv(cfg, k)
+    v = _expand_kv(cfg, v)
+    scores = jnp.einsum("bshk,bthk->bhst", q, k).astype(jnp.float32)
+    scores = scores / np.sqrt(cfg.d_head)
+    scores = logical(scores, "batch", "heads", "seq", None)
+    mask = _attn_mask(q_pos, k_pos, is_global, cfg.window)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthk->bshk", w, v)
+
+
+def chunked_attention(cfg: LMConfig, q, k, v, q_pos, k_pos, is_global):
+    """Online-softmax attention scanning KV chunks (flash-style, no
+    (S, S) materialization). Chunk size cfg.attn_chunk."""
+    B, S, H, dh = q.shape
+    C = cfg.attn_chunk
+    assert S % C == 0, (S, C)
+    nc = S // C
+    k = _expand_kv(cfg, k)
+    v = _expand_kv(cfg, v)
+    kc = k.reshape(B, nc, C, H, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nc, C, H, dh).transpose(1, 0, 2, 3, 4)
+    kp = k_pos.reshape(nc, C)
+    acc0 = jnp.zeros((B, H, S, dh), jnp.float32)
+    m0 = jnp.full((B, H, S), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    qT = q.transpose(0, 2, 1, 3).astype(jnp.float32)  # (B, H, S, dh)
+
+    def body(carry, xs):
+        acc, m, l = carry
+        kci, vci, kpi = xs
+        s = jnp.einsum("bhsk,bthk->bhst", qT, kci.astype(jnp.float32))
+        s = s / np.sqrt(cfg.d_head)
+        s = logical(s, "batch", "heads", "seq", None)
+        mask = _attn_mask(q_pos, kpi, is_global, cfg.window)
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * corr + p.sum(-1)
+        pv = jnp.einsum("bhst,bthk->bhsk", p, vci.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        acc_new = logical(acc_new, "batch", "heads", "seq", "head_dim")
+        return (acc_new, m_new, l_new), None
+
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (kc, vc, kp))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attention(cfg: LMConfig, lp: dict, h, positions, is_global):
+    from repro.models.flash_attention import flash_attention
+    q, k, v = _project_qkv(cfg, lp, h, positions)
+    pos1d = positions[0]
+    if (cfg.attn_chunk > 0 and h.shape[1] > cfg.attn_chunk
+            and h.shape[1] % cfg.attn_chunk == 0):
+        ke = logical(_expand_kv(cfg, k), "batch", "kv_time", None, None)
+        ve = logical(_expand_kv(cfg, v), "batch", "kv_time", None, None)
+        o = flash_attention(q, ke, ve, is_global.astype(jnp.float32),
+                            cfg.window, cfg.attn_chunk)
+    else:
+        o = dense_attention(cfg, q, k, v, pos1d, pos1d, is_global)
+    # keep the attention output (and its cotangent) sequence-sharded:
+    # annotating with replicated "seq" here forced full-S backward dots
+    # with 10 GB score all-reduces per layer (EXPERIMENTS.md section Perf)
+    o = logical(o, "batch", "q_seq", "heads", "head_dim")
+    return jnp.einsum("bshk,hkd->bsd", o, lp["wo"].astype(cfg.dtype))
+
+
+# ----------------------------------------------------------------------
+# blocks / forward
+# ----------------------------------------------------------------------
+def _ffn(cfg: LMConfig, lp: dict, h):
+    B, S, d = h.shape
+    if cfg.is_moe:
+        y, aux = moe_lib.moe_ffn(
+            h.reshape(B * S, d), lp["router"], lp["moe_w_gate"],
+            lp["moe_w_up"], lp["moe_w_down"], cfg.moe_top_k,
+            cfg.capacity_factor)
+        return y.reshape(B, S, d), aux
+    dt = cfg.dtype
+    g = silu(jnp.einsum("bsd,df->bsf", h, lp["w_gate"].astype(dt)))
+    u = jnp.einsum("bsd,df->bsf", h, lp["w_up"].astype(dt))
+    gu = logical(g * u, "batch", "seq", "dff")
+    return jnp.einsum("bsf,fd->bsd", gu, lp["w_down"].astype(dt)), 0.0
+
+
+def _block(cfg: LMConfig, x, lp, is_global_l, positions):
+    h = rms_norm(x, lp["ln1"])
+    x = x + attention(cfg, lp, h, positions, is_global_l)
+    x = logical(x, "batch", "seq", "embed")
+    h2 = rms_norm(x, lp["ln2"])
+    y, aux = _ffn(cfg, lp, h2)
+    x = x + y
+    return logical(x, "batch", "seq", "embed"), aux
+
+
+def forward(cfg: LMConfig, params: dict, tokens):
+    """tokens (B, S) -> final hidden states (B, S, d)."""
+    B, S = tokens.shape
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = logical(x, "batch", "seq", "embed")
+    positions = jnp.arange(S, dtype=jnp.int32)[None].repeat(B, 0)
+    is_global = jnp.asarray(cfg.layer_is_global())
+
+    def body(x, xs):
+        lp, g = xs
+        blk = _block
+        if cfg.remat:
+            blk = jax.checkpoint(
+                _block, policy=jax.checkpoint_policies.nothing_saveable,
+                static_argnums=(0,))
+        x, aux = blk(cfg, x, lp, g, positions)
+        return x, aux
+
+    x, auxes = jax.lax.scan(body, x, (params["blocks"], is_global))
+    x = rms_norm(x, params["ln_f"])
+    return x, auxes.sum()
+
+
+def lm_loss(cfg: LMConfig, params: dict, tokens, targets):
+    """Chunked cross-entropy over tied embeddings."""
+    x, aux = forward(cfg, params, tokens)
+    emb = params["embed"].astype(cfg.dtype)
+    B, S, d = x.shape
+    C = cfg.loss_chunk if cfg.loss_chunk > 0 else S
+    assert S % C == 0
+    nc = S // C
+    xc = x.reshape(B, nc, C, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, nc, C).transpose(1, 0, 2)
+
+    @jax.checkpoint  # recompute the (B, C, V) logits chunk in backward
+    def body(tot, xs):
+        xi, ti = xs
+        logits = jnp.einsum("bcd,vd->bcv", xi, emb)
+        logits = logical(logits, "batch", "seq", "vocab")
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        # one-hot contraction instead of take_along_axis: the gather
+        # over a vocab-sharded dim would force an all-gather of the
+        # full logits chunk; the contraction reduces shard-locally.
+        onehot = jax.nn.one_hot(ti, logits.shape[-1], dtype=logits.dtype)
+        onehot = logical(onehot, "batch", "seq", "vocab")
+        gold = jnp.einsum("bcv,bcv->bc", logits, onehot)
+        return tot + (logz - gold).sum(), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, tc))
+    loss = tot / (B * S)
+    return loss + 0.01 * aux
+
+
+# ----------------------------------------------------------------------
+# serving: prefill + decode
+# ----------------------------------------------------------------------
+def init_cache(cfg: LMConfig, batch: int, max_seq: int) -> dict:
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, cfg.dtype),
+            "v": jnp.zeros(shape, cfg.dtype),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def prefill(cfg: LMConfig, params: dict, tokens):
+    """tokens (B, S) -> (last-token logits (B, V), cache)."""
+    B, S = tokens.shape
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    positions = jnp.arange(S, dtype=jnp.int32)[None].repeat(B, 0)
+    is_global = jnp.asarray(cfg.layer_is_global())
+
+    def body(x, xs):
+        lp, g = xs
+        h = rms_norm(x, lp["ln1"])
+        q, k, v = _project_qkv(cfg, lp, h, positions)
+        if (cfg.attn_chunk > 0 and S > cfg.attn_chunk
+                and S % cfg.attn_chunk == 0):
+            from repro.models.flash_attention import flash_attention
+            ke = logical(_expand_kv(cfg, k), "batch", "kv_time", None, None)
+            ve = logical(_expand_kv(cfg, v), "batch", "kv_time", None, None)
+            o = flash_attention(q, ke, ve, g.astype(jnp.float32),
+                                cfg.window, cfg.attn_chunk)
+        else:
+            o = dense_attention(cfg, q, k, v, positions[0], positions[0], g)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, lp["wo"].astype(cfg.dtype))
+        h2 = rms_norm(x, lp["ln2"])
+        y, _ = _ffn(cfg, lp, h2)
+        return x + y, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], is_global))
+    x = rms_norm(x, params["ln_f"])
+    logits = x[:, -1] @ params["embed"].astype(cfg.dtype).T
+    cache = {"k": logical(ks, "layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+             "v": logical(vs, "layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+             "len": jnp.asarray(S, jnp.int32)}
+    return logits.astype(jnp.float32), cache
+
+
+def decode_step(cfg: LMConfig, params: dict, cache: dict, token):
+    """One decode step. token (B,) int32 -> (logits (B, V), new cache)."""
+    B = token.shape[0]
+    S = cache["k"].shape[2]
+    pos = cache["len"]
+    x = params["embed"].astype(cfg.dtype)[token][:, None]  # (B, 1, d)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    k_pos = jnp.arange(S, dtype=jnp.int32)
+    is_global = jnp.asarray(cfg.layer_is_global())
+
+    def body(x, xs):
+        lp, g, ck, cv = xs
+        h = rms_norm(x, lp["ln1"])
+        q, k_new, v_new = _project_qkv(cfg, lp, h, positions)
+        ck = jax.lax.dynamic_update_slice(ck, k_new, (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v_new, (0, pos, 0, 0))
+        ck = logical(ck, "batch", "kv_seq", "kv_heads", "head_dim")
+        cv = logical(cv, "batch", "kv_seq", "kv_heads", "head_dim")
+        ke = _expand_kv(cfg, ck)
+        ve = _expand_kv(cfg, cv)
+        scores = jnp.einsum("bshk,bthk->bhst", q, ke).astype(jnp.float32)
+        scores = scores / np.sqrt(cfg.d_head)
+        # split-KV decode: scores shard over the KV-sequence axis;
+        # softmax/AV then reduce with tiny (B, H)-sized collectives
+        scores = logical(scores, "batch", "heads", None, "kv_seq")
+        valid = (k_pos <= pos)[None, :]
+        if cfg.window > 0:
+            local = (k_pos > pos - cfg.window)[None, :]
+            valid = valid & (g | local)
+        scores = jnp.where(valid[None, None], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        o = jnp.einsum("bhst,bthk->bshk", w, ve)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, lp["wo"].astype(cfg.dtype))
+        h2 = rms_norm(x, lp["ln2"])
+        y, _ = _ffn(cfg, lp, h2)
+        return x + y, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["blocks"], is_global, cache["k"], cache["v"]))
+    x = rms_norm(x, params["ln_f"])
+    logits = x[:, 0] @ params["embed"].astype(cfg.dtype).T
+    new_cache = {"k": ks, "v": vs, "len": pos + 1}
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,86 @@
+"""AdamW from scratch (optax is not available offline).
+
+States are kept in fp32 regardless of param dtype; update math follows
+Loshchilov & Hutter with bias correction. The pytree layout is
+(m, v, step) mirroring params, so any sharding applied to params is
+inherited per-leaf by the optimizer state (FSDP-friendly).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray   # () int32
+    m: Any              # pytree like params, fp32
+    v: Any              # pytree like params, fp32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float | None = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, dtype=jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                          v=jax.tree.map(jnp.copy, zeros))
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        if self.grad_clip is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, self.grad_clip / (gn + 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g32
+            v2 = b2 * v + (1 - b2) * g32 * g32
+            mhat = m2 / c1
+            vhat = v2 / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            p2 = p.astype(jnp.float32) - lr * delta
+            return p2.astype(p.dtype), m2, v2
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.m)
+        flat_v = tdef.flatten_up_to(state.v)
+        out = [upd(p, g, m, v)
+               for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def cosine_schedule(peak: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(s < warmup, warm, cos)
+    return lr

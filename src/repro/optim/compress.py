@@ -1,0 +1,34 @@
+"""Gradient compression with error feedback (optional, off by default).
+
+bf16 compress-before-reduce halves cross-pod gradient traffic; the
+residual (fp32 grad - bf16(grad)) is carried to the next step so the
+compression error telescopes instead of accumulating (Seide et al.
+error feedback). Dry-run-verified: the compressed train step lowers and
+the pod-axis all-reduce payload halves (EXPERIMENTS.md section Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_feedback(grads, residual):
+    """Returns (compressed bf16 grads to reduce, new residual)."""
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q = corrected.astype(jnp.bfloat16)
+        return q, corrected - q.astype(jnp.float32)
+    flat = jax.tree.map(one, grads, residual)
+    q = jax.tree.map(lambda t: t[0], flat,
+                     is_leaf=lambda x: isinstance(x, tuple))
+    r = jax.tree.map(lambda t: t[1], flat,
+                     is_leaf=lambda x: isinstance(x, tuple))
+    return q, r
+
+
+def decompress(q):
+    return jax.tree.map(lambda g: g.astype(jnp.float32), q)

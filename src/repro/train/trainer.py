@@ -1,0 +1,97 @@
+"""Training loop: grad accumulation, checkpoint/restart, metrics.
+
+Works on 1 CPU device (examples, tests) and on a mesh (launch/train.py
+passes shardings). The loop is restart-safe: data is step-keyed and the
+checkpoint carries the step cursor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamW
+from repro.train import checkpoint as ckpt_lib
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    grad_accum: int = 1
+
+
+def make_accum_step(loss_fn: Callable, opt: AdamW, accum: int):
+    """loss_fn(params, batch) -> scalar. Returns step(params, opt_state,
+    batches) where batches is a length-`accum` stacked pytree."""
+
+    def step(params, opt_state, batches):
+        def one(i, grads_loss):
+            grads, loss = grads_loss
+            b = jax.tree.map(lambda x: x[i], batches)
+            l, g = jax.value_and_grad(loss_fn)(params, b)
+            return (jax.tree.map(jnp.add, grads, g), loss + l)
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            params)
+        grads, loss = jax.lax.fori_loop(0, accum, one,
+                                        (zero, jnp.zeros((), jnp.float32)))
+        grads = jax.tree.map(lambda g: g / accum, grads)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss / accum
+
+    return step
+
+
+def fit(loss_fn: Callable, params, batch_at: Callable[[int], Any],
+        opt: Optional[AdamW] = None, cfg: TrainerConfig = TrainerConfig(),
+        opt_state=None, start_step: Optional[int] = None,
+        log: Callable[[str], None] = print):
+    """Generic fit loop. ``batch_at(step)`` supplies data (step-keyed).
+
+    Resumes from cfg.ckpt_dir when a checkpoint exists (restart path).
+    Returns (params, opt_state, history).
+    """
+    opt = opt or AdamW()
+    if opt_state is None:
+        opt_state = opt.init(params)
+    step0 = 0
+    if start_step is not None:
+        step0 = start_step
+    elif cfg.ckpt_dir:
+        last = ckpt_lib.latest_step(cfg.ckpt_dir)
+        if last is not None:
+            params, opt_state, mf = ckpt_lib.restore(
+                cfg.ckpt_dir, last, params, opt_state)
+            step0 = mf["step"] + 1
+            log(f"[trainer] restored step {last}, resuming at {step0}")
+
+    if cfg.grad_accum > 1:
+        step_fn = jax.jit(make_accum_step(loss_fn, opt, cfg.grad_accum))
+    else:
+        @jax.jit
+        def step_fn(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, opt_state, loss
+
+    history = []
+    t0 = time.perf_counter()
+    for step in range(step0, cfg.steps):
+        batch = batch_at(step)
+        batch = jax.tree.map(jnp.asarray, batch)
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+        if step % cfg.log_every == 0 or step == cfg.steps - 1:
+            l = float(loss)
+            dt = time.perf_counter() - t0
+            log(f"[trainer] step {step} loss {l:.4f} ({dt:.1f}s)")
+            history.append((step, l))
+        if cfg.ckpt_dir and (step % cfg.ckpt_every == 0
+                             or step == cfg.steps - 1):
+            ckpt_lib.save(cfg.ckpt_dir, step, params, opt_state)
+    return params, opt_state, history

@@ -1,0 +1,28 @@
+import os
+import sys
+
+# tests see ONE device (the dry-run's 512 placeholder devices are set
+# only inside launch/dryrun.py, per the assignment contract)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    from repro.graph import generators
+    return generators.barabasi_albert(150, 3, seed=1, directed=False)
+
+
+@pytest.fixture(scope="session")
+def ground_truth(small_graph):
+    from repro.baselines import power
+    return power.all_pairs(small_graph, c=0.6, iters=50)
+
+
+@pytest.fixture(scope="session")
+def sling_index(small_graph):
+    from repro.core import build
+    return build.build_index(small_graph, eps=0.1, exact_d=True, seed=0)

@@ -1,0 +1,56 @@
+"""Property-testing shim (hypothesis is not installable offline).
+
+``@forall(cases)`` runs a test over a deterministic sweep of generated
+cases and reports the first failing case with its seed, which is the
+recall-relevant part of hypothesis for this suite (shrinking is
+approximated by ordering cases smallest-first).
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+
+import numpy as np
+
+
+def forall(case_gen, n: int = 25):
+    """case_gen(rng, size) -> dict of kwargs; sizes ramp up 1..n."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            for i in range(n):
+                rng = np.random.default_rng(1000 + i)
+                case = case_gen(rng, i)
+                try:
+                    fn(**case)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"property failed on case #{i}: "
+                        f"{ {k: getattr(v, 'shape', v) for k, v in case.items()} }\n{e}"
+                    ) from e
+        # pytest must not introspect the wrapped signature as fixtures
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+def grid(**axes):
+    """Cartesian sweep decorator: @grid(x=[1,2], y=['a','b'])."""
+    keys = list(axes)
+    combos = list(itertools.product(*axes.values()))
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            for combo in combos:
+                kwargs = dict(zip(keys, combo))
+                try:
+                    fn(**kwargs)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"grid case failed: {kwargs}\n{e}") from e
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        return wrapper
+    return deco

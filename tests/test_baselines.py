@@ -1,0 +1,60 @@
+"""Baselines: power method (Lemma 1), MC, linearization (+ Appendix A)."""
+import numpy as np
+
+
+def test_power_fixed_point(small_graph, ground_truth):
+    from repro.baselines import power
+    g, S = small_graph, ground_truth
+    # S satisfies the SimRank equation
+    W = power.transition_dense(g)
+    S2 = 0.6 * (W @ S @ W.T)
+    np.fill_diagonal(S2, 1.0)
+    assert np.abs(S2 - S).max() < 1e-9
+
+
+def test_power_lemma1_iterations():
+    from repro.baselines import power
+    t = power.iterations_for(0.01, 0.6)
+    assert 0.6 ** (t + 1) / (1 - 0.6) <= 0.011
+
+
+def test_mc_error(small_graph, ground_truth):
+    from repro.baselines import montecarlo
+    g, S = small_graph, ground_truth
+    mc = montecarlo.build(g, eps=0.1, seed=0, n_w_override=4000)
+    rng = np.random.default_rng(0)
+    us = rng.integers(0, g.n, 40)
+    vs = rng.integers(0, g.n, 40)
+    errs = [abs(montecarlo.query_pair(mc, int(u), int(v)) - S[u, v])
+            for u, v in zip(us, vs)]
+    assert max(errs) <= 0.1
+
+
+def test_linearize_error(small_graph, ground_truth):
+    from repro.baselines import linearize
+    g, S = small_graph, ground_truth
+    lin = linearize.build(g, R=200, seed=0)
+    rng = np.random.default_rng(1)
+    us = rng.integers(0, g.n, 30)
+    vs = rng.integers(0, g.n, 30)
+    errs = [abs(linearize.query_pair(lin, g, int(u), int(v)) - S[u, v])
+            for u, v in zip(us, vs)]
+    assert max(errs) <= 0.05  # works on benign graphs...
+    ss = linearize.query_single_source(lin, g, 3)
+    assert np.abs(ss - S[3]).max() <= 0.05
+
+
+def test_linearize_appendix_a_failure_mode():
+    """...but its system matrix loses diagonal dominance on the
+    directed 4-cycle at c=0.6 (paper Appendix A / Figure 8)."""
+    from repro.baselines import linearize
+    from repro.graph import generators
+    cyc = generators.cycle(4)
+    M = linearize.system_matrix(cyc, c=0.6, T=60, R=None)
+    assert linearize.system_matrix_dd_margin(M) < 0
+
+
+def test_mc_space_matches_formula(small_graph):
+    from repro.baselines import montecarlo
+    mc = montecarlo.build(small_graph, eps=0.2, seed=0, n_w_override=100)
+    assert mc.walks.shape == (small_graph.n, 100, mc.t + 1)

@@ -1,0 +1,55 @@
+"""Correction-factor estimation (Algorithms 1 and 4)."""
+import numpy as np
+
+
+def test_exact_shortcuts():
+    from repro.core import diagonal, theory
+    from repro.graph import generators
+    g = generators.cycle(10)  # every node has in-degree 1
+    p = theory.plan(eps=0.2, n=g.n)
+    d = diagonal.estimate_diagonal(g, p, seed=0)
+    np.testing.assert_allclose(d, 1.0 - 0.6, atol=1e-7)
+
+
+def test_alg4_within_eps_d(small_graph):
+    from repro.core import diagonal, theory
+    g = small_graph
+    p = theory.plan(eps=0.15, n=g.n)
+    d_est = diagonal.estimate_diagonal(g, p, seed=0, adaptive=True)
+    d_true = diagonal.exact_diagonal(g, 0.6)
+    assert np.abs(d_est - d_true).max() <= p.eps_d, \
+        np.abs(d_est - d_true).max()
+
+
+def test_alg1_within_eps_d(small_graph):
+    from repro.core import diagonal, theory
+    g = small_graph
+    p = theory.plan(eps=0.3, n=g.n)
+    d_est = diagonal.estimate_diagonal(g, p, seed=1, adaptive=False)
+    d_true = diagonal.exact_diagonal(g, 0.6)
+    assert np.abs(d_est - d_true).max() <= p.eps_d
+
+
+def test_d_range(small_graph):
+    from repro.core import diagonal
+    d = diagonal.exact_diagonal(small_graph, 0.6)
+    assert np.all(d <= 1.0 + 1e-9)
+    assert np.all(d >= 1.0 - 0.6 - 1e-9)  # d_k >= 1 - c
+
+
+def test_theory_plan_satisfies_theorem1():
+    from repro.core import theory
+    for eps in (0.025, 0.05, 0.1, 0.3):
+        p = theory.plan(eps=eps, n=10000)
+        assert p.error_bound() <= eps * (1 + 1e-6) + p.walk_tail
+        assert p.eps_d > 0 and p.theta > 0
+        assert p.hp_entry_bound() > 0
+
+
+def test_paper_parameterization():
+    """Section 7.1: eps_d=0.005, theta=0.000725 satisfy eps=0.025."""
+    import math
+    c, eps_d, theta = 0.6, 0.005, 0.000725
+    sc = math.sqrt(c)
+    lhs = eps_d / (1 - c) + 2 * sc * theta / ((1 - sc) * (1 - c))
+    assert lhs <= 0.025

@@ -1,0 +1,58 @@
+"""HP-table construction (Algorithm 2): Lemma-7 guarantees."""
+import numpy as np
+
+
+def test_hp_values_vs_exact(small_graph):
+    from repro.core import hp_index
+    g = small_graph
+    theta, sc, L = 0.01, 0.7746, 10
+    tab = hp_index.build_hp_table(g, theta, sc, L, block=64)
+    targets = np.arange(g.n)
+    exact = hp_index.exact_hp_vectors(g, targets, sc, L)  # (L+1, n, n)
+    checked = 0
+    for v in range(0, g.n, 13):
+        for (l, k, val) in tab.entries(v):
+            h_true = exact[l, v, k]
+            assert val > theta                      # kept entries > theta
+            assert val <= h_true + 1e-6             # never overestimates
+            deficit = (1 - sc ** l) / (1 - sc) * theta
+            assert h_true - val <= deficit + 1e-6   # Lemma 7 deficit
+            checked += 1
+    assert checked > 50
+
+
+def test_hp_size_bound(small_graph):
+    from repro.core import hp_index
+    g = small_graph
+    theta, sc = 0.005, 0.7746
+    tab = hp_index.build_hp_table(g, theta, sc, 14, block=64)
+    bound = int(np.ceil(1.0 / ((1 - sc) * theta)))
+    assert int(tab.counts.max()) <= bound           # Lemma 7 O(1/theta)
+
+
+def test_step0_entry_is_one(small_graph):
+    from repro.core import hp_index
+    tab = hp_index.build_hp_table(small_graph, 0.01, 0.7746, 8, block=64)
+    for v in range(0, small_graph.n, 17):
+        ents = {(l, k): val for l, k, val in tab.entries(v)}
+        assert abs(ents[(0, v)] - 1.0) < 1e-7
+
+
+def test_keys_sorted_and_padded(small_graph):
+    from repro.core import hp_index
+    tab = hp_index.build_hp_table(small_graph, 0.01, 0.7746, 8, block=64)
+    for v in range(0, small_graph.n, 11):
+        c = int(tab.counts[v])
+        keys = tab.keys[v]
+        assert np.all(np.diff(keys[:c]) > 0)
+        assert np.all(keys[c:] == hp_index.INT32_PAD_KEY)
+
+
+def test_spill_mode_equals_in_memory(tmp_path, small_graph):
+    from repro.core import hp_index
+    g = small_graph
+    a = hp_index.build_hp_table(g, 0.01, 0.7746, 8, block=32)
+    b = hp_index.build_hp_table(g, 0.01, 0.7746, 8, block=32,
+                                spill_dir=str(tmp_path))
+    assert np.array_equal(a.counts, b.counts)
+    np.testing.assert_allclose(a.vals, b.vals, atol=0)

@@ -1,0 +1,116 @@
+"""Paper-validation: SLING meets its Theorem-1 error bound and all
+query paths agree (host merge-join == device searchsorted == kernel)."""
+import numpy as np
+import pytest
+
+
+def test_pair_error_bound(small_graph, ground_truth, sling_index):
+    g, S, idx = small_graph, ground_truth, sling_index
+    rng = np.random.default_rng(0)
+    us = rng.integers(0, g.n, 300)
+    vs = rng.integers(0, g.n, 300)
+    est = idx.query_pairs(us, vs)
+    err = np.abs(est - S[us, vs])
+    assert err.max() <= idx.plan.eps, err.max()
+    # paper Fig 5: errors are typically far below eps
+    assert err.mean() < idx.plan.eps / 4
+
+
+def test_self_similarity(small_graph, sling_index):
+    idx = sling_index
+    us = np.arange(0, small_graph.n, 7)
+    est = idx.query_pairs(us, us)
+    assert np.all(est <= 1.0 + 1e-5)
+    assert np.all(est >= 1.0 - idx.plan.eps)
+
+
+def test_symmetry(small_graph, sling_index):
+    rng = np.random.default_rng(1)
+    us = rng.integers(0, small_graph.n, 64)
+    vs = rng.integers(0, small_graph.n, 64)
+    a = sling_index.query_pairs(us, vs)
+    b = sling_index.query_pairs(vs, us)
+    np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_host_equals_device(small_graph, sling_index):
+    rng = np.random.default_rng(2)
+    us = rng.integers(0, small_graph.n, 32)
+    vs = rng.integers(0, small_graph.n, 32)
+    dev = sling_index.query_pairs(us, vs)
+    host = np.array([sling_index.query_pair_host(int(u), int(v))
+                     for u, v in zip(us, vs)])
+    np.testing.assert_allclose(dev, host, atol=1e-5)
+
+
+def test_single_source_variants(small_graph, ground_truth, sling_index):
+    from repro.core.single_source import (single_source_device,
+                                          single_source_horner,
+                                          single_source_paper)
+    g, S, idx = small_graph, ground_truth, sling_index
+    u = 5
+    paper = single_source_paper(idx, g, u)
+    horner = single_source_horner(idx, g, u)
+    dev = single_source_device(idx, g, np.array([u]))[0]
+    assert np.abs(paper - S[u]).max() <= idx.plan.eps
+    assert np.abs(horner - S[u]).max() <= idx.plan.eps
+    # Horner prunes at the tightest threshold -> at least as accurate
+    assert np.abs(horner - S[u]).max() <= np.abs(paper - S[u]).max() + 1e-9
+    assert np.abs(dev - S[u]).max() <= idx.plan.eps + 1e-3
+
+
+def test_save_load_roundtrip(tmp_path, small_graph, sling_index):
+    path = str(tmp_path / "index.npz")
+    sling_index.save(path)
+    from repro.core.index import SlingIndex
+    idx2 = SlingIndex.load(path)
+    rng = np.random.default_rng(3)
+    us = rng.integers(0, small_graph.n, 16)
+    vs = rng.integers(0, small_graph.n, 16)
+    np.testing.assert_allclose(sling_index.query_pairs(us, vs),
+                               idx2.query_pairs(us, vs), atol=1e-7)
+
+
+def test_space_reduction_preserves_accuracy(small_graph, ground_truth):
+    from repro.core import build, optimizations
+    g, S = small_graph, ground_truth
+    idx = build.build_index(g, eps=0.1, exact_d=True, seed=0)
+    saved = optimizations.apply_space_reduction(idx, g, gamma=10.0)
+    assert saved >= 0
+    rng = np.random.default_rng(4)
+    us = rng.integers(0, g.n, 100)
+    vs = rng.integers(0, g.n, 100)
+    est = np.array([idx.query_pair_host(int(u), int(v), g)
+                    for u, v in zip(us, vs)])
+    err = np.abs(est - S[us, vs])
+    assert err.max() <= idx.plan.eps, err.max()
+
+
+def test_enhancement_improves_or_preserves(small_graph, ground_truth):
+    from repro.core import build, optimizations
+    g, S = small_graph, ground_truth
+    idx = build.build_index(g, eps=0.1, exact_d=True, seed=0)
+    rng = np.random.default_rng(5)
+    us = rng.integers(0, g.n, 80)
+    vs = rng.integers(0, g.n, 80)
+    base = np.array([idx.query_pair_host(int(u), int(v))
+                     for u, v in zip(us, vs)])
+    optimizations.mark_for_enhancement(idx, g)
+    enh = np.array([idx.query_pair_host(int(u), int(v), g)
+                    for u, v in zip(us, vs)])
+    true = S[us, vs]
+    # enhancement only adds mass that the true score also contains
+    assert np.abs(enh - true).mean() <= np.abs(base - true).mean() + 1e-9
+    assert np.all(enh <= true + idx.plan.eps)
+
+
+def test_sampled_d_index_meets_bound(small_graph, ground_truth):
+    from repro.core import build
+    g, S = small_graph, ground_truth
+    idx = build.build_index(g, eps=0.25, exact_d=False, seed=7,
+                            adaptive=True)
+    rng = np.random.default_rng(6)
+    us = rng.integers(0, g.n, 200)
+    vs = rng.integers(0, g.n, 200)
+    err = np.abs(idx.query_pairs(us, vs) - S[us, vs])
+    assert err.max() <= idx.plan.eps, err.max()

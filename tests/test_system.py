@@ -1,0 +1,115 @@
+"""End-to-end behaviour tests for the whole system."""
+import numpy as np
+import jax.numpy as jnp
+
+
+def test_end_to_end_index_and_all_queries(small_graph, ground_truth):
+    """Build -> single-pair (3 paths) -> single-source (3 paths) ->
+    top-k precision, mirroring the paper's experiment suite."""
+    from repro.core import build
+    from repro.core.single_source import (single_source_device,
+                                          single_source_horner)
+    g, S = small_graph, ground_truth
+    idx = build.build_index(g, eps=0.1, exact_d=True, seed=0)
+
+    u = 9
+    ss = single_source_horner(idx, g, u)
+    assert np.abs(ss - S[u]).max() <= idx.plan.eps
+    dev = single_source_device(idx, g, np.array([u]))[0]
+    assert np.abs(dev - S[u]).max() <= idx.plan.eps + 1e-3
+
+    # top-k precision (paper Fig 7): compare against ground truth
+    iu = np.triu_indices(g.n, 1)
+    true_scores = S[iu]
+    k = 200
+    top_true = set(map(tuple, np.transpose(iu)[np.argsort(-true_scores)[:k]]))
+    est = idx.query_pairs(iu[0], iu[1])
+    top_est = set(map(tuple, np.transpose(iu)[np.argsort(-est)[:k]]))
+    precision = len(top_true & top_est) / k
+    assert precision >= 0.9, precision
+
+
+def test_gnn_with_simrank_features_trains(small_graph):
+    """DESIGN.md section 5: SLING single-source scores as GNN features."""
+    import dataclasses
+    import jax.random as jr
+    from repro.core import build
+    from repro.core.single_source import single_source_device
+    from repro.configs import base as cfg_base
+    from repro.data import pipeline
+    from repro.models import gnn as G
+    from repro.optim.adamw import AdamW
+    from repro.train.trainer import TrainerConfig, fit
+    g = small_graph
+    idx = build.build_index(g, eps=0.2, exact_d=True)
+    anchors = np.array([0, 1, 2, 3], dtype=np.int32)
+    sim = single_source_device(idx, g, anchors).T  # (n, 4)
+    cfg = dataclasses.replace(cfg_base.get("gcn-cora").smoke(),
+                              sim_feats=4)
+    batch = pipeline.gnn_batch(g, cfg.d_in, cfg.n_classes, sim_feat=sim)
+    params = G.init_params(cfg, jr.PRNGKey(0))
+    _, _, hist = fit(lambda p, b: G.loss_fn(cfg, p, b), params,
+                     lambda s: batch, AdamW(lr=5e-3),
+                     TrainerConfig(steps=25, log_every=5),
+                     log=lambda *_: None)
+    assert hist[-1][1] < hist[0][1]  # loss decreased
+
+
+def test_simrank_weighted_sampling(small_graph):
+    from repro.core import build
+    from repro.graph import sampler
+    g = small_graph
+    idx = build.build_index(g, eps=0.3, exact_d=True)
+    rng = np.random.default_rng(0)
+    sub = sampler.sample_subgraph(g, np.array([3, 4]), (3,), rng,
+                                  n_pad=16, m_pad=8, sim_index=idx)
+    assert sub.edge_mask.sum() > 0
+
+
+def test_out_of_core_build_equivalence(tmp_path, small_graph):
+    from repro.core import build
+    a = build.build_index(small_graph, eps=0.2, exact_d=True, seed=0)
+    b = build.build_index(small_graph, eps=0.2, exact_d=True, seed=0,
+                          spill_dir=str(tmp_path))
+    np.testing.assert_array_equal(a.hp.counts, b.hp.counts)
+    rng = np.random.default_rng(0)
+    us = rng.integers(0, small_graph.n, 20)
+    vs = rng.integers(0, small_graph.n, 20)
+    np.testing.assert_allclose(a.query_pairs(us, vs),
+                               b.query_pairs(us, vs), atol=1e-7)
+
+
+def test_recsys_sling_retrieval_prior():
+    """xdeepfm retrieval fused with a SimRank prior over the user-item
+    click graph (DESIGN.md section 5)."""
+    import dataclasses
+    import jax
+    import jax.random as jr
+    from repro.configs import base as cfg_base
+    from repro.core import build
+    from repro.core.single_source import single_source_device
+    from repro.graph import generators
+    from repro.models import recsys as R
+    n_users, n_items = 60, 80
+    g = generators.bipartite(n_users, n_items, 600, seed=0)
+    idx = build.build_index(g, eps=0.3, exact_d=True)
+    user = 7
+    sim = single_source_device(idx, g, np.array([user]))[0]
+    item_scores = sim[n_users:n_users + n_items]
+    cfg = dataclasses.replace(cfg_base.get("xdeepfm").smoke(),
+                              sim_prior=True)
+    params = R.init_params(cfg, jr.PRNGKey(0))
+    C = n_items
+    rb = {"user_ids": jr.randint(jr.PRNGKey(1), (cfg.n_user_fields,), 0,
+                                 cfg.vocab_per_field),
+          "cand_ids": jr.randint(
+              jr.PRNGKey(2), (C, cfg.n_fields - cfg.n_user_fields), 0,
+              cfg.vocab_per_field),
+          "sim_scores": jnp.asarray(item_scores, jnp.float32)}
+    base_scores = R.score_candidates(
+        dataclasses.replace(cfg, sim_prior=False), params,
+        {k: rb[k] for k in ("user_ids", "cand_ids")})
+    fused = R.score_candidates(cfg, params, rb)
+    delta = np.asarray(fused) - np.asarray(base_scores)
+    w = float(params["recsys"]["sim_w"])
+    np.testing.assert_allclose(delta, w * item_scores, atol=1e-5)

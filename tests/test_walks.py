@@ -1,0 +1,45 @@
+"""sqrt(c)-walk engine: geometric length, Lemma-3 estimator."""
+import math
+
+import numpy as np
+
+
+def test_meet_probability_is_simrank(small_graph, ground_truth):
+    from repro.core import walks
+    g, S = small_graph, ground_truth
+    pairs = [(3, 11), (0, 1), (20, 40)]
+    for u, v in pairs:
+        est = walks.estimate_simrank_by_walks(g, u, v, c=0.6,
+                                              n_walks=20000, seed=0)
+        assert abs(est - S[u, v]) < 0.02, (u, v, est, S[u, v])
+
+
+def test_equal_pair_meets_trivially(small_graph):
+    from repro.core import walks
+    est = walks.estimate_simrank_by_walks(small_graph, 4, 4, c=0.6,
+                                          n_walks=500, seed=0)
+    assert est == 1.0
+
+
+def test_default_t_max():
+    from repro.core import walks
+    t = walks.default_t_max(math.sqrt(0.6), tail=1e-4)
+    assert math.sqrt(0.6) ** t <= 1e-4
+    assert math.sqrt(0.6) ** (t - 1) > 1e-4
+
+
+def test_walk_positions_stop_monotone(small_graph):
+    import jax.random as jr
+    from repro.core import walks
+    dg = walks.DeviceGraph.from_graph(small_graph)
+    starts = np.arange(64, dtype=np.int32)
+    traj = np.asarray(walks.walk_positions(
+        dg.in_ptr, dg.in_idx, dg.in_deg, starts, jr.PRNGKey(0),
+        0.7746, 20))
+    # once a walk stops (-1) it stays stopped
+    stopped = traj == -1
+    assert np.all(stopped[:, 1:] >= stopped[:, :-1] - 1)  # monotone flags
+    for row in stopped:
+        idx = np.flatnonzero(row)
+        if len(idx):
+            assert row[idx[0]:].all()
