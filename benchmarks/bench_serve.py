@@ -1,0 +1,42 @@
+"""Serving-path smoke/latency benchmark: all three query types through
+the unified QueryEngine on one graph. This is the regression guard for
+engine latency (scripts/ci.sh runs it on n=500 via ``run.py --smoke``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import build
+from repro.graph import generators
+from repro.serve import EngineConfig, QueryEngine
+
+
+def run(n: int = 500, eps: float = 0.1, n_q: int = 32,
+        batch: int = 8, k: int = 10):
+    g = generators.barabasi_albert(n, 4, seed=0, directed=False)
+    t = timeit(lambda: build.build_index(g, eps=eps, seed=0), repeat=1)
+    emit(f"serve/build_index/n={n}", t, "preprocess")
+    idx = build.build_index(g, eps=eps, seed=0)
+    eng = QueryEngine(idx, g, EngineConfig(
+        pair_batch=max(batch, 16), source_batch=batch, cache_size=0))
+    warm = eng.warmup()
+    for path, secs in warm.items():
+        emit(f"serve/warmup/{path}/n={n}", 1e6 * secs, "compile")
+
+    rng = np.random.default_rng(0)
+    qs = rng.integers(0, g.n, n_q).astype(np.int32)
+    vs = rng.integers(0, g.n, n_q).astype(np.int32)
+    shapes_before = len(eng.stats()["unique_shapes"])
+
+    t = timeit(lambda: eng.pairs(qs, vs))
+    emit(f"serve/pair/engine/n={n}", t / n_q, "per query")
+    t = timeit(lambda: eng.single_source(qs))
+    emit(f"serve/source/engine/n={n}", t / n_q, "per query")
+    t = timeit(lambda: eng.topk(qs, k))
+    emit(f"serve/topk/engine/n={n}", t / n_q, f"k={k}")
+
+    grew = len(eng.stats()["unique_shapes"]) - shapes_before
+    emit(f"serve/recompiles_after_warmup/n={n}", float(grew),
+         "must be 0")
+    assert grew == 0, "engine recompiled after warmup"

@@ -36,6 +36,15 @@ def run(sizes=(300, 1000, 3000), eps: float = 0.15, n_q: int = 5):
         t = timeit(lambda: single_source_device(idx, g, batch))
         emit(f"fig2/single_source/sling_device_batched/n={n}", t / n_q,
              "amortized")
+        # serving path: same push, but through the engine's fixed-shape
+        # dispatch (pad + chunk) -- measures the serving overhead
+        from repro.serve import EngineConfig, QueryEngine
+        eng = QueryEngine(idx, g, EngineConfig(source_batch=len(batch),
+                                               cache_size=0))
+        eng.warmup()
+        t = timeit(lambda: eng.single_source(batch))
+        emit(f"fig2/single_source/sling_engine/n={n}", t / n_q,
+             "QueryEngine")
         if n <= 300:
             t = timeit(lambda: single_source_naive(idx, g, int(qs[0])),
                        repeat=1)

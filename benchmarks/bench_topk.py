@@ -1,12 +1,13 @@
-"""Paper Figure 7: precision of the top-k SimRank pairs."""
+"""Paper Figure 7 (top-k precision) + engine top-k serving latency."""
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, timeit
 from repro.baselines import linearize, power
 from repro.core import build
 from repro.graph import generators
+from repro.serve import EngineConfig, QueryEngine
 
 
 def run(n: int = 300, eps: float = 0.1, ks=(100, 200, 400)):
@@ -25,3 +26,26 @@ def run(n: int = 300, eps: float = 0.1, ks=(100, 200, 400)):
         p_lin = len(top_true & set(np.argsort(-lin_scores)[:k].tolist())) / k
         emit(f"fig7/topk/sling/k={k}", 1e6 * p_sling, "precision x1e-6")
         emit(f"fig7/topk/linearize/k={k}", 1e6 * p_lin, "precision x1e-6")
+
+    run_engine(n=n, eps=eps)
+
+
+def run_engine(n: int = 300, eps: float = 0.1, ks=(1, 10, 50),
+               n_q: int = 16, batch: int = 8):
+    """Serving-path latency: fused Horner-push + top_k via QueryEngine
+    vs the dense single-source + host argsort strawman."""
+    g = generators.barabasi_albert(n, 3, seed=0, directed=False)
+    idx = build.build_index(g, eps=eps, seed=0)
+    eng = QueryEngine(idx, g, EngineConfig(
+        source_batch=batch, k_buckets=tuple(ks), cache_size=0))
+    eng.warmup()
+    rng = np.random.default_rng(0)
+    qs = rng.integers(0, g.n, n_q).astype(np.int32)
+    for k in ks:
+        t = timeit(lambda: eng.topk(qs, k))
+        emit(f"serve/topk/engine/n={n}/k={k}", t / n_q, "fused top_k")
+    # strawman: dense (B, n) back to host, argsort there
+    dense = eng.single_source  # cache_size=0: always the device path
+    t = timeit(lambda: np.argsort(-dense(qs), axis=1)[:, :max(ks)])
+    emit(f"serve/topk/dense_argsort/n={n}/k={max(ks)}", t / n_q,
+         "strawman")

@@ -1,29 +1,39 @@
-"""Benchmark driver: one module per paper figure/table.
+"""Benchmark driver: one module per paper figure/table + serving path.
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
 ``--fast`` shrinks graph sizes so the whole suite finishes in a few
 minutes on one CPU core; default sizes match the figures in
-EXPERIMENTS.md.
+EXPERIMENTS.md. ``--smoke`` is the CI mode (scripts/ci.sh): tiny
+graphs, every section exercised once, plus the n=500 serving-path
+latency guard -- finishes in ~a minute.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast|--smoke] [--only ...]
 """
 from __future__ import annotations
 
 import argparse
-import sys
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: minimal sizes + n=500 serving guard")
     ap.add_argument("--only", default=None,
                     help="comma list: pair,source,preprocess,space,"
-                         "accuracy,topk,roofline")
+                         "accuracy,topk,serve,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     def want(name: str) -> bool:
         return only is None or name in only
 
-    sizes = (300, 1000) if args.fast else (300, 1000, 3000)
+    if args.smoke:
+        sizes = (300,)
+    elif args.fast:
+        sizes = (300, 1000)
+    else:
+        sizes = (300, 1000, 3000)
     print("name,us_per_call,derived")
 
     if want("pair"):
@@ -38,13 +48,19 @@ def main() -> None:
     if want("space"):
         from benchmarks import bench_space
         bench_space.run(sizes=sizes)
-    if want("accuracy"):
+    if want("accuracy") and not args.smoke:
         from benchmarks import bench_accuracy
         bench_accuracy.run(n=300, n_runs=2 if args.fast else 3)
     if want("topk"):
         from benchmarks import bench_topk
-        bench_topk.run(n=300)
-    if want("roofline"):
+        if args.smoke:
+            bench_topk.run_engine(n=300)
+        else:
+            bench_topk.run(n=300)
+    if want("serve"):
+        from benchmarks import bench_serve
+        bench_serve.run(n=500, n_q=16 if args.smoke else 32)
+    if want("roofline") and not args.smoke:
         from benchmarks import roofline
         roofline.run()
 

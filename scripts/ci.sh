@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 tests + the serving-path smoke benchmark.
+#
+# The smoke benchmark (benchmarks/run.py --smoke) drives all three
+# query types through the QueryEngine on a 500-node graph and asserts
+# zero recompiles after warmup, so engine-latency regressions fail CI
+# rather than landing silently.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== smoke benchmark (500-node serving guard) =="
+PYTHONPATH=src python -m benchmarks.run --smoke
+echo "CI OK"

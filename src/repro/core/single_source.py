@@ -205,13 +205,14 @@ def batched_single_source_sharded(keys, vals, d, blk_src, blk_dstl,
             acc = push(acc) + seed(l)
         return acc
 
-    sm = jax.shard_map(
+    from repro import compat
+    sm = compat.shard_map(
         local, mesh=mesh,
         in_specs=(P(data_axes, None), P(data_axes, None), P(),
                   P(("model",), None), P(("model",), None),
                   P(("model",), None)),
         out_specs=P(data_axes, ("model",)),
-        axis_names=manual, check_vma=False)
+        axis_names=manual)
     ku = keys[us]
     xu = vals[us]
     return sm(ku, xu, d, blk_src, blk_dstl, blk_w)

@@ -1,0 +1,73 @@
+"""Top-k single-source SimRank: pruned Horner push + device selection.
+
+The serving workload that matters in practice (ProbeSim,
+arXiv:1709.06955) is "which k nodes are most similar to u?", not the
+full n-vector. The device path reuses the batched Horner push from
+:mod:`repro.core.single_source` -- per-step threshold pruning at
+tau = (sqrt c)^L * theta, DESIGN.md section 3 -- and fuses a
+``jax.lax.top_k`` selection stage into the same XLA program, so only
+(B, k) values/indices leave the device instead of the dense (B, n)
+score matrix. For production n (millions of nodes) the transfer saving
+is the difference between serving from device memory and being
+host-bandwidth bound.
+
+Tie-breaking: both ``jax.lax.top_k`` and the host reference
+(stable argsort of the negated scores) order equal scores by ascending
+node id, so host and device agree exactly up to float32-vs-float64
+accumulation differences (bounded by the Theorem-1 eps budget; see
+tests/test_topk.py for the tolerance-aware comparison).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.single_source import batched_single_source, single_source_paper
+from repro.graph import csr
+
+
+@partial(jax.jit, static_argnames=("n", "l_max", "k"))
+def batched_topk(keys, vals, d, edge_src, edge_dst, w, us, theta,
+                 n: int, l_max: int, k: int):
+    """Fused Horner push + top-k for a batch of sources.
+
+    keys/vals: packed HP table (N, W); us: (B,) int32.
+    Returns (scores (B, k) float32, nodes (B, k) int32), scores
+    descending per row.
+    """
+    scores = batched_single_source(keys, vals, d, edge_src, edge_dst, w,
+                                   us, theta, n=n, l_max=l_max)
+    top_v, top_i = jax.lax.top_k(scores, k)
+    return top_v, top_i.astype(jnp.int32)
+
+
+def topk_device(idx, g: csr.Graph, us: np.ndarray,
+                k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Batched device top-k; k is clamped to n."""
+    k = min(int(k), idx.n)
+    keys = jnp.asarray(idx.hp.keys)
+    vals = jnp.asarray(idx.hp.vals)
+    d = jnp.asarray(idx.d.astype(np.float32))
+    w = jnp.asarray(csr.normalized_pull_weights(g, idx.plan.sqrt_c))
+    top_v, top_i = batched_topk(
+        keys, vals, d, jnp.asarray(g.edge_src), jnp.asarray(g.edge_dst),
+        w, jnp.asarray(us, jnp.int32), jnp.float32(idx.plan.theta),
+        idx.n, idx.plan.l_max, k)
+    return np.asarray(top_v), np.asarray(top_i)
+
+
+def topk_host(idx, g: csr.Graph, u: int, k: int,
+              method=single_source_paper) -> tuple[np.ndarray, np.ndarray]:
+    """Reference: dense single-source scores + stable argsort.
+
+    ``method`` is any single_source_* callable; the default is the
+    paper-faithful Alg 6. Equal scores break toward the smaller node id
+    (matching jax.lax.top_k).
+    """
+    scores = np.asarray(method(idx, g, u))
+    k = min(int(k), len(scores))
+    order = np.argsort(-scores, kind="stable")[:k]
+    return scores[order], order.astype(np.int32)

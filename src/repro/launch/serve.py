@@ -1,9 +1,11 @@
-"""Serving launcher: batched SimRank query serving on a SLING index.
+"""Serving launcher: thin CLI over repro.serve.QueryEngine.
 
-``python -m repro.launch.serve --n 2000 --queries 64`` builds an index
-over a synthetic graph and serves batched single-source queries through
-the device path (the sling-serve dry-run cell is the pod-scale version
-of exactly this step).
+``python -m repro.launch.serve --queries 64`` builds an index over a
+synthetic graph, primes the engine's compile cache, then serves a
+query stream through the unified engine -- single-source by default;
+``--mode pair|topk|mixed`` exercises the other paths. Batching,
+padding, k-bucketing, and caching all live in the engine; this file
+only parses flags, generates traffic, and reports latency.
 """
 from __future__ import annotations
 
@@ -13,8 +15,14 @@ import time
 import numpy as np
 
 from repro.core import build
-from repro.core.single_source import single_source_device
 from repro.graph import generators
+from repro.serve import EngineConfig, QueryEngine
+
+
+def _percentiles(lat: list[float]) -> str:
+    a = 1e3 * np.asarray(lat)
+    return (f"p50 {np.percentile(a, 50):.2f} ms  "
+            f"p99 {np.percentile(a, 99):.2f} ms")
 
 
 def main() -> None:
@@ -24,9 +32,17 @@ def main() -> None:
     ap.add_argument("--eps", type=float, default=0.1)
     ap.add_argument("--queries", type=int, default=64)
     ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--mode", default="source",
+                    choices=("source", "pair", "topk", "mixed"))
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--pair-backend", default="auto",
+                    choices=("auto", "join", "pallas"))
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.queries < 1 or args.batch < 1:
+        ap.error("--queries and --batch must be >= 1")
 
-    g = generators.barabasi_albert(args.n, args.deg, seed=0,
+    g = generators.barabasi_albert(args.n, args.deg, seed=args.seed,
                                    directed=False)
     print(f"graph: n={g.n} m={g.m}")
     t0 = time.perf_counter()
@@ -34,18 +50,45 @@ def main() -> None:
     print(f"index built in {time.perf_counter() - t0:.1f}s "
           f"({idx.nbytes() / 1e6:.1f} MB)")
 
-    rng = np.random.default_rng(0)
+    eng = QueryEngine(idx, g, EngineConfig(
+        source_batch=args.batch, pair_batch=max(args.batch, 16),
+        pair_backend=args.pair_backend))
+    warm = eng.warmup()
+    print("warmup (compile priming): "
+          + "  ".join(f"{k}={v:.2f}s" for k, v in warm.items()))
+
+    rng = np.random.default_rng(args.seed)
     qs = rng.integers(0, g.n, args.queries).astype(np.int32)
-    t0 = time.perf_counter()
-    done = 0
-    for lo in range(0, args.queries, args.batch):
-        batch = qs[lo:lo + args.batch]
-        scores = single_source_device(idx, g, batch)
-        done += len(batch)
-    dt = time.perf_counter() - t0
-    print(f"served {done} single-source queries in {dt:.2f}s "
-          f"({1e3 * dt / done:.2f} ms/query, batch={args.batch})")
-    print("sample scores:", np.round(scores[0][:8], 4))
+    modes = {"source": ["source"], "pair": ["pair"], "topk": ["topk"],
+             "mixed": ["source", "pair", "topk"]}[args.mode]
+    shapes_before = len(eng.stats()["unique_shapes"])
+    for mode in modes:
+        lat = []
+        for lo in range(0, args.queries, args.batch):
+            batch = qs[lo:lo + args.batch]
+            t0 = time.perf_counter()
+            if mode == "source":
+                scores = eng.single_source(batch)
+                sample = scores[0][:5]
+            elif mode == "pair":
+                vs = rng.integers(0, g.n, len(batch)).astype(np.int32)
+                sample = eng.pairs(batch, vs)[:5]
+            else:
+                sv, si = eng.topk(batch, args.k)
+                sample = sv[0]
+            lat.append((time.perf_counter() - t0) / len(batch))
+        print(f"[{mode}] {args.queries} queries, batch={args.batch}: "
+              f"{_percentiles(lat)} per query")
+        print(f"[{mode}] sample: {np.round(np.asarray(sample), 4)}")
+
+    st = eng.stats()
+    grew = len(st["unique_shapes"]) - shapes_before
+    print(f"engine: {st['batches']} batches, {st['pad_slots']} pad "
+          f"slots, cache {st['cache_hits']}/{st['cache_hits'] + st['cache_misses']} hits, "
+          f"backend={st['pair_backend']}")
+    print(f"compiled shapes: {len(st['unique_shapes'])} total, "
+          f"{grew} new after warmup "
+          f"({'compile-once OK' if grew == 0 else 'RECOMPILED'})")
 
 
 if __name__ == "__main__":

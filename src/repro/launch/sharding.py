@@ -116,7 +116,9 @@ def _resolve_axis(name: Optional[str], dim: int, mesh: Mesh,
             continue
         size = int(np.prod([mesh.shape[a] for a in axes]))
         if dim % size == 0 or (not exact and dim >= size):
-            return axes if len(axes) > 1 else axes[0]
+            # always a tuple: P(("data",)) and P("data") compare unequal,
+            # and downstream spec comparisons rely on the tuple form
+            return axes
     return None
 
 

@@ -72,13 +72,14 @@ def gcn_loss_sharded(cfg, params, batch):
         return (tot / jnp.maximum(cnt, 1.0)).reshape(1)
 
     node_spec = P(axes, *([None] * 1))
-    sm = jax.shard_map(
+    from repro import compat
+    sm = compat.shard_map(
         local, mesh=mesh,
         in_specs=(P(axes, None), P(axes, None), P(axes, None),
                   P(axes, None), P(axes), P(axes), P(axes))
         + tuple(P() for _ in range(len(ws) + len(bs))),
         out_specs=P(axes),
-        axis_names=set(axes), check_vma=False)
+        axis_names=set(axes))
     out = sm(batch["feats"], batch["blk_src"], batch["blk_dstl"],
              batch["blk_w"], batch["w_self"], batch["labels"],
              batch["node_mask"], *ws, *bs)

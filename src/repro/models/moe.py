@@ -101,10 +101,11 @@ def moe_ffn(x, router_w, w_gate, w_up, w_down, top_k: int,
         y, aux = _moe_local(xl, rw, wg, wu, wd, top_k, capacity_factor)
         return y, aux.reshape(1)
 
-    sm = jax.shard_map(
+    from repro import compat
+    sm = compat.shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(manual, None), P(), P(), P(), P()),
         out_specs=(P(manual, None), P(manual)),
-        axis_names=set(manual), check_vma=False)
+        axis_names=set(manual))
     y, aux = sm(x, router_w, w_gate, w_up, w_down)
     return y, aux.mean()

@@ -1,0 +1,4 @@
+"""Serving subsystem: the unified SimRank query engine."""
+from repro.serve.engine import EngineConfig, QueryEngine
+
+__all__ = ["EngineConfig", "QueryEngine"]

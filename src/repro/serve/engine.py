@@ -1,0 +1,306 @@
+"""Unified SimRank query engine: one front-end for all three query types.
+
+``QueryEngine`` serves single-pair, single-source, and top-k queries
+from a built :class:`~repro.core.index.SlingIndex` with the properties
+a traffic-serving system needs (README section "Serving"):
+
+  * **fixed batch shapes** -- requests of any size are chunked and
+    padded to the configured batch sizes, so each query type compiles
+    exactly once and every later request reuses the compiled program
+    (no per-shape recompiles; ``stats()["unique_shapes"]`` stays
+    constant under arbitrary request sizes);
+  * **k-bucketing** -- top-k requests round k up to the next configured
+    bucket and slice the answer, so odd k values share programs;
+  * **LRU score cache** -- repeated queries (hot nodes dominate real
+    query streams) are answered from an LRU keyed by
+    (type, node(s), bucket) without touching the device;
+  * **warmup priming** -- ``warmup()`` compiles every fixed shape ahead
+    of traffic so the first real request is served at steady-state
+    latency;
+  * **pluggable pair backend** -- the batched pair path runs either the
+    vmapped searchsorted join (core/index.py) or the Pallas all-pairs
+    equality-join kernel (kernels/hp_join, DESIGN.md section 2) when a
+    compiled-Pallas backend is available.
+
+The engine is deliberately synchronous: batching policy (how requests
+accumulate into a batch) lives in the caller; this layer guarantees
+that however requests arrive, the device only ever sees the fixed
+shapes it has already compiled.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.index import SlingIndex, _pair_query_batch
+from repro.core.single_source import batched_single_source
+from repro.core.topk import batched_topk
+from repro.graph import csr
+
+
+class _LRU:
+    """Minimal LRU map with hit/miss accounting."""
+
+    def __init__(self, cap: int):
+        self.cap = cap
+        self._d: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key):
+        if self.cap > 0 and key in self._d:
+            self._d.move_to_end(key)
+            self.hits += 1
+            return self._d[key]
+        self.misses += 1
+        return None
+
+    def put(self, key, value) -> None:
+        if self.cap <= 0:
+            return
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.cap:
+            self._d.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    pair_batch: int = 256        # fixed pair-path batch shape
+    source_batch: int = 8        # fixed single-source/top-k batch shape
+    k_buckets: tuple[int, ...] = (1, 16, 64, 256)
+    cache_size: int = 256        # LRU entries across all query types
+    pair_backend: str = "auto"   # "auto" | "join" | "pallas"
+
+
+class QueryEngine:
+    """Front-end over a SlingIndex for all three SimRank query types."""
+
+    def __init__(self, index: SlingIndex, g: csr.Graph,
+                 config: EngineConfig | None = None):
+        self.index = index
+        self.g = g
+        self.cfg = config or EngineConfig()
+        n = index.n
+        # device-resident state, uploaded once
+        self._keys = jnp.asarray(index.hp.keys)
+        self._vals = jnp.asarray(index.hp.vals)
+        self._d = jnp.asarray(index.d.astype(np.float32))
+        self._edge_src = jnp.asarray(g.edge_src)
+        self._edge_dst = jnp.asarray(g.edge_dst)
+        self._w = jnp.asarray(
+            csr.normalized_pull_weights(g, index.plan.sqrt_c))
+        self._theta = jnp.float32(index.plan.theta)
+        backend = self.cfg.pair_backend
+        if backend == "auto":
+            backend = ("pallas" if jax.default_backend() == "tpu"
+                       else "join")
+        self._pair_backend = backend
+        if backend == "pallas":
+            from repro.kernels.hp_join.ops import fold_sqrt_d
+            fk, fv = fold_sqrt_d(index)
+            self._folded_keys = jnp.asarray(fk)
+            self._folded_vals = jnp.asarray(fv)
+        self._cache = _LRU(self.cfg.cache_size)
+        self._shapes: set = set()
+        self._counts = {"pair": 0, "source": 0, "topk": 0,
+                        "batches": 0, "pad_slots": 0}
+        assert n >= 1
+
+    # ------------------------------------------------------------------
+    # dispatch helpers
+    # ------------------------------------------------------------------
+    def _k_bucket(self, k: int) -> int:
+        """Smallest configured bucket >= k, clamped to n; k past the
+        largest bucket gets the full-ranking n bucket. The bucket set
+        is closed ({buckets} | {n}), so warmup() can prime every
+        program the engine will ever dispatch -- no ad-hoc bucket may
+        recompile mid-traffic."""
+        k = max(1, min(int(k), self.index.n))
+        fits = [b for b in self.cfg.k_buckets if b >= k]
+        return min(min(fits), self.index.n) if fits else self.index.n
+
+    def _record(self, kind: str, shape) -> None:
+        self._counts["batches"] += 1
+        self._shapes.add((kind,) + tuple(shape))
+
+    def _dispatch_pairs(self, us: np.ndarray, vs: np.ndarray) -> np.ndarray:
+        B = self.cfg.pair_batch
+        pad = (-len(us)) % B
+        self._counts["pad_slots"] += pad
+        us_p = np.concatenate([us, np.zeros(pad, np.int32)]).astype(np.int32)
+        vs_p = np.concatenate([vs, np.zeros(pad, np.int32)]).astype(np.int32)
+        out = np.empty(len(us_p), np.float32)
+        for lo in range(0, len(us_p), B):
+            u_b, v_b = us_p[lo:lo + B], vs_p[lo:lo + B]
+            self._record("pair", (B, self._pair_backend))
+            if self._pair_backend == "pallas":
+                from repro.kernels.hp_join.hp_join import hp_join
+                chunk = hp_join(self._folded_keys[u_b],
+                                self._folded_vals[u_b],
+                                self._folded_keys[v_b],
+                                self._folded_vals[v_b],
+                                bq=math.gcd(B, 8),
+                                interpret=jax.default_backend() != "tpu")
+            else:
+                chunk = _pair_query_batch(
+                    self._keys, self._vals, self._d,
+                    jnp.asarray(u_b), jnp.asarray(v_b), self.index.n)
+            out[lo:lo + B] = np.asarray(chunk)
+        return out[:len(us)]
+
+    def _dispatch_sources(self, us: np.ndarray) -> np.ndarray:
+        B = self.cfg.source_batch
+        pad = (-len(us)) % B
+        self._counts["pad_slots"] += pad
+        us_p = np.concatenate([us, np.full(pad, us[0] if len(us) else 0,
+                                           np.int32)]).astype(np.int32)
+        out = np.empty((len(us_p), self.index.n), np.float32)
+        for lo in range(0, len(us_p), B):
+            self._record("source", (B,))
+            out[lo:lo + B] = np.asarray(batched_single_source(
+                self._keys, self._vals, self._d, self._edge_src,
+                self._edge_dst, self._w, jnp.asarray(us_p[lo:lo + B]),
+                self._theta, n=self.index.n, l_max=self.index.plan.l_max))
+        return out[:len(us)]
+
+    def _dispatch_topk(self, us: np.ndarray, bucket: int):
+        B = self.cfg.source_batch
+        pad = (-len(us)) % B
+        self._counts["pad_slots"] += pad
+        us_p = np.concatenate([us, np.full(pad, us[0] if len(us) else 0,
+                                           np.int32)]).astype(np.int32)
+        sv = np.empty((len(us_p), bucket), np.float32)
+        si = np.empty((len(us_p), bucket), np.int32)
+        for lo in range(0, len(us_p), B):
+            self._record("topk", (B, bucket))
+            v, i = batched_topk(
+                self._keys, self._vals, self._d, self._edge_src,
+                self._edge_dst, self._w, jnp.asarray(us_p[lo:lo + B]),
+                self._theta, self.index.n, self.index.plan.l_max, bucket)
+            sv[lo:lo + B] = np.asarray(v)
+            si[lo:lo + B] = np.asarray(i)
+        return sv[:len(us)], si[:len(us)]
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+    def pairs(self, us, vs) -> np.ndarray:
+        """s(u_i, v_i) for aligned arrays of node ids."""
+        us = np.asarray(us, np.int32).ravel()
+        vs = np.asarray(vs, np.int32).ravel()
+        assert us.shape == vs.shape
+        self._counts["pair"] += len(us)
+        out = np.empty(len(us), np.float32)
+        miss_pos = []
+        for i, (u, v) in enumerate(zip(us.tolist(), vs.tolist())):
+            # s(u,v) = s(v,u): canonicalize so (v,u) hits a cached (u,v)
+            hit = self._cache.get(("pair", min(u, v), max(u, v)))
+            if hit is None:
+                miss_pos.append(i)
+            else:
+                out[i] = hit
+        if miss_pos:
+            got = self._dispatch_pairs(us[miss_pos], vs[miss_pos])
+            for j, i in enumerate(miss_pos):
+                out[i] = got[j]
+                u, v = int(us[i]), int(vs[i])
+                self._cache.put(("pair", min(u, v), max(u, v)),
+                                float(got[j]))
+        return out
+
+    def pair(self, u: int, v: int) -> float:
+        return float(self.pairs([u], [v])[0])
+
+    def single_source(self, us) -> np.ndarray:
+        """(Q, n) scores for an array of query nodes."""
+        us = np.atleast_1d(np.asarray(us, np.int32))
+        self._counts["source"] += len(us)
+        out = np.empty((len(us), self.index.n), np.float32)
+        miss_pos = []
+        for i, u in enumerate(us.tolist()):
+            hit = self._cache.get(("src", u))
+            if hit is None:
+                miss_pos.append(i)
+            else:
+                out[i] = hit
+        if miss_pos:
+            got = self._dispatch_sources(us[miss_pos])
+            for j, i in enumerate(miss_pos):
+                out[i] = got[j]
+                # copy: got[j] is a view retaining the whole padded batch
+                self._cache.put(("src", int(us[i])), got[j].copy())
+        return out
+
+    def topk(self, us, k: int) -> tuple[np.ndarray, np.ndarray]:
+        """Top-k similar nodes per query: (Q, k') scores + node ids,
+        k' = min(k, n), scores descending, ties toward small ids."""
+        us = np.atleast_1d(np.asarray(us, np.int32))
+        k_eff = min(int(k), self.index.n)
+        bucket = self._k_bucket(k_eff)
+        self._counts["topk"] += len(us)
+        sv = np.empty((len(us), k_eff), np.float32)
+        si = np.empty((len(us), k_eff), np.int32)
+        miss_pos = []
+        for i, u in enumerate(us.tolist()):
+            hit = self._cache.get(("topk", u, bucket))
+            if hit is None:
+                miss_pos.append(i)
+            else:
+                sv[i], si[i] = hit[0][:k_eff], hit[1][:k_eff]
+        if miss_pos:
+            gv, gi = self._dispatch_topk(us[miss_pos], bucket)
+            for j, i in enumerate(miss_pos):
+                sv[i], si[i] = gv[j, :k_eff], gi[j, :k_eff]
+                self._cache.put(("topk", int(us[i]), bucket),
+                                (gv[j].copy(), gi[j].copy()))
+        return sv, si
+
+    # ------------------------------------------------------------------
+    def warmup(self) -> dict:
+        """Compile every fixed shape before traffic arrives.
+
+        Returns {path: seconds}. Results are not cached, so warmup never
+        pollutes the LRU."""
+        out = {}
+        z_pair = np.zeros(self.cfg.pair_batch, np.int32)
+        t0 = time.perf_counter()
+        self._dispatch_pairs(z_pair, z_pair)
+        out["pair"] = time.perf_counter() - t0
+        z_src = np.zeros(self.cfg.source_batch, np.int32)
+        t0 = time.perf_counter()
+        self._dispatch_sources(z_src)
+        out["source"] = time.perf_counter() - t0
+        buckets = {self._k_bucket(b) for b in self.cfg.k_buckets}
+        buckets.add(self.index.n)   # the k > max(buckets) fallback
+        for b in sorted(buckets):
+            t0 = time.perf_counter()
+            self._dispatch_topk(z_src, b)
+            out[f"topk@{b}"] = time.perf_counter() - t0
+        return out
+
+    def stats(self) -> dict:
+        return {
+            **self._counts,
+            "cache_hits": self._cache.hits,
+            "cache_misses": self._cache.misses,
+            "cache_entries": len(self._cache),
+            "unique_shapes": sorted(self._shapes),
+            "pair_backend": self._pair_backend,
+        }
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_index_file(cls, path: str, g: csr.Graph,
+                        config: EngineConfig | None = None) -> "QueryEngine":
+        """Serve from an index persisted with SlingIndex.save."""
+        return cls(SlingIndex.load(path), g, config)

@@ -1,0 +1,91 @@
+"""QueryEngine serving semantics: fixed shapes, caching, backends."""
+import numpy as np
+import pytest
+
+from repro.core.single_source import single_source_device
+from repro.serve import EngineConfig, QueryEngine
+
+
+@pytest.fixture()
+def engine(small_graph, sling_index):
+    return QueryEngine(sling_index, small_graph,
+                       EngineConfig(pair_batch=16, source_batch=4,
+                                    cache_size=32))
+
+
+def test_compile_once_across_request_sizes(engine):
+    """Arbitrary request sizes never introduce new dispatch shapes."""
+    engine.warmup()
+    before = set(engine.stats()["unique_shapes"])
+    rng = np.random.default_rng(0)
+    for q in (1, 3, 4, 5, 11):
+        us = rng.integers(0, engine.index.n, q).astype(np.int32)
+        vs = rng.integers(0, engine.index.n, q).astype(np.int32)
+        engine.pairs(us, vs)
+        engine.single_source(us)
+        engine.topk(us, 7)
+    after = set(engine.stats()["unique_shapes"])
+    assert after == before, after - before
+
+
+def test_padded_requests_match_unpadded(engine, small_graph, sling_index):
+    """Odd-size (padded) requests return the same scores as the raw
+    device path on the exact batch."""
+    us = np.array([3, 1, 4, 1, 5, 9, 2], np.int32)   # 7 % 4 != 0
+    got = engine.single_source(us)
+    ref = single_source_device(sling_index, small_graph, us)
+    np.testing.assert_allclose(got, ref, atol=1e-6)
+
+
+def test_pair_parity_with_host(engine, sling_index):
+    rng = np.random.default_rng(1)
+    us = rng.integers(0, engine.index.n, 10)
+    vs = rng.integers(0, engine.index.n, 10)
+    ref = [sling_index.query_pair_host(int(u), int(v))
+           for u, v in zip(us, vs)]
+    np.testing.assert_allclose(engine.pairs(us, vs), ref, atol=1e-4)
+
+
+def test_pallas_pair_backend_parity(small_graph, sling_index):
+    """Interpret-mode Pallas join == searchsorted join."""
+    cfg_join = EngineConfig(pair_batch=16, pair_backend="join")
+    cfg_pal = EngineConfig(pair_batch=16, pair_backend="pallas")
+    e_join = QueryEngine(sling_index, small_graph, cfg_join)
+    e_pal = QueryEngine(sling_index, small_graph, cfg_pal)
+    rng = np.random.default_rng(2)
+    us = rng.integers(0, sling_index.n, 16).astype(np.int32)
+    vs = rng.integers(0, sling_index.n, 16).astype(np.int32)
+    np.testing.assert_allclose(e_pal.pairs(us, vs), e_join.pairs(us, vs),
+                               atol=1e-5)
+    assert e_pal.stats()["pair_backend"] == "pallas"
+
+
+def test_lru_cache_hits_and_consistency(engine):
+    us = np.array([8, 8, 8], np.int32)
+    first = engine.single_source(us[:1])
+    h0 = engine.stats()["cache_hits"]
+    again = engine.single_source(us)
+    assert engine.stats()["cache_hits"] >= h0 + 3
+    np.testing.assert_array_equal(np.repeat(first, 3, axis=0), again)
+    b0 = engine.stats()["batches"]
+    engine.single_source(us[:1])          # pure cache hit: no dispatch
+    assert engine.stats()["batches"] == b0
+
+
+def test_cache_eviction_bounded(small_graph, sling_index):
+    eng = QueryEngine(sling_index, small_graph,
+                      EngineConfig(source_batch=4, cache_size=8))
+    for u in range(20):
+        eng.topk([u], 5)
+    assert eng.stats()["cache_entries"] <= 8
+
+
+def test_k_bucketing_shares_programs(engine):
+    """k=2..9 all land in one bucket: one compiled topk program."""
+    engine.topk([0], 2)
+    n_shapes = len(engine.stats()["unique_shapes"])
+    for k in (3, 5, 9, 16):
+        engine.topk([1], k)
+    assert len(engine.stats()["unique_shapes"]) == n_shapes
+    sv, si = engine.topk([4], 9)
+    assert sv.shape == (1, 9)

@@ -91,8 +91,8 @@ from repro.launch import sharding as sh
 from repro.models import transformer as T
 from repro.optim.adamw import AdamW, AdamWState
 from repro.train import steps
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro import compat
+mesh = compat.make_mesh((2, 2), ("data", "model"))
 cfg = cfg_base.get("qwen3-14b").smoke()
 opt = AdamW(lr=1e-3)
 with mesh, sh.use_mesh_rules(mesh):
@@ -131,8 +131,8 @@ from repro.core.single_source import (batched_single_source_sharded,
                                       single_source_horner)
 g = generators.barabasi_albert(128, 3, seed=0, directed=False)
 idx = build.build_index(g, eps=0.2, exact_d=True)
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro import compat
+mesh = compat.make_mesh((2, 2), ("data", "model"))
 # dst-partitioned edges over the 2 model shards
 from repro.graph import csr
 w = csr.normalized_pull_weights(g, idx.plan.sqrt_c)
