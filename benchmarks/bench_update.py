@@ -1,0 +1,110 @@
+"""Dynamic-workload benchmark: incremental repair vs full rebuild, and
+the zero-recompile hot-swap guard (EXPERIMENTS.md "Dynamic workloads").
+
+Measures, on one churn replay:
+
+  * full ``build_index`` time (the rebuild strawman);
+  * ``update_index`` time per churn batch size, at the *sound* repair
+    threshold (theta_r = plan.theta) and at the coarse *operating
+    point* (theta_r = OP_MULT * theta) -- the headline 1%-churn row at
+    the operating point must be >= 5x faster than the rebuild;
+  * measured accuracy vs a from-scratch build on the mutated graph,
+    next to the accounting charge (the accuracy-vs-staleness curve:
+    observed drift sits orders below the conservative charge);
+  * ``QueryEngine.swap_index`` latency, asserting **zero
+    recompilations** in the serving path (scripts/ci.sh runs this
+    guard in --smoke).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import build, update
+from repro.graph import generators
+from repro.serve import EngineConfig, QueryEngine
+
+# coarse repair threshold for the speed-vs-staleness operating point;
+# the accuracy row printed alongside keeps it honest
+OP_MULT = 32.0
+
+
+def _accuracy_vs_fresh(idx, g_new, eps, n_pairs=400):
+    fresh = build.build_index(g_new, eps=eps, seed=0, stale_frac=0.2)
+    rng = np.random.default_rng(1)
+    us = rng.integers(0, g_new.n, n_pairs)
+    vs = rng.integers(0, g_new.n, n_pairs)
+    return float(np.abs(idx.query_pairs(us, vs)
+                        - fresh.query_pairs(us, vs)).max())
+
+
+def run(n: int = 3000, eps: float = 0.1, smoke: bool = False):
+    g = generators.barabasi_albert(n, 3, seed=0, directed=True)
+    t0 = time.perf_counter()
+    idx = build.build_index(g, eps=eps, seed=0, stale_frac=0.2)
+    t_full = time.perf_counter() - t0
+    emit(f"update/full_build/n={n}", 1e6 * t_full, "rebuild strawman")
+
+    churns = (0.01,) if smoke else (0.01, 0.05)
+    speedup_1pct = None
+    for churn in churns:
+        m_batch = max(2, int(g.m * churn))
+        for label, mult in (("sound", 1.0), ("op", OP_MULT)):
+            if smoke and label == "sound":
+                continue  # smoke keeps one update + the swap guard
+            idx_u = build.build_index(g, eps=eps, seed=0, stale_frac=0.2)
+            delta = update.random_delta(g, n_add=m_batch // 2,
+                                        n_del=m_batch - m_batch // 2,
+                                        seed=7)
+            t0 = time.perf_counter()
+            rep = build.update_index(idx_u, g, delta,
+                                     theta_r=idx_u.plan.theta * mult)
+            t_upd = time.perf_counter() - t0
+            speedup = t_full / t_upd
+            emit(f"update/update[{label}]/churn={churn:.3f}/n={n}",
+                 1e6 * t_upd,
+                 f"{speedup:.1f}x vs rebuild; rows={rep.rows_repaired} "
+                 f"d={rep.d_updated}")
+            emit(f"update/stale_charge[{label}]/churn={churn:.3f}/n={n}",
+                 1e6 * rep.stale, f"reserve={rep.eps_stale:.4f} "
+                 f"trigger={'FIRED' if rep.needs_rebuild else 'armed'}")
+            if not smoke and churn == 0.01:
+                err = _accuracy_vs_fresh(idx_u, rep.graph, eps)
+                emit(f"update/err_vs_fresh[{label}]/churn={churn:.3f}"
+                     f"/n={n}", 1e6 * err, f"planned eps={eps}")
+                assert err <= eps, (label, churn, err)
+            if label == "op" and churn == 0.01:
+                speedup_1pct = speedup
+                rep_1pct, idx_1pct = rep, idx_u
+
+    # hot-swap guard: repaired index swaps behind compiled programs
+    eng = QueryEngine(idx, g, EngineConfig(pair_batch=16, source_batch=8,
+                                           cache_size=64))
+    eng.warmup()
+    qs = np.arange(8, dtype=np.int32)
+    eng.pairs(qs, qs[::-1]); eng.single_source(qs); eng.topk(qs, 10)
+    shapes0 = len(eng.stats()["unique_shapes"])
+    sw = eng.swap_index(idx_1pct, rep_1pct.graph,
+                        affected=rep_1pct.affected)
+    eng.pairs(qs, qs[::-1]); eng.single_source(qs); eng.topk(qs, 10)
+    emit(f"update/swap_latency/n={n}", 1e3 * sw["swap_ms"],
+         f"dropped={sw['cache_dropped']} cache entries")
+    grew = len(eng.stats()["unique_shapes"]) - shapes0
+    recompiles = eng.stats()["swap_recompiles"]
+    emit(f"update/recompiles_after_swap/n={n}",
+         float(grew + recompiles), "must be 0")
+    assert grew == 0 and recompiles == 0, \
+        "hot-swap recompiled the serving path"
+
+    if not smoke and speedup_1pct is not None:
+        emit(f"update/speedup_1pct_op/n={n}", speedup_1pct,
+             ">= 5x acceptance gate")
+        assert speedup_1pct >= 5.0, (
+            f"1% churn incremental update only {speedup_1pct:.1f}x "
+            f"faster than rebuild")
+
+
+if __name__ == "__main__":
+    run()

@@ -5,7 +5,8 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
 minutes on one CPU core; default sizes match the figures in
 EXPERIMENTS.md. ``--smoke`` is the CI mode (scripts/ci.sh): tiny
 graphs, every section exercised once, plus the n=500 serving-path
-latency guard -- finishes in ~a minute.
+latency guard and the zero-recompile-on-swap guard (bench_update) --
+finishes in ~a minute.
 
     PYTHONPATH=src python -m benchmarks.run [--fast|--smoke] [--only ...]
 """
@@ -21,7 +22,7 @@ def main() -> None:
                     help="CI mode: minimal sizes + n=500 serving guard")
     ap.add_argument("--only", default=None,
                     help="comma list: pair,source,preprocess,space,"
-                         "accuracy,topk,serve,roofline")
+                         "accuracy,topk,serve,update,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -60,6 +61,14 @@ def main() -> None:
     if want("serve"):
         from benchmarks import bench_serve
         bench_serve.run(n=500, n_q=16 if args.smoke else 32)
+    if want("update"):
+        from benchmarks import bench_update
+        if args.smoke:
+            bench_update.run(n=500, smoke=True)   # zero-recompile guard
+        elif args.fast:
+            bench_update.run(n=1500)
+        else:
+            bench_update.run(n=3000)              # >= 5x @ 1% churn gate
     if want("roofline") and not args.smoke:
         from benchmarks import roofline
         roofline.run()

@@ -4,7 +4,9 @@
 # The smoke benchmark (benchmarks/run.py --smoke) drives all three
 # query types through the QueryEngine on a 500-node graph and asserts
 # zero recompiles after warmup, so engine-latency regressions fail CI
-# rather than landing silently.
+# rather than landing silently. It also replays an edge-churn batch
+# through update_index + swap_index (bench_update) and asserts the
+# hot-swap triggers zero recompilations in the serving path.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

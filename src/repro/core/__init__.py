@@ -1,6 +1,6 @@
 """SLING core: the paper's contribution as a composable JAX module."""
-from repro.core.build import build_index
+from repro.core.build import build_index, update_index
 from repro.core.index import SlingIndex
 from repro.core.theory import plan
 
-__all__ = ["build_index", "SlingIndex", "plan"]
+__all__ = ["build_index", "update_index", "SlingIndex", "plan"]

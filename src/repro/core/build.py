@@ -24,8 +24,10 @@ def build_index(g: csr.Graph, eps: float = 0.025, delta: float | None = None,
                 c: float = 0.6, seed: int = 0, adaptive: bool = True,
                 block: int = 256, spill_dir: str | None = None,
                 space_reduce: bool = False, enhance: bool = False,
-                exact_d: bool = False, verbose: bool = False) -> SlingIndex:
-    p = theory.plan(eps=eps, delta=delta, c=c, n=g.n)
+                exact_d: bool = False, stale_frac: float = 0.0,
+                verbose: bool = False) -> SlingIndex:
+    p = theory.plan(eps=eps, delta=delta, c=c, n=g.n,
+                    stale_frac=stale_frac)
     t0 = time.perf_counter()
     if exact_d:
         d = diagonal.exact_diagonal(g, c).astype(np.float32)
@@ -47,3 +49,24 @@ def build_index(g: csr.Graph, eps: float = 0.025, delta: float | None = None,
         print(f"build_index: d={t1 - t0:.2f}s hp={t2 - t1:.2f}s "
               f"entries={int(hp.counts.sum())} bytes={idx.nbytes()}")
     return idx
+
+
+def update_index(idx: SlingIndex, g: csr.Graph, delta,
+                 seed: int = 0, exact_d: bool = False,
+                 theta_r: float | None = None, block: int = 256,
+                 verbose: bool = False):
+    """Incremental maintenance: apply a :class:`~repro.graph.csr.
+    GraphDelta` to an existing index without a full rebuild.
+
+    Thin facade over :func:`repro.core.update.update_index` so callers
+    that build via this module also update via it. Mutates ``idx`` in
+    place and returns an ``UpdateReport`` (carries the new graph, the
+    affected-node set for ``QueryEngine.swap_index``, staleness
+    accounting, and the ``needs_rebuild`` trigger). Build with
+    ``stale_frac > 0`` to reserve the staleness budget the updates
+    spend (DESIGN.md section 7).
+    """
+    from repro.core import update
+    return update.update_index(idx, g, delta, seed=seed, exact_d=exact_d,
+                               theta_r=theta_r, block=block,
+                               verbose=verbose)

@@ -57,10 +57,20 @@ def _count_meets(dg: walks.DeviceGraph, seg, sa, sb, valid, n_groups,
 def estimate_diagonal(g: csr.Graph, plan: theory.SlingPlan,
                       seed: int = 0, adaptive: bool = True,
                       chunk: int = 1 << 19,
-                      dg: walks.DeviceGraph | None = None) -> np.ndarray:
+                      dg: walks.DeviceGraph | None = None,
+                      nodes: np.ndarray | None = None,
+                      d_init: np.ndarray | None = None) -> np.ndarray:
     """Estimate all d_k. ``adaptive=True`` is Algorithm 4; False is the
     fixed-budget Algorithm 1 (kept as the paper-faithful baseline for the
-    preprocessing benchmark)."""
+    preprocessing benchmark).
+
+    ``nodes`` restricts estimation to a subset (incremental maintenance:
+    core/update.py re-estimates only the affected neighborhood of an
+    edge batch); entries outside the subset are taken from ``d_init``
+    (required when ``nodes`` is given). The sampling machinery is
+    identical -- walks run on the *current* graph, so subset estimates
+    carry the same Lemma-11 guarantee as a full pass.
+    """
     n = g.n
     c, sc, t_max = plan.c, plan.sqrt_c, plan.t_max
     rng = np.random.default_rng(seed)
@@ -68,9 +78,17 @@ def estimate_diagonal(g: csr.Graph, plan: theory.SlingPlan,
     dg = dg or walks.DeviceGraph.from_graph(g)
 
     deg = g.in_deg
-    d = np.ones(n, dtype=np.float64)
-    d[deg == 1] = 1.0 - c  # exact: single in-neighbor pair always equal
-    sampled = np.flatnonzero(deg >= 2)
+    if nodes is None:
+        d = np.ones(n, dtype=np.float64)
+        d[deg == 1] = 1.0 - c  # exact: single in-neighbor pair equal
+        sampled = np.flatnonzero(deg >= 2)
+    else:
+        assert d_init is not None, "subset estimation needs d_init"
+        nodes = np.asarray(nodes, np.int64)
+        d = d_init.astype(np.float64).copy()
+        d[nodes] = 1.0
+        d[nodes[deg[nodes] == 1]] = 1.0 - c
+        sampled = nodes[deg[nodes] >= 2]
     if len(sampled) == 0:
         return d.astype(np.float32)
 

@@ -42,6 +42,99 @@ def _push_block(h, edge_src, edge_dst, w, theta, n: int):
     return hp, h_next
 
 
+@partial(jax.jit, static_argnames=("n",), donate_argnums=(0,))
+def _push_block_t(x, edge_src, edge_dst, w, theta, n: int):
+    """Transpose of :func:`_push_block`: one pruned *walk-distribution*
+    step. A sqrt(c)-walk sitting at v moves to each u in I(v) with
+    weight sqrt(c)/|I(v)| -- the same per-edge weight, flowing dst->src.
+    """
+    xp = jnp.where(x > theta, x, 0.0)
+    msgs = xp[edge_dst] * w[:, None]                 # (m, B)
+    x_next = jax.ops.segment_sum(msgs, edge_src, num_segments=n)
+    return xp, x_next
+
+
+@partial(jax.jit, static_argnames=("n", "l_max", "transpose"))
+def _mass_scan(h0, edge_src, edge_dst, w, theta_r, n: int, l_max: int,
+               transpose: bool):
+    """acc[v, c] = sum_l (pruned propagation of column c at step l)[v],
+    fused into one XLA program (no per-step host sync)."""
+    s, d = (edge_dst, edge_src) if transpose else (edge_src, edge_dst)
+
+    def step(carry, _):
+        h, acc = carry
+        hp = jnp.where(h > theta_r, h, 0.0)
+        msgs = hp[s] * w[:, None]
+        h_next = jax.ops.segment_sum(msgs, d, num_segments=n)
+        return (h_next, acc + hp), None
+
+    (_, acc), _ = jax.lax.scan(step, (h0, jnp.zeros_like(h0)), None,
+                               length=l_max + 1)
+    return acc
+
+
+def propagation_mass(g: csr.Graph, seeds: np.ndarray, sqrt_c: float,
+                     theta_r: float, l_max: int, transpose: bool = False,
+                     block: int = 256, weights: np.ndarray | None = None):
+    """Pruned propagation mass from weighted one-hot ``seeds``, per
+    seed column (``weights`` defaults to 1; core/update.py seeds with
+    the per-node transition perturbation, so the mass *is* the drift
+    proxy rather than a raw visit count).
+
+    transpose=False (pull): column t of the accumulator holds
+      sum_l h~^(l)(v, t) -- the discounted mass with which v *hits*
+      seed t, i.e. how strongly H(v) depends on transitions at t.
+    transpose=True (push): column t holds the accumulated
+      walk-distribution mass from t -- how strongly t's transitions
+      feed HP entries *targeted* at each node.
+
+    Prunes at theta_r each step (the repair analogue of Alg 2's prune).
+    Returns (colmax, total, skipped), each (n,) float64:
+      colmax[v]  -- largest single-seed mass at v (the affected-set
+                    criterion: one changed in-neighborhood moves v's
+                    state by at most this much);
+      total[v]   -- mass summed over all seeds;
+      skipped[v] -- the sub-theta_r part of that sum, i.e. the
+                    *measured* influence an affected-set cut at theta_r
+                    leaves unrepaired (theory.stale_increment input).
+    """
+    n = g.n
+    edge_src = jnp.asarray(g.edge_src)
+    edge_dst = jnp.asarray(g.edge_dst)
+    w = jnp.asarray(csr.normalized_pull_weights(g, sqrt_c))
+    colmax = np.zeros(n, np.float64)
+    total = np.zeros(n, np.float64)
+    skipped = np.zeros(n, np.float64)
+    seeds = np.asarray(seeds, np.int64)
+    for b0 in range(0, len(seeds), block):
+        sub = seeds[b0:b0 + block]
+        wsub = None if weights is None else weights[b0:b0 + block]
+        h = _one_hot_block(n, sub, block, weights=wsub)
+        acc = np.asarray(_mass_scan(h, edge_src, edge_dst, w,
+                                    jnp.float32(theta_r), n, l_max,
+                                    transpose), dtype=np.float64)
+        colmax = np.maximum(colmax, acc.max(axis=1))
+        total += acc.sum(axis=1)
+        skipped += np.where(acc <= theta_r, acc, 0.0).sum(axis=1)
+    return colmax, total, skipped
+
+
+def _one_hot_block(n: int, sub: np.ndarray, block: int,
+                   min_pad: int = 16,
+                   weights: np.ndarray | None = None) -> jnp.ndarray:
+    """(n, B) seed columns for ``sub`` (value ``weights``, default 1),
+    B padded to a stable bucket (powers of two up to ``block``);
+    padding columns are all-zero, so they generate no entries and no
+    mass."""
+    B = max(min_pad, int(2 ** np.ceil(np.log2(max(len(sub), 1)))))
+    B = min(B, block) if len(sub) <= block else len(sub)
+    B = max(B, len(sub))
+    vals = (jnp.ones(len(sub), jnp.float32) if weights is None
+            else jnp.asarray(weights, jnp.float32))
+    h = jnp.zeros((n, B), dtype=jnp.float32)
+    return h.at[jnp.asarray(sub), jnp.arange(len(sub))].set(vals)
+
+
 @dataclasses.dataclass
 class HPTable:
     """Fixed-width packed H sets for the whole graph.
@@ -69,6 +162,36 @@ class HPTable:
         return self.keys.nbytes + self.vals.nbytes + self.counts.nbytes
 
 
+def _propagate_block_coo(h, edge_src, edge_dst, w, theta, n: int,
+                         l_max: int, target_ids: np.ndarray,
+                         row_mask: np.ndarray | None = None):
+    """Run the pruned pull (Alg 2) for one seed block and collect the
+    kept entries as COO triples (src node, key = l*n + target, value).
+
+    The single propagate-and-extract loop shared by ``build_hp_table``
+    (row_mask=None: every row) and ``repair_hp_rows`` (row_mask:
+    affected rows only) -- the key layout and prune rule live here and
+    nowhere else. ``h`` may carry padding columns beyond
+    ``target_ids``; they are sliced off before extraction.
+    """
+    srcs, keys, vals = [], [], []
+    for l in range(l_max + 1):
+        hp_l, h = _push_block(h, edge_src, edge_dst, w,
+                              jnp.float32(theta), n)
+        hp_np = np.asarray(hp_l)[:, :len(target_ids)]
+        if row_mask is not None:
+            hp_np = hp_np * row_mask[:, None]
+        i_idx, b_idx = np.nonzero(hp_np)
+        if len(i_idx):
+            srcs.append(i_idx.astype(np.int32))
+            keys.append((np.int64(l) * n
+                         + target_ids[b_idx]).astype(np.int32))
+            vals.append(hp_np[i_idx, b_idx].astype(np.float32))
+        if not bool(jnp.any(h > theta)):
+            break
+    return srcs, keys, vals
+
+
 def build_hp_table(g: csr.Graph, theta: float, sqrt_c: float,
                    l_max: int, block: int = 256,
                    width: int | None = None,
@@ -94,19 +217,9 @@ def build_hp_table(g: csr.Graph, theta: float, sqrt_c: float,
         B = b1 - b0
         h = jnp.zeros((n, B), dtype=jnp.float32).at[
             jnp.arange(b0, b1), jnp.arange(B)].set(1.0)
-        blk_src, blk_key, blk_val = [], [], []
-        for l in range(l_max + 1):
-            hp, h_next = _push_block(h, edge_src, edge_dst, w,
-                                     jnp.float32(theta), n)
-            hp_np = np.asarray(hp)
-            i_idx, b_idx = np.nonzero(hp_np)
-            if len(i_idx):
-                blk_src.append(i_idx.astype(np.int32))
-                blk_key.append((np.int64(l) * n + b0 + b_idx).astype(np.int32))
-                blk_val.append(hp_np[i_idx, b_idx].astype(np.float32))
-            h = h_next
-            if not bool(jnp.any(h > theta)):
-                break
+        blk_src, blk_key, blk_val = _propagate_block_coo(
+            h, edge_src, edge_dst, w, theta, n, l_max,
+            target_ids=np.arange(b0, b1, dtype=np.int64))
         if blk_src:
             s = np.concatenate(blk_src)
             k = np.concatenate(blk_key)
@@ -155,6 +268,108 @@ def build_hp_table(g: csr.Graph, theta: float, sqrt_c: float,
         vals[v_, : c1 - c0] = val[c0:c1]
     return HPTable(n=n, width=width, keys=keys, vals=vals, counts=counts,
                    theta=theta, sqrt_c=sqrt_c, l_max=l_max)
+
+
+def repair_hp_rows(g: csr.Graph, hp: HPTable, rows: np.ndarray,
+                   targets: np.ndarray, block: int = 256,
+                   progress: bool = False) -> dict:
+    """Row-repair mode of Alg 2 (DESIGN.md section 7): re-run the
+    blocked pruned-pull seeded only at ``targets`` and splice the
+    resulting entries into the packed rows ``rows`` *in place*.
+
+    Because Alg-2 columns are independent, the propagation seeded at a
+    target k yields exactly the h~(v; l, k) a from-scratch build would
+    produce on this graph, for every v. The merge therefore:
+
+      * replaces every old entry of a repaired row whose key decodes to
+        a target in ``targets`` with the freshly computed value (absent
+        = pruned, i.e. the entry is deleted);
+      * keeps old entries whose target is outside ``targets`` -- their
+        change is sub-threshold by construction of the affected sets
+        (core/update.py) and is charged to the staleness budget.
+
+    Rows outside ``rows`` are untouched. If a merged row overflows the
+    packed ``width``, the whole table is re-packed at the wider width
+    (pad-key sentinel preserved; INDEX_FORMAT.md). Returns repair
+    stats.
+    """
+    n = g.n
+    assert (hp.l_max + 1) * n < 2**31 - 1, "int32 key space exceeded"
+    rows = np.asarray(rows, np.int64)
+    targets = np.asarray(targets, np.int64)
+    if len(rows) == 0 or len(targets) == 0:
+        return {"rows": 0, "targets": int(len(targets)),
+                "entries": 0, "width_grew": False}
+    edge_src = jnp.asarray(g.edge_src)
+    edge_dst = jnp.asarray(g.edge_dst)
+    w = jnp.asarray(csr.normalized_pull_weights(g, hp.sqrt_c))
+    row_mask = np.zeros(n, bool)
+    row_mask[rows] = True
+
+    src_acc, key_acc, val_acc = [], [], []
+    for b0 in range(0, len(targets), block):
+        sub = targets[b0:b0 + block]
+        h = _one_hot_block(n, sub, block)
+        s_l, k_l, v_l = _propagate_block_coo(
+            h, edge_src, edge_dst, w, hp.theta, n, hp.l_max,
+            target_ids=sub, row_mask=row_mask)
+        src_acc += s_l
+        key_acc += k_l
+        val_acc += v_l
+        if progress and (b0 // block) % 8 == 0:
+            print(f"  repair block {b0}/{len(targets)}")
+
+    new_src = (np.concatenate(src_acc) if src_acc
+               else np.zeros(0, np.int32))
+    new_key = (np.concatenate(key_acc) if key_acc
+               else np.zeros(0, np.int32))
+    new_val = (np.concatenate(val_acc) if val_acc
+               else np.zeros(0, np.float32))
+    order = np.lexsort((new_key, new_src))
+    new_src, new_key, new_val = new_src[order], new_key[order], new_val[order]
+    new_counts = np.bincount(new_src, minlength=n).astype(np.int64)
+    new_start = np.zeros(n + 1, np.int64)
+    np.cumsum(new_counts, out=new_start[1:])
+
+    tgt_sorted = np.sort(targets)
+
+    def _in_targets(keys_1d):
+        ks = keys_1d.astype(np.int64) % n
+        pos = np.clip(np.searchsorted(tgt_sorted, ks), 0,
+                      len(tgt_sorted) - 1)
+        return tgt_sorted[pos] == ks
+
+    merged_keys, merged_vals, merged_counts = {}, {}, hp.counts.copy()
+    for v in rows.tolist():
+        c_old = int(hp.counts[v])
+        ok, ov = hp.keys[v, :c_old], hp.vals[v, :c_old]
+        keep = ~_in_targets(ok)
+        mk = np.concatenate([ok[keep],
+                             new_key[new_start[v]:new_start[v + 1]]])
+        mv = np.concatenate([ov[keep],
+                             new_val[new_start[v]:new_start[v + 1]]])
+        o = np.argsort(mk, kind="stable")
+        merged_keys[v], merged_vals[v] = mk[o], mv[o]
+        merged_counts[v] = len(mk)
+
+    w_needed = int(merged_counts.max()) if n else 1
+    width_grew = w_needed > hp.width
+    if width_grew:
+        keys2 = np.full((n, w_needed), INT32_PAD_KEY, np.int32)
+        vals2 = np.zeros((n, w_needed), np.float32)
+        keys2[:, :hp.width] = hp.keys
+        vals2[:, :hp.width] = hp.vals
+        hp.keys, hp.vals, hp.width = keys2, vals2, w_needed
+    for v in rows.tolist():
+        k_, v_ = merged_keys[v], merged_vals[v]
+        hp.keys[v] = INT32_PAD_KEY
+        hp.vals[v] = 0.0
+        hp.keys[v, :len(k_)] = k_
+        hp.vals[v, :len(v_)] = v_
+    hp.counts = merged_counts.astype(np.int32)
+    return {"rows": int(len(rows)), "targets": int(len(targets)),
+            "entries": int(new_counts[rows].sum()),
+            "width_grew": width_grew}
 
 
 def exact_hp_vectors(g: csr.Graph, targets: np.ndarray, sqrt_c: float,

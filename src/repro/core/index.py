@@ -26,6 +26,9 @@ from repro.core import hp_index, theory
 from repro.core.hp_index import INT32_PAD_KEY, HPTable
 
 
+FORMAT_VERSION = 2  # on-disk layout version; rules in INDEX_FORMAT.md
+
+
 @dataclasses.dataclass
 class SlingIndex:
     plan: theory.SlingPlan
@@ -35,6 +38,9 @@ class SlingIndex:
     reduced: np.ndarray | None = None   # (n,) bool -- step-1/2 dropped
     # section 5.3 accuracy-enhancement marks: per node, indices into H rows
     marks: np.ndarray | None = None     # (n, n_marks) int32, -1 = none
+    # incremental-maintenance state (core/update.py, DESIGN.md section 7)
+    stale: float = 0.0     # staleness charged against plan.eps_stale
+    epoch: int = 0         # bumped by every applied update batch
 
     @property
     def n(self) -> int:
@@ -101,7 +107,11 @@ class SlingIndex:
         return self.hp.nbytes() + self.d.nbytes
 
     def save(self, path: str) -> None:
+        """Persist in the versioned layout specified by INDEX_FORMAT.md."""
         meta = dataclasses.asdict(self.plan)
+        meta["_format_version"] = FORMAT_VERSION
+        meta["_stale"] = float(self.stale)
+        meta["_epoch"] = int(self.epoch)
         np.savez_compressed(
             path, d=self.d, keys=self.hp.keys, vals=self.hp.vals,
             counts=self.hp.counts,
@@ -113,17 +123,39 @@ class SlingIndex:
 
     @staticmethod
     def load(path: str) -> "SlingIndex":
+        """Inverse of :meth:`save`, enforcing INDEX_FORMAT.md's compat
+        rules: files from version <= FORMAT_VERSION load (missing plan
+        fields take their dataclass defaults -- additive evolution
+        only); files from a *newer* version are refused rather than
+        silently misread."""
         z = np.load(path, allow_pickle=False)
         meta = json.loads(str(z["meta"]))
+        version = meta.pop("_format_version", 1)
+        if version > FORMAT_VERSION:
+            raise ValueError(
+                f"index file is format v{version}, this build reads "
+                f"<= v{FORMAT_VERSION} (see INDEX_FORMAT.md)")
+        stale = meta.pop("_stale", 0.0)
+        epoch = meta.pop("_epoch", 0)
+        known = {f.name for f in dataclasses.fields(theory.SlingPlan)}
+        unknown = set(meta) - known
+        if unknown:
+            raise ValueError(f"index plan has unknown fields {unknown}; "
+                             "refusing to drop them (INDEX_FORMAT.md)")
         plan = theory.SlingPlan(**meta)
         n, width = z["keys"].shape
+        if z["d"].shape != (n,) or z["vals"].shape != (n, width) \
+                or z["counts"].shape != (n,):
+            raise ValueError("index arrays are inconsistent: "
+                             f"keys {z['keys'].shape} d {z['d'].shape} "
+                             f"vals {z['vals'].shape} counts {z['counts'].shape}")
         hp = HPTable(n=n, width=width, keys=z["keys"], vals=z["vals"],
                      counts=z["counts"], theta=plan.theta,
                      sqrt_c=plan.sqrt_c, l_max=plan.l_max)
         reduced = z["reduced"] if z["reduced"].size else None
         marks = z["marks"] if z["marks"].size else None
         return SlingIndex(plan=plan, d=z["d"], hp=hp, reduced=reduced,
-                          marks=marks)
+                          marks=marks, stale=stale, epoch=epoch)
 
 
 @partial(jax.jit, static_argnames=("n",))

@@ -31,6 +31,11 @@ class SlingPlan:
     l_max: int            # max HP step: (sqrt c)^l <= theta
     n_r1: int             # Alg 4 phase-1 pair count
     walk_tail: float      # (sqrt c)^t_max
+    # incremental-maintenance staleness reserve (DESIGN.md section 7).
+    # 0.0 = static plan: any incremental update immediately trips the
+    # full-rebuild trigger. Appended with a default so plans serialized
+    # before this field existed load unchanged (INDEX_FORMAT.md).
+    eps_stale: float = 0.0
 
     @property
     def sqrt_c(self) -> float:
@@ -49,20 +54,29 @@ class SlingPlan:
 
 def plan(eps: float = 0.025, delta: float | None = None, c: float = 0.6,
          n: int = 1 << 20, eps_d_frac: float = 0.5,
-         walk_tail: float = 1e-4) -> SlingPlan:
+         walk_tail: float = 1e-4, stale_frac: float = 0.0) -> SlingPlan:
     """Choose (eps_d, theta, delta_d, t_max, l_max, n_r1) for a target eps.
 
     eps_d_frac controls the split of the Theorem-1 budget between the
     d_k term and the HP term. Defaults reproduce the paper's setting at
     eps = 0.025 (eps_d = 0.005 -> frac = eps_d/((1-c)*eps) = 0.5).
+
+    stale_frac reserves that fraction of eps as an *incremental
+    maintenance* budget (DESIGN.md section 7): the static index is
+    planned against eps * (1 - stale_frac), and `update_index` spends
+    the reserved eps_stale = stale_frac * eps across update batches
+    (``stale_increment``); once spent, the rebuild trigger fires.
     """
     if not (0 < eps < 1):
         raise ValueError("eps must be in (0,1)")
+    if not (0 <= stale_frac < 1):
+        raise ValueError("stale_frac must be in [0,1)")
     sc = math.sqrt(c)
     delta = delta if delta is not None else 1.0 / n
-    # budget split: eps = eps_d/(1-c) + 2 sc theta /((1-sc)(1-c))
-    eps_d_raw = eps_d_frac * eps * (1 - c)
-    theta = (1 - eps_d_frac) * eps * (1 - c) * (1 - sc) / (2 * sc)
+    eps_static = eps * (1 - stale_frac)
+    # budget split: eps_static = eps_d/(1-c) + 2 sc theta /((1-sc)(1-c))
+    eps_d_raw = eps_d_frac * eps_static * (1 - c)
+    theta = (1 - eps_d_frac) * eps_static * (1 - c) * (1 - sc) / (2 * sc)
     # walk cap and its bias: meeting probs are truncated by <= tail;
     # d_k = 1 - c/deg - c*mu so the d_k bias is <= c*tail. Reserve it.
     t_max = max(1, int(math.ceil(math.log(walk_tail) / math.log(sc))))
@@ -77,11 +91,45 @@ def plan(eps: float = 0.025, delta: float | None = None, c: float = 0.6,
     n_r1 = int(math.ceil(14.0 / (3.0 * eps_star) * math.log(4.0 / delta_d)))
     p = SlingPlan(c=c, eps=eps, delta=delta, eps_d=eps_d, theta=theta,
                   delta_d=delta_d, t_max=t_max, l_max=l_max, n_r1=n_r1,
-                  walk_tail=tail)
-    # sanity: Theorem-1 condition holds with the *raw* eps_d budget
+                  walk_tail=tail, eps_stale=stale_frac * eps)
+    # sanity: Theorem-1 condition holds with the *raw* eps_d budget,
+    # inside the static share of eps (the rest is the staleness reserve)
     assert (eps_d_raw / (1 - c)
-            + 2 * sc * theta / ((1 - sc) * (1 - c))) <= eps * (1 + 1e-9)
+            + 2 * sc * theta / ((1 - sc) * (1 - c))) <= eps_static * (1 + 1e-9)
     return p
+
+
+def stale_increment(p: SlingPlan, theta_r: float, m_rows: float,
+                    m_d: float) -> float:
+    """Staleness charged against ``p.eps_stale`` by one update batch.
+
+    ``update_index`` repairs exactly the rows/targets whose discounted
+    hitting mass onto the batch's touched set exceeds the repair
+    threshold ``theta_r`` (DESIGN.md section 7); the charge is built
+    from the *measured* mass it skipped, not a worst-case count:
+
+      * ``m_rows`` -- the largest hitting mass of any *unrepaired* row
+        onto the touched set. Only walk mass that crosses a touched
+        node can change an H row (transitions elsewhere are
+        untouched), so each query endpoint's row moved by at most
+        m_rows in l1, and a pair/source score by at most 2 * m_rows.
+      * ``m_d`` -- the largest hitting mass among in-neighbors of any
+        node whose d_k re-estimate was skipped. mu_k (Eq. 15) averages
+        in-neighbor pair SimRank, each of which moves by <= 2 * m_d,
+        so |d_k drift| <= 2 c m_d, entering scores through Theorem 1's
+        d-term as 2 c m_d / (1 - c).
+      * ``+ theta_r`` -- a floor for what the pruned mass propagation
+        itself cannot see (its own per-step prune deficit, the Lemma-7
+        analogue at theta_r).
+
+    The charge is monotone, additive across batches, and zero-cost to
+    evaluate, which is what the rebuild trigger needs: once the
+    accumulated sum exceeds eps_stale the end-to-end additive-error
+    certificate is spent and ``update_index`` reports
+    ``needs_rebuild`` (serving degrades gracefully -- scores drift by
+    the accumulated charge, they do not explode).
+    """
+    return 2.0 * m_rows + 2.0 * p.c * m_d / (1 - p.c) + theta_r
 
 
 def phase2_pairs(mu_hat: float, eps_d: float, delta_d: float,

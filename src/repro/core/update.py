@@ -1,0 +1,230 @@
+"""Incremental index maintenance for dynamic graphs (DESIGN.md section 7).
+
+SLING's guarantees are proved for a static index, but serving traffic
+does not stop while the graph mutates: the workload beyond static
+indexing is dynamic single-source/top-k (ProbeSim, arXiv:1709.06955),
+and index *locality* is what makes maintenance tractable (PRSim,
+arXiv:1905.02354). SLING's decomposition is naturally local -- every
+stored quantity depends on the graph only through in-neighbor lists:
+
+  * d_k reads I(k) and the pairwise SimRank of I(k) (Eq. 14/15);
+  * an HP entry h~(v; l, k) reads I(w) for the nodes w on reverse
+    walks v -> ... -> k (Alg 2's pull chain);
+  * the pull weights sqrt(c)/|I(dst)| are per-edge.
+
+So a batch of edge changes with touched in-neighborhoods T invalidates
+only state whose walk mass crosses T. This module turns that into three
+pruned propagations (hp_index.propagation_mass) and a row repair:
+
+  rows R     = { v : discounted hitting mass of v onto T > theta_r }
+               -- H(v) rows to re-derive (pull mass, old + new graph);
+  targets K  = { k : walk-distribution mass from T at k > theta_r }
+               -- the seed columns Alg 2 must re-run (push mass,
+               old + new graph: old catches entries to *remove*);
+  d-nodes D  = T  union  { k : I(k) meets R }
+               -- correction factors to re-estimate (their mu_k reads
+               in-neighbor pair SimRank, which only moves when those
+               neighbors' walks reach T).
+
+Everything above theta_r is repaired *exactly* (Alg-2 columns are
+independent, so repaired entries equal a from-scratch build's); the
+largest masses the thresholds skipped are measured and charged to the
+plan's staleness reserve (theory.stale_increment), and once the
+reserve is spent the report raises ``needs_rebuild`` -- the documented
+full-rebuild trigger.
+
+``update_index`` mutates the index in place (host arrays only; a
+serving QueryEngine holds device copies and picks the repaired state up
+atomically via ``swap_index`` -- the hot-swap contract in DESIGN.md
+section 7).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import diagonal, hp_index, theory
+from repro.graph import csr
+
+
+@dataclasses.dataclass
+class UpdateReport:
+    """What one ``update_index`` batch did, and what it cost."""
+    graph: csr.Graph            # post-delta graph (serve + next update)
+    touched: np.ndarray         # nodes whose in-neighborhood changed
+    rows_repaired: int          # |R|: HP rows re-derived
+    targets_seeded: int         # |K|: Alg-2 columns re-run
+    d_updated: int              # |D|: correction factors re-estimated
+    width_grew: bool            # packed HPTable re-packed wider
+    stale: float                # accumulated staleness after this batch
+    eps_stale: float            # the plan's reserve (trigger level)
+    needs_rebuild: bool         # stale > eps_stale: guarantee expired
+    affected: np.ndarray        # R u D u T: nodes whose scores may move
+    secs: dict                  # per-phase wall-clock breakdown
+
+    @property
+    def noop(self) -> bool:
+        return len(self.touched) == 0
+
+
+def affected_sets(g_old: csr.Graph, g_new: csr.Graph,
+                  touched: np.ndarray, tv: np.ndarray,
+                  plan: theory.SlingPlan, theta_r: float,
+                  block: int = 256):
+    """(rows, targets, d_nodes, m_rows, m_d) for a touched set.
+
+    The mass propagations are seeded with each touched node's
+    transition perturbation ``tv`` (csr.apply_edges), so the computed
+    mass is a *drift proxy*: (discounted visit mass) x (how much the
+    kernel at the visited node actually moved). Pull/push run on
+    *both* graphs -- the old graph finds state that must shrink or
+    disappear (paths through deleted edges), the new graph state that
+    must appear; the elementwise max keeps both sound. ``m_rows`` /
+    ``m_d`` are the largest drift proxies the thresholds *skipped* --
+    the measured inputs to ``theory.stale_increment``.
+    """
+    sc, l_max = plan.sqrt_c, plan.l_max
+
+    def both(transpose):
+        a = hp_index.propagation_mass(g_old, touched, sc, theta_r, l_max,
+                                      transpose=transpose, block=block,
+                                      weights=tv)
+        b = hp_index.propagation_mass(g_new, touched, sc, theta_r, l_max,
+                                      transpose=transpose, block=block,
+                                      weights=tv)
+        return tuple(np.maximum(x, y) for x, y in zip(a, b))
+
+    hitmax, hittot, hitskip = both(transpose=False)
+    pushmax, _, pushskip = both(transpose=True)
+
+    # affected-set criterion is per touched column: one changed
+    # in-neighborhood moves a row/target by at most its single-column
+    # drift, and the sub-threshold remainder is measured and charged
+    hot = hitmax > theta_r
+    hot[touched] = True
+    rows = np.flatnonzero(hot)
+    targets = np.union1d(np.flatnonzero(pushmax > theta_r), touched)
+    m_rows = float(max(hitskip.max(), pushskip.max(), 0.0))
+
+    # d re-estimation: mu_k (Eq. 15) *averages* in-neighbor pair
+    # SimRank, so its drift is the mean of the in-neighbors' drift
+    # proxies, and the threshold is the eps_d scale, not theta: a
+    # skipped d_k drifts by at worst the error scale its Monte-Carlo
+    # estimate was already granted -- charged via stale_increment's
+    # measured d-term. This is the knob that keeps |D| << n (the
+    # diagonal dominates build time).
+    n = g_new.n
+    deg = np.maximum(g_new.in_deg, 1).astype(np.float64)
+    nb_drift = np.zeros(n, np.float64)
+    np.add.at(nb_drift, g_new.edge_dst, hittot[g_new.edge_src])
+    nb_drift /= deg
+    tau_d = max(theta_r, plan.eps_d / (2 * plan.c))
+    d_hot = nb_drift > tau_d
+    d_hot[touched] = True
+    d_nodes = np.flatnonzero(d_hot)
+    m_d = float(nb_drift[~d_hot].max()) if (~d_hot).any() else 0.0
+    return rows, targets, d_nodes, m_rows, m_d
+
+
+def update_index(idx, g: csr.Graph, delta: csr.GraphDelta,
+                 seed: int = 0, exact_d: bool = False,
+                 theta_r: float | None = None, block: int = 256,
+                 verbose: bool = False) -> UpdateReport:
+    """Apply a batched edge delta to ``idx`` without a full rebuild.
+
+    Mutates ``idx`` (d, packed HP rows, staleness accounting, epoch) in
+    place and returns an :class:`UpdateReport` carrying the post-delta
+    graph and the affected-node set for cache invalidation
+    (``QueryEngine.swap_index``). ``exact_d=True`` recomputes the
+    affected correction factors from the power method -- the test-only
+    zero-MC-error mode matching ``build_index(exact_d=True)``.
+
+    The repaired state matches a from-scratch build on the new graph
+    for every row in R and target in K; the remainder is bounded by
+    ``theory.stale_increment`` and accumulated on ``idx.stale``. When
+    the accumulated charge exceeds ``plan.eps_stale`` the report sets
+    ``needs_rebuild`` -- serving may continue (errors degrade
+    gracefully, they do not explode), but the eps certificate is gone
+    until ``build_index`` runs again.
+    """
+    plan = idx.plan
+    theta_r = plan.theta if theta_r is None else theta_r
+    secs: dict[str, float] = {}
+
+    t0 = time.perf_counter()
+    g_new, touched, tv = csr.apply_edges(g, delta)
+    secs["apply_edges"] = time.perf_counter() - t0
+    if len(touched) == 0:
+        return UpdateReport(
+            graph=g_new, touched=touched, rows_repaired=0,
+            targets_seeded=0, d_updated=0, width_grew=False,
+            stale=idx.stale, eps_stale=plan.eps_stale,
+            needs_rebuild=idx.stale > plan.eps_stale,
+            affected=np.zeros(0, np.int64), secs=secs)
+
+    t0 = time.perf_counter()
+    rows, targets, d_nodes, m_rows, m_d = affected_sets(
+        g, g_new, touched, tv, plan, theta_r, block=block)
+    secs["affected_sets"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    stats = hp_index.repair_hp_rows(g_new, idx.hp, rows, targets,
+                                    block=block, progress=verbose)
+    secs["hp_repair"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    if exact_d:
+        d_full = diagonal.exact_diagonal(g_new, plan.c)
+        idx.d[d_nodes] = d_full[d_nodes].astype(np.float32)
+    else:
+        idx.d = diagonal.estimate_diagonal(
+            g_new, plan, seed=seed, nodes=d_nodes, d_init=idx.d)
+    secs["diagonal"] = time.perf_counter() - t0
+
+    # Section-5.3 marks point at entries the repair may have moved or
+    # deleted; dropping them only forgoes an accuracy *enhancement*.
+    # Section-5.2 `reduced` flags stay untouched: a reduced row's
+    # step-1/2 entries are rematerialized exactly from the *current*
+    # graph at query time (Alg 5), which remains correct after any
+    # delta -- whereas clearing the flag would expose packed rows that
+    # only carry step-1/2 entries toward the repaired target set K.
+    if idx.marks is not None:
+        idx.marks[rows] = -1
+
+    idx.stale += theory.stale_increment(plan, theta_r, m_rows, m_d)
+    idx.epoch += 1
+    affected = np.union1d(np.union1d(rows, d_nodes), touched)
+    rep = UpdateReport(
+        graph=g_new, touched=touched, rows_repaired=stats["rows"],
+        targets_seeded=stats["targets"], d_updated=int(len(d_nodes)),
+        width_grew=stats["width_grew"], stale=idx.stale,
+        eps_stale=plan.eps_stale,
+        needs_rebuild=idx.stale > plan.eps_stale,
+        affected=affected, secs=secs)
+    if verbose:
+        tot = sum(secs.values())
+        print(f"update_index: touched={len(touched)} rows={stats['rows']} "
+              f"targets={stats['targets']} d={len(d_nodes)} "
+              f"stale={idx.stale:.4f}/{plan.eps_stale:.4f} "
+              f"{tot:.2f}s {secs}")
+    return rep
+
+
+def random_delta(g: csr.Graph, n_add: int, n_del: int,
+                 seed: int = 0) -> csr.GraphDelta:
+    """Random churn batch: ``n_del`` existing edges out, ``n_add``
+    uniform non-self edges in (benchmark / replay traffic shape)."""
+    rng = np.random.default_rng(seed)
+    if n_del > 0 and g.m > 0:
+        pick = rng.choice(g.m, size=min(n_del, g.m), replace=False)
+        del_src = g.edge_src[pick].astype(np.int64)
+        del_dst = g.edge_dst[pick].astype(np.int64)
+    else:
+        del_src = del_dst = np.zeros(0, np.int64)
+    add_src = rng.integers(0, g.n, n_add, dtype=np.int64)
+    add_dst = rng.integers(0, g.n, n_add, dtype=np.int64)
+    ok = add_src != add_dst
+    return csr.GraphDelta(add_src=add_src[ok], add_dst=add_dst[ok],
+                          del_src=del_src, del_dst=del_dst)

@@ -101,6 +101,112 @@ def from_edges(n: int, src: np.ndarray, dst: np.ndarray,
     return g
 
 
+@dataclasses.dataclass(frozen=True)
+class GraphDelta:
+    """A batch of edge mutations against a fixed node set.
+
+    Directed edges (src -> dst). The node count never changes under a
+    delta -- dynamic SLING's hot-swap contract (DESIGN.md section 7,
+    INDEX_FORMAT.md) relies on every (n,)-shaped array keeping its
+    shape across updates; growing n is a full rebuild by definition.
+    Inserting an edge that already exists, or deleting one that does
+    not, is a no-op (and does not mark its endpoint as touched).
+    """
+    add_src: np.ndarray  # (a,) int64
+    add_dst: np.ndarray  # (a,) int64
+    del_src: np.ndarray  # (d,) int64
+    del_dst: np.ndarray  # (d,) int64
+
+    @staticmethod
+    def empty() -> "GraphDelta":
+        z = np.zeros(0, np.int64)
+        return GraphDelta(z, z, z, z)
+
+    @staticmethod
+    def inserts(src, dst) -> "GraphDelta":
+        z = np.zeros(0, np.int64)
+        return GraphDelta(np.asarray(src, np.int64),
+                          np.asarray(dst, np.int64), z, z)
+
+    @staticmethod
+    def deletes(src, dst) -> "GraphDelta":
+        z = np.zeros(0, np.int64)
+        return GraphDelta(z, z, np.asarray(src, np.int64),
+                          np.asarray(dst, np.int64))
+
+    def __len__(self) -> int:
+        return len(self.add_src) + len(self.del_src)
+
+
+def apply_edges(g: Graph, delta: GraphDelta
+                ) -> tuple[Graph, np.ndarray, np.ndarray]:
+    """Apply a :class:`GraphDelta`, returning (new_graph, touched, tv).
+
+    ``touched`` is the sorted array of nodes whose *in*-neighborhood
+    actually changed -- the seed set for incremental index maintenance
+    (core/update.py): every SLING quantity (d_k, H(v) entries, pull
+    weights) depends on the graph only through in-neighbor lists, so an
+    edge (u -> v) that is genuinely inserted or deleted invalidates
+    state around ``v`` only. No-op mutations contribute nothing.
+
+    ``tv`` (aligned with ``touched``) bounds the total-variation
+    distance between the old and new uniform-in-neighbor transition
+    kernels at each touched node: #changed in-edges / max(old deg,
+    new deg, 1), clipped to 1. It is the natural seed weight for the
+    affected-set mass propagations -- a hub absorbing one extra edge
+    perturbs walks far less than a leaf losing its only one.
+    """
+    n = g.n
+    old = g.edge_src.astype(np.int64) * n + g.edge_dst.astype(np.int64)
+    old_set = old  # sorted? edge_dst-grouped, not key-sorted -- sort now
+    old_sorted = np.sort(old_set)
+
+    # bounds-check both sides: the key encoding src*n + dst would
+    # alias an out-of-range (src, dst) onto an unrelated real edge
+    for side in (delta.add_src, delta.add_dst,
+                 delta.del_src, delta.del_dst):
+        side = np.asarray(side, np.int64)
+        if len(side) and (side.min() < 0 or side.max() >= n):
+            raise ValueError("delta references node ids outside [0, n)")
+    add = (np.asarray(delta.add_src, np.int64) * n
+           + np.asarray(delta.add_dst, np.int64))
+    dele = (np.asarray(delta.del_src, np.int64) * n
+            + np.asarray(delta.del_dst, np.int64))
+    if len(add):
+        add = np.unique(add)
+
+    def _member(keys, sorted_ref):
+        if len(keys) == 0 or len(sorted_ref) == 0:
+            return np.zeros(len(keys), bool)
+        pos = np.searchsorted(sorted_ref, keys)
+        pos = np.clip(pos, 0, len(sorted_ref) - 1)
+        return sorted_ref[pos] == keys
+
+    dele = np.unique(dele) if len(dele) else dele
+    # an edge both deleted and inserted in one batch cancels out
+    if len(add) and len(dele):
+        both = np.intersect1d(add, dele)
+        if len(both):
+            add = np.setdiff1d(add, both)
+            dele = np.setdiff1d(dele, both)
+    eff_add = add[~_member(add, old_sorted)] if len(add) else add
+    eff_del = dele[_member(dele, old_sorted)] if len(dele) else dele
+
+    if len(eff_add) == 0 and len(eff_del) == 0:
+        return g, np.zeros(0, np.int64), np.zeros(0, np.float64)
+
+    keep = ~_member(old_set, np.sort(eff_del)) if len(eff_del) else (
+        np.ones(len(old_set), bool))
+    new_keys = np.concatenate([old_set[keep], eff_add])
+    g2 = from_edges(n, new_keys // n, new_keys % n, dedup=False)
+    changed_dst = np.concatenate([eff_add, eff_del]) % n
+    touched, n_changed = np.unique(changed_dst, return_counts=True)
+    deg_ref = np.maximum(np.maximum(g.in_deg[touched],
+                                    g2.in_deg[touched]), 1)
+    tv = np.minimum(n_changed / deg_ref, 1.0)
+    return g2, touched, tv
+
+
 def undirected(n: int, a: np.ndarray, b: np.ndarray) -> Graph:
     """Symmetrize: every undirected {a,b} becomes both (a->b) and (b->a)."""
     src = np.concatenate([a, b])

@@ -6,6 +6,14 @@ query stream through the unified engine -- single-source by default;
 ``--mode pair|topk|mixed`` exercises the other paths. Batching,
 padding, k-bucketing, and caching all live in the engine; this file
 only parses flags, generates traffic, and reports latency.
+
+``--mutate N`` appends an edge-churn replay (DESIGN.md section 7,
+EXPERIMENTS.md "Dynamic workloads"): N random insert/delete batches of
+``--churn`` fraction of the edges each are applied with the
+incremental ``update_index`` and hot-swapped into the live engine
+between query batches, reporting repair time, swap latency, recompile
+count (must stay 0), and the accumulated staleness vs the plan's
+reserve -- including the full-rebuild trigger firing.
 """
 from __future__ import annotations
 
@@ -14,7 +22,7 @@ import time
 
 import numpy as np
 
-from repro.core import build
+from repro.core import build, update
 from repro.graph import generators
 from repro.serve import EngineConfig, QueryEngine
 
@@ -38,6 +46,16 @@ def main() -> None:
     ap.add_argument("--pair-backend", default="auto",
                     choices=("auto", "join", "pallas"))
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mutate", type=int, default=0, metavar="N",
+                    help="replay N edge-churn batches with incremental "
+                         "update_index + hot-swap after the query loop")
+    ap.add_argument("--churn", type=float, default=0.01,
+                    help="fraction of edges mutated per --mutate batch")
+    ap.add_argument("--theta-r", type=float, default=None,
+                    help="repair threshold override (default: plan "
+                         "theta, the sound operating point)")
+    ap.add_argument("--stale-frac", type=float, default=0.2,
+                    help="fraction of eps reserved for update staleness")
     args = ap.parse_args()
     if args.queries < 1 or args.batch < 1:
         ap.error("--queries and --batch must be >= 1")
@@ -46,7 +64,9 @@ def main() -> None:
                                    directed=False)
     print(f"graph: n={g.n} m={g.m}")
     t0 = time.perf_counter()
-    idx = build.build_index(g, eps=args.eps, verbose=True)
+    idx = build.build_index(g, eps=args.eps, verbose=True,
+                            stale_frac=args.stale_frac if args.mutate
+                            else 0.0)
     print(f"index built in {time.perf_counter() - t0:.1f}s "
           f"({idx.nbytes() / 1e6:.1f} MB)")
 
@@ -89,6 +109,48 @@ def main() -> None:
     print(f"compiled shapes: {len(st['unique_shapes'])} total, "
           f"{grew} new after warmup "
           f"({'compile-once OK' if grew == 0 else 'RECOMPILED'})")
+
+    if args.mutate:
+        _mutate_replay(args, g, idx, eng, qs)
+
+
+def _mutate_replay(args, g, idx, eng, qs) -> None:
+    """Edge-churn replay: update -> hot-swap -> serve, N times."""
+    m_batch = max(1, int(g.m * args.churn))
+    print(f"\n[mutate] {args.mutate} batches x {m_batch} edges "
+          f"(churn {args.churn:.2%}), theta_r="
+          f"{args.theta_r if args.theta_r is not None else 'plan.theta'}")
+    shapes0 = len(eng.stats()["unique_shapes"])
+    for i in range(args.mutate):
+        delta = update.random_delta(g, n_add=m_batch // 2,
+                                    n_del=m_batch - m_batch // 2,
+                                    seed=args.seed + 100 + i)
+        t0 = time.perf_counter()
+        rep = build.update_index(idx, g, delta, seed=args.seed + i,
+                                 theta_r=args.theta_r)
+        t_repair = time.perf_counter() - t0
+        sw = eng.swap_index(idx, rep.graph, affected=rep.affected)
+        g = rep.graph
+        scores = eng.single_source(qs[:args.batch])
+        trigger = " REBUILD-TRIGGER" if rep.needs_rebuild else ""
+        print(f"[mutate {i}] touched={len(rep.touched)} "
+              f"rows={rep.rows_repaired} d={rep.d_updated} "
+              f"repair={t_repair * 1e3:.0f}ms swap={sw['swap_ms']:.1f}ms "
+              f"dropped={sw['cache_dropped']} "
+              f"stale={rep.stale:.4f}/{rep.eps_stale:.4f}{trigger} "
+              f"sample={np.round(scores[0][:3], 4)}")
+        if rep.needs_rebuild:
+            t0 = time.perf_counter()
+            idx = build.build_index(g, eps=args.eps, seed=args.seed,
+                                    stale_frac=args.stale_frac)
+            eng.swap_index(idx, g)  # full invalidation: new epoch 0
+            print(f"[mutate {i}] full rebuild in "
+                  f"{time.perf_counter() - t0:.1f}s, engine re-armed")
+    st = eng.stats()
+    grew = len(st["unique_shapes"]) - shapes0
+    print(f"[mutate] {st['swaps']} swaps, last {st['last_swap_ms']:.1f}ms, "
+          f"{st['swap_recompiles']} bucket overflows, {grew} new shapes "
+          f"({'zero-recompile swap OK' if grew == 0 and not st['swap_recompiles'] else 'RECOMPILED'})")
 
 
 if __name__ == "__main__":

@@ -20,7 +20,14 @@ a traffic-serving system needs (README section "Serving"):
   * **pluggable pair backend** -- the batched pair path runs either the
     vmapped searchsorted join (core/index.py) or the Pallas all-pairs
     equality-join kernel (kernels/hp_join, DESIGN.md section 2) when a
-    compiled-Pallas backend is available.
+    compiled-Pallas backend is available;
+  * **epoch-based hot-swap** -- ``swap_index()`` installs an
+    incrementally repaired index (core/update.py) behind the same
+    compiled executables: device arrays live in capacity buckets
+    (width/edge count with headroom), so a swap is an upload plus
+    targeted cache invalidation, not a recompile (DESIGN.md
+    section 7); ``stats()`` reports swap latency and any bucket
+    overflows.
 
 The engine is deliberately synchronous: batching policy (how requests
 accumulate into a batch) lives in the caller; this layer guarantees
@@ -38,6 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.hp_index import INT32_PAD_KEY
 from repro.core.index import SlingIndex, _pair_query_batch
 from repro.core.single_source import batched_single_source
 from repro.core.topk import batched_topk
@@ -80,6 +88,13 @@ class EngineConfig:
     k_buckets: tuple[int, ...] = (1, 16, 64, 256)
     cache_size: int = 256        # LRU entries across all query types
     pair_backend: str = "auto"   # "auto" | "join" | "pallas"
+    # hot-swap shape stability (DESIGN.md section 7): device arrays are
+    # padded to capacity buckets with this headroom, so a repaired
+    # index whose packed width or edge count grew a little swaps in
+    # under the *same* compiled programs. A swap only recompiles when
+    # the new index overflows its bucket (counted in stats()).
+    swap_headroom: float = 1.25
+    cap_quantum: int = 64        # buckets are multiples of this
 
 
 class QueryEngine:
@@ -87,34 +102,130 @@ class QueryEngine:
 
     def __init__(self, index: SlingIndex, g: csr.Graph,
                  config: EngineConfig | None = None):
-        self.index = index
-        self.g = g
         self.cfg = config or EngineConfig()
-        n = index.n
-        # device-resident state, uploaded once
-        self._keys = jnp.asarray(index.hp.keys)
-        self._vals = jnp.asarray(index.hp.vals)
-        self._d = jnp.asarray(index.d.astype(np.float32))
-        self._edge_src = jnp.asarray(g.edge_src)
-        self._edge_dst = jnp.asarray(g.edge_dst)
-        self._w = jnp.asarray(
-            csr.normalized_pull_weights(g, index.plan.sqrt_c))
-        self._theta = jnp.float32(index.plan.theta)
         backend = self.cfg.pair_backend
         if backend == "auto":
             backend = ("pallas" if jax.default_backend() == "tpu"
                        else "join")
         self._pair_backend = backend
-        if backend == "pallas":
-            from repro.kernels.hp_join.ops import fold_sqrt_d
-            fk, fv = fold_sqrt_d(index)
-            self._folded_keys = jnp.asarray(fk)
-            self._folded_vals = jnp.asarray(fv)
         self._cache = _LRU(self.cfg.cache_size)
         self._shapes: set = set()
         self._counts = {"pair": 0, "source": 0, "topk": 0,
                         "batches": 0, "pad_slots": 0}
-        assert n >= 1
+        self._swaps = {"swaps": 0, "last_swap_ms": 0.0,
+                       "swap_recompiles": 0, "invalidated": 0}
+        self._width_cap = self._bucket(index.hp.width)
+        self._edge_cap = self._bucket(g.m)
+        self._install(index, g)
+        assert index.n >= 1
+
+    # ------------------------------------------------------------------
+    # device state install / hot-swap
+    # ------------------------------------------------------------------
+    def _bucket(self, x: int) -> int:
+        q = self.cfg.cap_quantum
+        return max(q, int(-(-int(x * self.cfg.swap_headroom) // q) * q))
+
+    def _install(self, index: SlingIndex, g: csr.Graph) -> None:
+        """Upload ``index``/``g`` padded to the capacity buckets.
+
+        Shape contract: every device array a compiled program closes
+        over keeps its shape as long as the new index fits the buckets
+        -- keys/vals (n, width_cap), d (n,), edges (edge_cap,). Pad
+        rows carry the INT32_PAD_KEY sentinel (ignored by every join)
+        and pad edges carry weight 0 into segment 0 (additive no-op in
+        every push), so padded and exact dispatch agree bit-for-bit.
+        """
+        n = index.n
+        wc, ec = self._width_cap, self._edge_cap
+        keys = np.full((n, wc), INT32_PAD_KEY, np.int32)
+        vals = np.zeros((n, wc), np.float32)
+        keys[:, :index.hp.width] = index.hp.keys
+        vals[:, :index.hp.width] = index.hp.vals
+        e_src = np.zeros(ec, np.int32)
+        e_dst = np.zeros(ec, np.int32)
+        e_w = np.zeros(ec, np.float32)
+        e_src[:g.m] = g.edge_src
+        e_dst[:g.m] = g.edge_dst
+        e_w[:g.m] = csr.normalized_pull_weights(g, index.plan.sqrt_c)
+        self._keys = jnp.asarray(keys)
+        self._vals = jnp.asarray(vals)
+        self._d = jnp.asarray(index.d.astype(np.float32))
+        self._edge_src = jnp.asarray(e_src)
+        self._edge_dst = jnp.asarray(e_dst)
+        self._w = jnp.asarray(e_w)
+        self._theta = jnp.float32(index.plan.theta)
+        if self._pair_backend == "pallas":
+            from repro.kernels.hp_join.ops import fold_sqrt_d
+            fk, fv = fold_sqrt_d(index)
+            fk2 = np.full((n, wc), INT32_PAD_KEY, np.int32)
+            fv2 = np.zeros((n, wc), np.float32)
+            fk2[:, :fk.shape[1]] = fk
+            fv2[:, :fv.shape[1]] = fv
+            self._folded_keys = jnp.asarray(fk2)
+            self._folded_vals = jnp.asarray(fv2)
+        for a in (self._keys, self._vals, self._d, self._edge_src,
+                  self._edge_dst, self._w):
+            a.block_until_ready()
+        self.index = index
+        self.g = g
+
+    def swap_index(self, index: SlingIndex, g: csr.Graph,
+                   affected=None) -> dict:
+        """Epoch-based hot-swap: install a repaired index behind the
+        already-compiled executables.
+
+        As long as the repaired index fits the engine's capacity
+        buckets (width_cap / edge_cap) and keeps the plan's static
+        shape parameters (n, l_max), the swap triggers **zero
+        recompilations** -- it is a device upload plus cache
+        invalidation. Overflow grows the bucket and is counted in
+        ``stats()["swap_recompiles"]`` (the next dispatch recompiles).
+
+        ``affected`` (e.g. ``UpdateReport.affected``) restricts cache
+        invalidation to entries touching those nodes; ``None`` drops
+        the whole cache. Returns swap metrics (also in ``stats()``).
+        """
+        t0 = time.perf_counter()
+        if index.n != self.index.n:
+            raise ValueError("hot-swap requires a fixed node set "
+                             f"({index.n} != {self.index.n}); changed n "
+                             "is a rebuild + new engine")
+        recompiles = 0
+        if index.plan.l_max != self.index.plan.l_max:
+            recompiles += 1  # l_max is a static argument of the pushes
+        if index.hp.width > self._width_cap:
+            self._width_cap = self._bucket(index.hp.width)
+            recompiles += 1
+        if g.m > self._edge_cap:
+            self._edge_cap = self._bucket(g.m)
+            recompiles += 1
+        self._install(index, g)
+        dropped = self.invalidate(affected)
+        ms = 1e3 * (time.perf_counter() - t0)
+        self._swaps["swaps"] += 1
+        self._swaps["last_swap_ms"] = ms
+        self._swaps["swap_recompiles"] += recompiles
+        return {"swap_ms": ms, "recompiles": recompiles,
+                "cache_dropped": dropped, "epoch": index.epoch}
+
+    def invalidate(self, nodes=None) -> int:
+        """Drop cached scores: all of them (``nodes=None``) or exactly
+        the entries that touch ``nodes``. Returns the count dropped.
+        The fix for the staleness hole this API closes is tested by
+        tests/test_engine.py::test_swap_cannot_serve_stale_scores."""
+        if nodes is None:
+            dropped = len(self._cache)
+            self._cache._d.clear()
+        else:
+            hot = set(np.asarray(nodes).ravel().tolist())
+            stale = [k for k in self._cache._d
+                     if (k[1] in hot) or (k[0] == "pair" and k[2] in hot)]
+            for k in stale:
+                del self._cache._d[k]
+            dropped = len(stale)
+        self._swaps["invalidated"] += dropped
+        return dropped
 
     # ------------------------------------------------------------------
     # dispatch helpers
@@ -291,6 +402,9 @@ class QueryEngine:
     def stats(self) -> dict:
         return {
             **self._counts,
+            **self._swaps,
+            "epoch": self.index.epoch,
+            "stale": self.index.stale,
             "cache_hits": self._cache.hits,
             "cache_misses": self._cache.misses,
             "cache_entries": len(self._cache),

@@ -80,6 +80,111 @@ def test_cache_eviction_bounded(small_graph, sling_index):
     assert eng.stats()["cache_entries"] <= 8
 
 
+def _churn(g, idx, seed=0, n_mut=8):
+    """Apply a small random churn batch to a *copy-built* index."""
+    from repro.core import build, update
+    delta = update.random_delta(g, n_add=n_mut, n_del=n_mut, seed=seed)
+    rep = build.update_index(idx, g, delta, exact_d=True)
+    return rep
+
+
+def _fresh_index(g):
+    from repro.core import build
+    return build.build_index(g, eps=0.1, exact_d=True, seed=0)
+
+
+def test_swap_cannot_serve_stale_scores(small_graph):
+    """Issue fix: the LRU must not serve pre-swap scores for nodes the
+    update affected -- the explicit invalidation inside swap_index()."""
+    from repro.core import build
+    g = small_graph
+    idx = _fresh_index(g)
+    eng = QueryEngine(idx, g, EngineConfig(pair_batch=16, source_batch=4,
+                                           cache_size=64))
+    rep = _churn(g, idx, seed=11)
+    hot = [int(x) for x in rep.affected[:4]]
+    # populate the cache *before* the swap for affected nodes
+    pre_pair = eng.pair(hot[0], hot[1])
+    eng.single_source([hot[2]])
+    eng.topk([hot[3]], 5)
+    eng.swap_index(idx, rep.graph, affected=rep.affected)
+    fresh = build.build_index(rep.graph, eps=0.1, exact_d=True, seed=0)
+    post = eng.pair(hot[0], hot[1])
+    assert post == pytest.approx(
+        fresh.query_pair_host(hot[0], hot[1]), abs=1e-4)
+    from repro.core.single_source import single_source_device
+    np.testing.assert_allclose(
+        eng.single_source([hot[2]]),
+        single_source_device(fresh, rep.graph, np.array([hot[2]])),
+        atol=1e-5)
+    del pre_pair  # the pre-swap value itself is irrelevant; serving it
+    #               post-swap is what the assertions above rule out
+
+
+def test_swap_triggers_zero_recompiles(small_graph):
+    """Hot-swap shape-stability contract: a fitting repaired index
+    swaps in with no new dispatch shapes and no bucket overflow."""
+    g = small_graph
+    idx = _fresh_index(g)
+    eng = QueryEngine(idx, g, EngineConfig(pair_batch=16, source_batch=4))
+    eng.warmup()
+    before = set(eng.stats()["unique_shapes"])
+    rng = np.random.default_rng(3)
+    for i in range(3):
+        rep = _churn(g, idx, seed=20 + i)
+        g = rep.graph
+        eng.swap_index(idx, g, affected=rep.affected)
+        us = rng.integers(0, idx.n, 5).astype(np.int32)
+        eng.pairs(us, us[::-1])
+        eng.single_source(us)
+        eng.topk(us, 7)
+    st = eng.stats()
+    assert set(st["unique_shapes"]) == before
+    assert st["swap_recompiles"] == 0
+    assert st["swaps"] == 3 and st["epoch"] == 3
+    assert st["last_swap_ms"] > 0
+
+
+def test_swap_bucket_overflow_is_counted_and_correct(small_graph):
+    """An index wider than the capacity bucket still swaps correctly --
+    it just pays one counted recompile."""
+    g = small_graph
+    idx = _fresh_index(g)
+    eng = QueryEngine(idx, g, EngineConfig(pair_batch=16, source_batch=4,
+                                           swap_headroom=1.0,
+                                           cap_quantum=1))
+    wide = _fresh_index(g)
+    grow = eng._width_cap + 7
+    keys = np.full((wide.n, grow), np.int32(2**31 - 1), np.int32)
+    vals = np.zeros((wide.n, grow), np.float32)
+    keys[:, :wide.hp.width] = wide.hp.keys
+    vals[:, :wide.hp.width] = wide.hp.vals
+    wide.hp.keys, wide.hp.vals, wide.hp.width = keys, vals, grow
+    out = eng.swap_index(wide, g)
+    assert out["recompiles"] == 1
+    assert eng.stats()["swap_recompiles"] == 1
+    ref = [wide.query_pair_host(i, (i * 7) % wide.n)
+           for i in range(10)]
+    got = eng.pairs(np.arange(10), (np.arange(10) * 7) % wide.n)
+    np.testing.assert_allclose(got, ref, atol=1e-4)
+
+
+def test_invalidate_is_targeted(small_graph, sling_index):
+    eng = QueryEngine(sling_index, small_graph,
+                      EngineConfig(pair_batch=16, source_batch=4,
+                                   cache_size=64))
+    eng.single_source([1])
+    eng.single_source([2])
+    eng.pair(1, 3)
+    eng.pair(4, 5)
+    assert eng.invalidate([1]) == 2      # ("src", 1) and ("pair", 1, 3)
+    b0 = eng.stats()["batches"]
+    eng.single_source([2])               # untouched entry still cached
+    eng.pair(4, 5)
+    assert eng.stats()["batches"] == b0
+    assert eng.invalidate() == 2         # full clear drops the rest
+
+
 def test_k_bucketing_shares_programs(engine):
     """k=2..9 all land in one bucket: one compiled topk program."""
     engine.topk([0], 2)

@@ -1,0 +1,267 @@
+"""Incremental maintenance (core/update.py): delta application, row
+repair vs from-scratch builds, staleness accounting, persistence."""
+import os
+
+import numpy as np
+import pytest
+
+from prop import forall
+
+from repro.core import build, diagonal, theory, update
+from repro.core.index import SlingIndex
+from repro.graph import csr, generators
+
+
+# ----------------------------------------------------------------------
+# graph layer: GraphDelta / apply_edges
+# ----------------------------------------------------------------------
+def _toy_graph():
+    #  0 -> 1, 0 -> 2, 1 -> 2, 3 -> 0
+    return csr.from_edges(4, [0, 0, 1, 3], [1, 2, 2, 0])
+
+
+def test_apply_edges_insert_delete_touched():
+    g = _toy_graph()
+    delta = csr.GraphDelta(add_src=np.array([2]), add_dst=np.array([3]),
+                           del_src=np.array([0]), del_dst=np.array([2]))
+    g2, touched, tv = csr.apply_edges(g, delta)
+    g2.validate()
+    assert g2.m == g.m  # one in, one out
+    assert sorted(touched.tolist()) == [2, 3]
+    assert 2 in set(g2.in_neighbors(3).tolist())  # 2 -> 3 present
+    assert 0 not in set(g2.in_neighbors(2).tolist())
+    assert len(tv) == len(touched) and np.all(tv > 0) and np.all(tv <= 1)
+    # node 3 gained its only in-edge: kernel change is total
+    assert tv[touched.tolist().index(3)] == 1.0
+
+
+def test_apply_edges_noops_do_not_touch():
+    g = _toy_graph()
+    delta = csr.GraphDelta(
+        add_src=np.array([0]), add_dst=np.array([1]),   # already there
+        del_src=np.array([2]), del_dst=np.array([0]))   # never existed
+    g2, touched, tv = csr.apply_edges(g, delta)
+    assert len(touched) == 0 and len(tv) == 0
+    assert g2.m == g.m
+    np.testing.assert_array_equal(g2.in_ptr, g.in_ptr)
+
+
+def test_apply_edges_add_and_delete_same_edge_is_noop():
+    g = _toy_graph()
+    delta = csr.GraphDelta(add_src=np.array([2]), add_dst=np.array([3]),
+                           del_src=np.array([2]), del_dst=np.array([3]))
+    g2, touched, _ = csr.apply_edges(g, delta)
+    assert len(touched) == 0 and g2.m == g.m
+
+
+def test_apply_edges_rejects_out_of_range():
+    g = _toy_graph()
+    with pytest.raises(ValueError):
+        csr.apply_edges(g, csr.GraphDelta.inserts([0], [7]))
+    # deletes must be checked too: key encoding src*n + dst would
+    # alias (0, 6) onto the real edge (1, 2) and silently remove it
+    with pytest.raises(ValueError):
+        csr.apply_edges(g, csr.GraphDelta.deletes([0], [6]))
+    with pytest.raises(ValueError):
+        csr.apply_edges(g, csr.GraphDelta.deletes([0], [-1]))
+
+
+def test_random_delta_shapes():
+    g = generators.barabasi_albert(60, 3, seed=0, directed=True)
+    d = update.random_delta(g, n_add=5, n_del=7, seed=1)
+    assert len(d.del_src) == 7 and len(d.add_src) <= 5
+    assert np.all(d.add_src != d.add_dst)
+
+
+# ----------------------------------------------------------------------
+# update_index vs from-scratch build
+# ----------------------------------------------------------------------
+def test_full_coverage_repair_equals_fresh_build(small_graph):
+    """Row repair seeded at every target reproduces a from-scratch
+    build's packed table entry for entry (Alg-2 columns are
+    independent, so repair == rebuild when nothing is skipped)."""
+    from repro.core import hp_index
+    g = small_graph
+    idx = build.build_index(g, eps=0.2, exact_d=True, seed=0)
+    delta = update.random_delta(g, n_add=6, n_del=6, seed=2)
+    g2, touched, _ = csr.apply_edges(g, delta)
+    assert len(touched) > 0
+    every = np.arange(g.n)
+    hp_index.repair_hp_rows(g2, idx.hp, rows=every, targets=every)
+    fresh = build.build_index(g2, eps=0.2, exact_d=True, seed=0)
+    np.testing.assert_array_equal(idx.hp.counts, fresh.hp.counts)
+    for v in range(g.n):
+        c = int(idx.hp.counts[v])
+        np.testing.assert_array_equal(idx.hp.keys[v, :c],
+                                      fresh.hp.keys[v, :c])
+        np.testing.assert_allclose(idx.hp.vals[v, :c],
+                                   fresh.hp.vals[v, :c], atol=1e-6)
+
+
+def _update_case(rng, i):
+    n = 200
+    g = generators.barabasi_albert(n, 3, seed=i,
+                                   directed=bool(i % 2))
+    kind = ("insert", "delete", "mixed")[i % 3]
+    return {"g": g, "kind": kind, "seed": i}
+
+
+@forall(_update_case, n=6)
+def test_update_within_planned_eps(g, kind, seed):
+    """Issue checklist: update_index on a random edge batch matches a
+    from-scratch build_index within the planned eps on 200-node graphs,
+    for inserts, deletes, and mixed batches."""
+    eps = 0.2
+    idx = build.build_index(g, eps=eps, exact_d=True, seed=0,
+                            stale_frac=0.2)
+    n_mut = max(2, g.m // 100)
+    full = update.random_delta(g, n_add=n_mut, n_del=n_mut, seed=seed)
+    z = np.zeros(0, np.int64)
+    if kind == "insert":
+        delta = csr.GraphDelta(full.add_src, full.add_dst, z, z)
+    elif kind == "delete":
+        delta = csr.GraphDelta(z, z, full.del_src, full.del_dst)
+    else:
+        delta = full
+    rep = build.update_index(idx, g, delta, exact_d=True)
+    fresh = build.build_index(rep.graph, eps=eps, exact_d=True, seed=0,
+                              stale_frac=0.2)
+    rng = np.random.default_rng(seed)
+    us = rng.integers(0, g.n, 200)
+    vs = rng.integers(0, g.n, 200)
+    err = np.abs(idx.query_pairs(us, vs)
+                 - fresh.query_pairs(us, vs)).max()
+    assert err <= idx.plan.eps, (kind, err)
+
+
+def test_update_grows_width_when_rows_overflow():
+    """A delta that densifies a neighborhood must grow the packed
+    width rather than truncate repaired rows."""
+    g = generators.barabasi_albert(80, 2, seed=3, directed=True)
+    idx = build.build_index(g, eps=0.3, exact_d=True, seed=0)
+    w0 = idx.hp.width
+    # wire many new in-edges into one hub's neighborhood
+    src = np.arange(30, 60, dtype=np.int64)
+    dst = np.zeros(30, np.int64)
+    rep = build.update_index(idx, g,
+                             csr.GraphDelta.inserts(src, dst),
+                             exact_d=True)
+    fresh = build.build_index(rep.graph, eps=0.3, exact_d=True, seed=0)
+    # 30 fresh step-1 entries land in the hub's row: it no longer fits
+    # the old packing, so the table must have been re-packed wider
+    assert rep.width_grew and idx.hp.width > w0
+    assert int(idx.hp.counts.max()) <= idx.hp.width
+    assert int(idx.hp.counts[0]) > w0  # the row that forced the growth
+    us = np.arange(g.n)
+    err = np.abs(idx.query_pairs(us, us)
+                 - fresh.query_pairs(us, us)).max()
+    assert err <= idx.plan.eps  # skipped repairs stay inside the plan
+
+
+def test_update_preserves_space_reduction(small_graph):
+    """Section-5.2 reduced rows stay reduced across an update: their
+    step-1/2 entries are rematerialized exactly from the *current*
+    graph at query time, so repaired indices must keep the flag (a
+    cleared flag would expose rows missing step-1/2 entries toward
+    unrepaired targets)."""
+    g = small_graph
+    idx = build.build_index(g, eps=0.2, exact_d=True, seed=0,
+                            space_reduce=True)
+    assert idx.reduced is not None and idx.reduced.any()
+    n_reduced = int(idx.reduced.sum())
+    delta = update.random_delta(g, n_add=5, n_del=5, seed=13)
+    rep = build.update_index(idx, g, delta, exact_d=True)
+    assert int(idx.reduced.sum()) == n_reduced
+    fresh = build.build_index(rep.graph, eps=0.2, exact_d=True, seed=0)
+    rng = np.random.default_rng(4)
+    red = np.flatnonzero(idx.reduced)
+    us = red[rng.integers(0, len(red), 60)]
+    vs = rng.integers(0, g.n, 60)
+    err = max(abs(idx.query_pair_host(int(u), int(v), rep.graph)
+                  - fresh.query_pair_host(int(u), int(v)))
+              for u, v in zip(us, vs))
+    assert err <= idx.plan.eps, err
+
+
+def test_noop_delta_is_noop(small_graph, sling_index):
+    idx = sling_index
+    e0 = idx.epoch
+    rep = build.update_index(idx, small_graph, csr.GraphDelta.empty())
+    assert rep.noop and idx.epoch == e0
+    assert rep.graph is small_graph
+
+
+def test_staleness_accumulates_and_triggers():
+    g = generators.barabasi_albert(120, 3, seed=5, directed=True)
+    idx = build.build_index(g, eps=0.2, exact_d=True, seed=0,
+                            stale_frac=0.2)
+    assert idx.plan.eps_stale == pytest.approx(0.04)
+    last = 0.0
+    fired = False
+    for i in range(12):
+        delta = update.random_delta(g, n_add=3, n_del=3, seed=10 + i)
+        rep = build.update_index(idx, g, delta, exact_d=True)
+        g = rep.graph
+        assert rep.stale >= last  # monotone, additive
+        last = rep.stale
+        fired = fired or rep.needs_rebuild
+        assert rep.needs_rebuild == (rep.stale > idx.plan.eps_stale)
+    assert idx.epoch == 12
+    assert fired, "staleness never reached the rebuild trigger"
+
+
+def test_subset_diagonal_matches_full_pass():
+    """estimate_diagonal over nodes=arange(n) reproduces the full pass
+    bit for bit (same RNG consumption), so incremental re-estimates
+    carry the same guarantee."""
+    g = generators.barabasi_albert(100, 3, seed=7, directed=True)
+    p = theory.plan(eps=0.3, c=0.6, n=g.n)
+    d_full = diagonal.estimate_diagonal(g, p, seed=3)
+    d_sub = diagonal.estimate_diagonal(g, p, seed=3,
+                                       nodes=np.arange(g.n),
+                                       d_init=np.zeros(g.n, np.float32))
+    np.testing.assert_allclose(d_full, d_sub, atol=1e-7)
+
+
+# ----------------------------------------------------------------------
+# persistence: INDEX_FORMAT.md contract
+# ----------------------------------------------------------------------
+def test_save_load_roundtrip_with_update_state(tmp_path, small_graph):
+    idx = build.build_index(small_graph, eps=0.2, exact_d=True, seed=0,
+                            stale_frac=0.2)
+    delta = update.random_delta(small_graph, 3, 3, seed=9)
+    build.update_index(idx, small_graph, delta, exact_d=True)
+    path = os.path.join(tmp_path, "idx.npz")
+    idx.save(path)
+    idx2 = SlingIndex.load(path)
+    assert idx2.epoch == idx.epoch == 1
+    assert idx2.stale == pytest.approx(idx.stale)
+    assert idx2.plan == idx.plan
+    np.testing.assert_array_equal(idx2.hp.keys, idx.hp.keys)
+    np.testing.assert_array_equal(idx2.hp.counts, idx.hp.counts)
+
+
+def test_load_refuses_future_format(tmp_path, sling_index):
+    import json
+    path = os.path.join(tmp_path, "idx.npz")
+    sling_index.save(path)
+    z = dict(np.load(path, allow_pickle=False))
+    meta = json.loads(str(z["meta"]))
+    meta["_format_version"] = 99
+    z["meta"] = json.dumps(meta)
+    np.savez(path, **z)
+    with pytest.raises(ValueError, match="format v99"):
+        SlingIndex.load(path)
+
+
+def test_load_refuses_unknown_plan_fields(tmp_path, sling_index):
+    import json
+    path = os.path.join(tmp_path, "idx.npz")
+    sling_index.save(path)
+    z = dict(np.load(path, allow_pickle=False))
+    meta = json.loads(str(z["meta"]))
+    meta["mystery_knob"] = 1.0
+    z["meta"] = json.dumps(meta)
+    np.savez(path, **z)
+    with pytest.raises(ValueError, match="mystery_knob"):
+        SlingIndex.load(path)
