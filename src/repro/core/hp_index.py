@@ -42,35 +42,28 @@ def _push_block(h, edge_src, edge_dst, w, theta, n: int):
     return hp, h_next
 
 
-@partial(jax.jit, static_argnames=("n",), donate_argnums=(0,))
-def _push_block_t(x, edge_src, edge_dst, w, theta, n: int):
-    """Transpose of :func:`_push_block`: one pruned *walk-distribution*
-    step. A sqrt(c)-walk sitting at v moves to each u in I(v) with
-    weight sqrt(c)/|I(v)| -- the same per-edge weight, flowing dst->src.
-    """
-    xp = jnp.where(x > theta, x, 0.0)
-    msgs = xp[edge_dst] * w[:, None]                 # (m, B)
-    x_next = jax.ops.segment_sum(msgs, edge_src, num_segments=n)
-    return xp, x_next
-
-
 @partial(jax.jit, static_argnames=("n", "l_max", "transpose"))
 def _mass_scan(h0, edge_src, edge_dst, w, theta_r, n: int, l_max: int,
                transpose: bool):
     """acc[v, c] = sum_l (pruned propagation of column c at step l)[v],
-    fused into one XLA program (no per-step host sync)."""
+    fused into one XLA program (no per-step host sync). Also returns
+    skip[v, c] = sum_l (the sub-theta_r mass the prune zeroed at v
+    before step l propagated) -- the part of the true propagation the
+    thresholded scan does *not* carry forward, measured per step
+    before it is discarded."""
     s, d = (edge_dst, edge_src) if transpose else (edge_src, edge_dst)
 
     def step(carry, _):
-        h, acc = carry
+        h, acc, skip = carry
         hp = jnp.where(h > theta_r, h, 0.0)
         msgs = hp[s] * w[:, None]
         h_next = jax.ops.segment_sum(msgs, d, num_segments=n)
-        return (h_next, acc + hp), None
+        return (h_next, acc + hp, skip + (h - hp)), None
 
-    (_, acc), _ = jax.lax.scan(step, (h0, jnp.zeros_like(h0)), None,
-                               length=l_max + 1)
-    return acc
+    (_, acc, skip), _ = jax.lax.scan(
+        step, (h0, jnp.zeros_like(h0), jnp.zeros_like(h0)), None,
+        length=l_max + 1)
+    return acc, skip
 
 
 def propagation_mass(g: csr.Graph, seeds: np.ndarray, sqrt_c: float,
@@ -93,10 +86,15 @@ def propagation_mass(g: csr.Graph, seeds: np.ndarray, sqrt_c: float,
       colmax[v]  -- largest single-seed mass at v (the affected-set
                     criterion: one changed in-neighborhood moves v's
                     state by at most this much);
-      total[v]   -- mass summed over all seeds;
-      skipped[v] -- the sub-theta_r part of that sum, i.e. the
-                    *measured* influence an affected-set cut at theta_r
-                    leaves unrepaired (theory.stale_increment input).
+      total[v]   -- surviving (>theta_r) mass summed over all seeds;
+      skipped[v] -- the mass the per-step prune zeroed at v, summed
+                    over steps and seeds: the *measured* influence an
+                    affected-set cut at theta_r leaves unrepaired
+                    (theory.stale_increment input). Accumulated
+                    separately from ``total`` because every surviving
+                    per-step contribution exceeds theta_r by
+                    construction -- the pruned part must be captured
+                    before the prune discards it.
     """
     n = g.n
     edge_src = jnp.asarray(g.edge_src)
@@ -110,12 +108,13 @@ def propagation_mass(g: csr.Graph, seeds: np.ndarray, sqrt_c: float,
         sub = seeds[b0:b0 + block]
         wsub = None if weights is None else weights[b0:b0 + block]
         h = _one_hot_block(n, sub, block, weights=wsub)
-        acc = np.asarray(_mass_scan(h, edge_src, edge_dst, w,
-                                    jnp.float32(theta_r), n, l_max,
-                                    transpose), dtype=np.float64)
+        acc_d, skip_d = _mass_scan(h, edge_src, edge_dst, w,
+                                   jnp.float32(theta_r), n, l_max,
+                                   transpose)
+        acc = np.asarray(acc_d, dtype=np.float64)
         colmax = np.maximum(colmax, acc.max(axis=1))
         total += acc.sum(axis=1)
-        skipped += np.where(acc <= theta_r, acc, 0.0).sum(axis=1)
+        skipped += np.asarray(skip_d, dtype=np.float64).sum(axis=1)
     return colmax, total, skipped
 
 

@@ -138,17 +138,41 @@ class SlingIndex:
         stale = meta.pop("_stale", 0.0)
         epoch = meta.pop("_epoch", 0)
         known = {f.name for f in dataclasses.fields(theory.SlingPlan)}
-        unknown = set(meta) - known
+        # INDEX_FORMAT.md rules 3/4: unknown *plan* fields are refused
+        # (a silently dropped knob would misreport the error budget),
+        # but underscore-prefixed metadata is additive -- a same-major
+        # newer writer may add e.g. `_created_at` and the file must
+        # still load.
+        unknown = {k for k in meta if not k.startswith("_")} - known
         if unknown:
             raise ValueError(f"index plan has unknown fields {unknown}; "
                              "refusing to drop them (INDEX_FORMAT.md)")
-        plan = theory.SlingPlan(**meta)
+        plan = theory.SlingPlan(**{k: v for k, v in meta.items()
+                                   if k in known})
         n, width = z["keys"].shape
         if z["d"].shape != (n,) or z["vals"].shape != (n, width) \
                 or z["counts"].shape != (n,):
             raise ValueError("index arrays are inconsistent: "
                              f"keys {z['keys'].shape} d {z['d'].shape} "
                              f"vals {z['vals'].shape} counts {z['counts'].shape}")
+        # the packed-row invariants INDEX_FORMAT.md tells readers they
+        # may rely on: live prefix within width, strictly increasing
+        # live keys, every live key decoding to l <= l_max, k < n
+        counts, keys = z["counts"], z["keys"]
+        if counts.min() < 0 or counts.max() > width:
+            raise ValueError("counts outside [0, width] "
+                             "(INDEX_FORMAT.md invariants)")
+        live = np.arange(width)[None, :] < counts[:, None]
+        key_cap = np.int64(plan.l_max + 1) * np.int64(n)
+        if np.any(live & ((keys < 0) | (keys.astype(np.int64) >= key_cap))):
+            raise ValueError("live key outside [0, (l_max+1)*n) "
+                             "(INDEX_FORMAT.md invariants)")
+        if width > 1 and np.any(
+                (np.arange(1, width)[None, :] < counts[:, None])
+                & (np.diff(keys.astype(np.int64), axis=1) <= 0)):
+            raise ValueError("row keys not strictly increasing over "
+                             "the live prefix (INDEX_FORMAT.md "
+                             "invariants)")
         hp = HPTable(n=n, width=width, keys=z["keys"], vals=z["vals"],
                      counts=z["counts"], theta=plan.theta,
                      sqrt_c=plan.sqrt_c, l_max=plan.l_max)

@@ -108,19 +108,40 @@ def stale_increment(p: SlingPlan, theta_r: float, m_rows: float,
     threshold ``theta_r`` (DESIGN.md section 7); the charge is built
     from the *measured* mass it skipped, not a worst-case count:
 
-      * ``m_rows`` -- the largest hitting mass of any *unrepaired* row
-        onto the touched set. Only walk mass that crosses a touched
-        node can change an H row (transitions elsewhere are
-        untouched), so each query endpoint's row moved by at most
-        m_rows in l1, and a pair/source score by at most 2 * m_rows.
-      * ``m_d`` -- the largest hitting mass among in-neighbors of any
-        node whose d_k re-estimate was skipped. mu_k (Eq. 15) averages
-        in-neighbor pair SimRank, each of which moves by <= 2 * m_d,
-        so |d_k drift| <= 2 c m_d, entering scores through Theorem 1's
-        d-term as 2 c m_d / (1 - c).
-      * ``+ theta_r`` -- a floor for what the pruned mass propagation
-        itself cannot see (its own per-step prune deficit, the Lemma-7
-        analogue at theta_r).
+      * ``m_rows`` -- the largest *first-generation* sub-threshold
+        drift mass the repair left uncaptured at any node: the
+        per-step pruned remainder of the touched-set propagation,
+        accumulated before the prune discards it
+        (hp_index.propagation_mass's ``skipped``). Only walk mass that
+        crosses a touched node can change an H row (transitions
+        elsewhere are untouched). A pruned packet also has
+        *descendants* the measurement cannot see -- the mass it would
+        have deposited downstream at later steps, geometrically
+        discounted by sqrt(c) per step -- so the charge amplifies the
+        measured mass by sum_j (sqrt c)^j = 1/(1 - sqrt c): each query
+        endpoint's row is charged m_rows/(1 - sqrt c) in l1, a
+        pair/source score 2 * m_rows / (1 - sqrt c). A flat 2 * m_rows
+        would under-count the descendant tail by ~4.4x at c = 0.6 on
+        exactly the large-churn batches where m_rows dominates.
+      * ``m_d`` -- the largest mean in-neighbor drift proxy (kept +
+        first-generation pruned hitting mass, update.affected_sets'
+        ``nb_drift``) of any node whose d_k re-estimate was skipped.
+        mu_k (Eq. 15) averages in-neighbor pair SimRank, each of which
+        moves by <= 2 * (m_d + theta_r) / (1 - sqrt c) -- the same
+        descendant amplification and never-materialized floor as the
+        row channel, since neighbor drift *is* row drift -- so
+        |d_k drift| <= 2 c (m_d + theta_r)/(1 - sqrt c), entering
+        scores through Theorem 1's d-term with the 1/(1 - c) factor.
+      * the ``+ theta_r`` floors -- mass the propagation never
+        materializes at all (per-step packets below theta_r from the
+        start), with the same geometric descendant tail: the Lemma-7
+        analogue at theta_r bounds the cumulative per-column deficit
+        by (1 - (sqrt c)^l) / (1 - sqrt c) * theta_r
+        < theta_r / (1 - sqrt c). The floor rides inside each
+        channel's per-endpoint term -- every endpoint row (and every
+        in-neighbor row feeding a mu_k) carries its own uncaptured
+        remainder, so it is doubled exactly where the measured mass
+        is.
 
     The charge is monotone, additive across batches, and zero-cost to
     evaluate, which is what the rebuild trigger needs: once the
@@ -129,7 +150,8 @@ def stale_increment(p: SlingPlan, theta_r: float, m_rows: float,
     ``needs_rebuild`` (serving degrades gracefully -- scores drift by
     the accumulated charge, they do not explode).
     """
-    return 2.0 * m_rows + 2.0 * p.c * m_d / (1 - p.c) + theta_r
+    return (2.0 * (m_rows + theta_r) / (1.0 - p.sqrt_c)
+            + 2.0 * p.c * (m_d + theta_r) / ((1 - p.c) * (1.0 - p.sqrt_c)))
 
 
 def phase2_pairs(mu_hat: float, eps_d: float, delta_d: float,

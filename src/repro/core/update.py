@@ -113,12 +113,17 @@ def affected_sets(g_old: csr.Graph, g_new: csr.Graph,
     # proxies, and the threshold is the eps_d scale, not theta: a
     # skipped d_k drifts by at worst the error scale its Monte-Carlo
     # estimate was already granted -- charged via stale_increment's
-    # measured d-term. This is the knob that keeps |D| << n (the
-    # diagonal dominates build time).
+    # measured d-term. The proxy counts kept *plus* first-generation
+    # pruned mass: influence that reaches an in-neighbor entirely via
+    # sub-theta_r packets (hittot ~ 0 there) still moves its pair
+    # SimRank and hence d_k, so it must be visible both to the repair
+    # criterion and to the skipped-charge m_d. This is the knob that
+    # keeps |D| << n (the diagonal dominates build time).
     n = g_new.n
     deg = np.maximum(g_new.in_deg, 1).astype(np.float64)
+    hitdrift = hittot + hitskip
     nb_drift = np.zeros(n, np.float64)
-    np.add.at(nb_drift, g_new.edge_dst, hittot[g_new.edge_src])
+    np.add.at(nb_drift, g_new.edge_dst, hitdrift[g_new.edge_src])
     nb_drift /= deg
     tau_d = max(theta_r, plan.eps_d / (2 * plan.c))
     d_hot = nb_drift > tau_d

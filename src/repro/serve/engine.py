@@ -182,9 +182,13 @@ class QueryEngine:
         invalidation. Overflow grows the bucket and is counted in
         ``stats()["swap_recompiles"]`` (the next dispatch recompiles).
 
-        ``affected`` (e.g. ``UpdateReport.affected``) restricts cache
-        invalidation to entries touching those nodes; ``None`` drops
-        the whole cache. Returns swap metrics (also in ``stats()``).
+        ``affected`` (e.g. ``UpdateReport.affected``) restricts
+        invalidation of *pair* entries to those reading an affected
+        node (as an endpoint or as a meeting node whose d_k the repair
+        may have re-estimated); cached single-source/top-k vectors
+        hold scores for every target node, so any non-empty
+        ``affected`` drops all of them. ``None`` drops the whole
+        cache. Returns swap metrics (also in ``stats()``).
         """
         t0 = time.perf_counter()
         if index.n != self.index.n:
@@ -210,22 +214,48 @@ class QueryEngine:
                 "cache_dropped": dropped, "epoch": index.epoch}
 
     def invalidate(self, nodes=None) -> int:
-        """Drop cached scores: all of them (``nodes=None``) or exactly
-        the entries that touch ``nodes``. Returns the count dropped.
-        The fix for the staleness hole this API closes is tested by
-        tests/test_engine.py::test_swap_cannot_serve_stale_scores."""
+        """Drop cached scores whose value may depend on ``nodes``
+        (``nodes=None`` drops everything). A single-source or top-k
+        entry holds scores for *all* n targets -- a cached vector for
+        an unaffected source still contains stale scores *at* affected
+        targets (e.g. a node gaining its first in-edge moves s(u, v)
+        from 0 to ~c*d_w for sources u far outside the repaired set)
+        -- so any non-empty hot set drops every one of them. A pair
+        entry depends on its endpoints' HP rows *and* on d at their
+        meeting nodes (the cached value is sum h_u * h_v * d_k over
+        shared keys), so it is dropped when an endpoint or a meeting
+        node is hot. Returns the count dropped. Tested by
+        tests/test_engine.py::test_swap_cannot_serve_stale_scores,
+        ::test_unaffected_source_cache_cannot_hide_affected_targets
+        and ::test_unaffected_pair_dropped_when_meeting_node_hot."""
         if nodes is None:
             dropped = len(self._cache)
             self._cache._d.clear()
         else:
             hot = set(np.asarray(nodes).ravel().tolist())
-            stale = [k for k in self._cache._d
-                     if (k[1] in hot) or (k[0] == "pair" and k[2] in hot)]
+            stale = [] if not hot else [
+                k for k in self._cache._d
+                if k[0] != "pair" or k[1] in hot or k[2] in hot
+                or self._pair_meets_hot(k[1], k[2], hot)]
             for k in stale:
                 del self._cache._d[k]
             dropped = len(stale)
         self._swaps["invalidated"] += dropped
         return dropped
+
+    def _pair_meets_hot(self, u: int, v: int, hot: set) -> bool:
+        """Does the cached pair (u, v) read d at a hot meeting node?
+        Checked against the *current* index: the endpoints are not hot,
+        so their rows were not repaired and the key intersection equals
+        the one the cached value was computed from."""
+        hp = self.index.hp
+        ku = hp.keys[u, :hp.counts[u]]
+        kv = hp.keys[v, :hp.counts[v]]
+        meet = np.intersect1d(ku, kv, assume_unique=True)
+        if not len(meet):
+            return False
+        return not hot.isdisjoint(
+            (meet.astype(np.int64) % self.index.n).tolist())
 
     # ------------------------------------------------------------------
     # dispatch helpers

@@ -108,17 +108,87 @@ def test_swap_cannot_serve_stale_scores(small_graph):
     eng.single_source([hot[2]])
     eng.topk([hot[3]], 5)
     eng.swap_index(idx, rep.graph, affected=rep.affected)
-    fresh = build.build_index(rep.graph, eps=0.1, exact_d=True, seed=0)
+    # the engine must serve the repaired index (idx, mutated in place),
+    # not the pre-swap cache: tight comparison against direct dispatch
+    # on idx; repair-vs-fresh accuracy is a plan-eps property
+    # (tests/test_update.py), checked loosely below
     post = eng.pair(hot[0], hot[1])
     assert post == pytest.approx(
-        fresh.query_pair_host(hot[0], hot[1]), abs=1e-4)
+        idx.query_pair_host(hot[0], hot[1]), abs=1e-4)
     from repro.core.single_source import single_source_device
+    got_src = eng.single_source([hot[2]])
     np.testing.assert_allclose(
-        eng.single_source([hot[2]]),
-        single_source_device(fresh, rep.graph, np.array([hot[2]])),
+        got_src, single_source_device(idx, rep.graph, np.array([hot[2]])),
         atol=1e-5)
+    fresh = build.build_index(rep.graph, eps=0.1, exact_d=True, seed=0)
+    assert abs(post - fresh.query_pair_host(hot[0], hot[1])) <= idx.plan.eps
+    assert np.abs(got_src - single_source_device(
+        fresh, rep.graph, np.array([hot[2]]))).max() <= idx.plan.eps
     del pre_pair  # the pre-swap value itself is irrelevant; serving it
     #               post-swap is what the assertions above rule out
+
+
+def test_unaffected_source_cache_cannot_hide_affected_targets(small_graph):
+    """A cached single-source/top-k vector for an UNAFFECTED source u
+    still holds scores *at* affected targets, so targeted invalidation
+    keyed on the query node alone would leak pre-swap scores through
+    it. After swap_index(affected=...), those vectors must be served
+    fresh from the repaired index."""
+    from repro.core.single_source import single_source_device
+    g = small_graph
+    idx = _fresh_index(g)
+    eng = QueryEngine(idx, g, EngineConfig(pair_batch=16, source_batch=4,
+                                           cache_size=64))
+    rep = _churn(g, idx, seed=7)
+    cold = np.setdiff1d(np.arange(idx.n), rep.affected)[:8]
+    assert len(cold), "churn affected every node; pick another seed"
+    pre = eng.single_source(cold).copy()   # populate the cache pre-swap
+    eng.topk(cold, 5)
+    eng.swap_index(idx, rep.graph, affected=rep.affected)
+    # idx was repaired in place: direct dispatch on it is the truth the
+    # engine must now serve (a stale cache hit would return `pre`)
+    ref = np.asarray(single_source_device(idx, rep.graph, cold))
+    got = eng.single_source(cold)
+    np.testing.assert_allclose(got, ref, atol=1e-6)
+    # the guard has teeth only if some cold-source score really moved
+    # at an affected target
+    aff = np.asarray(rep.affected, np.int64)
+    assert np.abs(pre[:, aff] - ref[:, aff]).max() > 1e-5
+    # top-k for a cold source must likewise reflect the repaired index
+    sv, _ = eng.topk(cold, 5)
+    ref_sv = np.sort(ref, axis=1)[:, ::-1][:, :5]
+    np.testing.assert_allclose(sv, ref_sv, atol=1e-6)
+    # end-to-end: repaired scores stay within the planned eps of a
+    # from-scratch build on the mutated graph
+    from repro.core import build
+    fresh = build.build_index(rep.graph, eps=0.1, exact_d=True, seed=0)
+    fref = np.asarray(single_source_device(fresh, rep.graph, cold))
+    assert np.abs(got - fref).max() <= idx.plan.eps
+
+
+def test_unaffected_pair_dropped_when_meeting_node_hot(small_graph):
+    """A cached pair whose endpoints are both unaffected still reads
+    d_k at its meeting nodes; when the repair re-estimated such a d_k
+    the entry must not survive the swap, or the old d_k leaks through
+    a pair with two cold endpoints."""
+    g = small_graph
+    idx = _fresh_index(g)
+    eng = QueryEngine(idx, g, EngineConfig(pair_batch=16, source_batch=4,
+                                           cache_size=64))
+    rep = _churn(g, idx, seed=7)
+    aff = set(int(x) for x in rep.affected)
+    cold = [u for u in range(idx.n) if u not in aff]
+    # cold-endpoint rows are unrepaired, so their meeting sets are the
+    # same before and after the churn
+    found = next(((u, v) for u in cold for v in cold
+                  if u < v and _meeting_nodes(idx, u, v) & aff), None)
+    assert found, "no cold pair meets an affected node; pick another seed"
+    u, v = found
+    eng.pair(u, v)                            # cached pre-swap
+    eng.swap_index(idx, rep.graph, affected=rep.affected)
+    assert ("pair", u, v) not in eng._cache._d
+    assert eng.pair(u, v) == pytest.approx(
+        idx.query_pair_host(u, v), abs=1e-4)
 
 
 def test_swap_triggers_zero_recompiles(small_graph):
@@ -169,19 +239,43 @@ def test_swap_bucket_overflow_is_counted_and_correct(small_graph):
     np.testing.assert_allclose(got, ref, atol=1e-4)
 
 
+def _meeting_nodes(idx, u, v):
+    """Nodes k whose d_k the cached pair value (u, v) reads:
+    s = sum over shared keys (l, k) of h_u * h_v * d_k."""
+    hp = idx.hp
+    ku = hp.keys[u, :hp.counts[u]]
+    kv = hp.keys[v, :hp.counts[v]]
+    return set((np.intersect1d(ku, kv).astype(np.int64) % idx.n).tolist())
+
+
 def test_invalidate_is_targeted(small_graph, sling_index):
+    """Single-source/top-k vectors span every target, so any non-empty
+    hot set drops all of them; a pair entry survives iff the hot set
+    misses its endpoints AND its meeting nodes (the value reads d_k
+    there)."""
     eng = QueryEngine(sling_index, small_graph,
                       EngineConfig(pair_batch=16, source_batch=4,
                                    cache_size=64))
-    eng.single_source([1])
-    eng.single_source([2])
-    eng.pair(1, 3)
-    eng.pair(4, 5)
-    assert eng.invalidate([1]) == 2      # ("src", 1) and ("pair", 1, 3)
+    n, hot = sling_index.n, 1
+    cold_pair = next((a, b) for a in range(2, n) for b in range(a + 1, n)
+                     if hot not in _meeting_nodes(sling_index, a, b))
+    met_pair = next((a, b) for a in range(2, n) for b in range(a + 1, n)
+                    if hot in _meeting_nodes(sling_index, a, b))
+    eng.single_source([hot])
+    eng.single_source([5])
+    eng.topk([6], 5)
+    eng.pair(*cold_pair)
+    eng.pair(*met_pair)
+    # dropped: both source vectors + the topk vector (they hold a score
+    # at the hot node) + the pair meeting it through d_1; the pair that
+    # reads the hot node nowhere survives
+    assert eng.invalidate([hot]) == 4
     b0 = eng.stats()["batches"]
-    eng.single_source([2])               # untouched entry still cached
-    eng.pair(4, 5)
+    eng.pair(*cold_pair)                 # untouched pair still cached
     assert eng.stats()["batches"] == b0
+    eng.pair(*met_pair)                  # dropped: re-dispatches
+    assert eng.stats()["batches"] == b0 + 1
+    assert eng.invalidate([]) == 0       # empty hot set: no-op
     assert eng.invalidate() == 2         # full clear drops the rest
 
 

@@ -48,6 +48,31 @@ def test_keys_sorted_and_padded(small_graph):
         assert np.all(keys[c:] == hp_index.INT32_PAD_KEY)
 
 
+def test_propagation_mass_measures_pruned_remainder(small_graph):
+    """`skipped` is the mass the per-step prune zeroed before
+    propagating: nonzero whenever pruning bites (regression -- a
+    sub-threshold filter on the *kept* accumulator is identically
+    zero, because every surviving per-step contribution exceeds
+    theta_r), bounded by (l_max+1)*theta_r per seed column, and
+    kept + skipped never exceeds the un-thresholded mass."""
+    from repro.core import hp_index
+    g = small_graph
+    sc, L, theta_r = 0.7746, 8, 0.02
+    seeds = np.arange(0, g.n, 7)
+    _, total, skipped = hp_index.propagation_mass(g, seeds, sc,
+                                                  theta_r, L)
+    assert skipped.max() > 0
+    assert skipped.max() <= (L + 1) * theta_r * len(seeds) + 1e-9
+    exact = hp_index.exact_hp_vectors(g, seeds, sc, L)  # (L+1, n, S)
+    exact_tot = exact.sum(axis=(0, 2))
+    assert np.all(total + skipped <= exact_tot + 1e-5)
+    # theta_r = 0 prunes nothing: skipped vanishes and the kept mass
+    # is the exact propagation
+    _, tot0, skip0 = hp_index.propagation_mass(g, seeds, sc, 0.0, L)
+    assert skip0.max() == 0
+    np.testing.assert_allclose(tot0, exact_tot, rtol=1e-4, atol=1e-5)
+
+
 def test_spill_mode_equals_in_memory(tmp_path, small_graph):
     from repro.core import hp_index
     g = small_graph

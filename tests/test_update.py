@@ -265,3 +265,51 @@ def test_load_refuses_unknown_plan_fields(tmp_path, sling_index):
     np.savez(path, **z)
     with pytest.raises(ValueError, match="mystery_knob"):
         SlingIndex.load(path)
+
+
+def test_load_accepts_additive_underscore_metadata(tmp_path, sling_index):
+    """INDEX_FORMAT.md rule 4: a same-major newer writer may add
+    underscore metadata; such a file must still load (rule 3 exempts
+    underscore keys from the unknown-plan-field refusal)."""
+    import json
+    path = os.path.join(tmp_path, "idx.npz")
+    sling_index.save(path)
+    z = dict(np.load(path, allow_pickle=False))
+    meta = json.loads(str(z["meta"]))
+    meta["_created_at"] = "2026-07-28T00:00:00Z"
+    z["meta"] = json.dumps(meta)
+    np.savez(path, **z)
+    idx2 = SlingIndex.load(path)
+    assert idx2.plan == sling_index.plan
+
+
+def test_load_enforces_packed_row_invariants(tmp_path, sling_index):
+    """INDEX_FORMAT.md: readers may rely on counts <= width, strictly
+    increasing live keys, and in-range key decodes -- load must refuse
+    a file violating any of them rather than serve wrong scores."""
+    path = os.path.join(tmp_path, "idx.npz")
+
+    def corrupt(mutate):
+        sling_index.save(path)
+        z = dict(np.load(path, allow_pickle=False))
+        mutate(z)
+        np.savez(path, **z)
+        with pytest.raises(ValueError, match="INDEX_FORMAT.md"):
+            SlingIndex.load(path)
+
+    def bad_counts(z):
+        z["counts"] = z["counts"].copy()
+        z["counts"][0] = z["keys"].shape[1] + 5
+
+    def bad_sort(z):
+        z["keys"] = z["keys"].copy()
+        v = int(np.argmax(z["counts"] >= 2))
+        assert z["counts"][v] >= 2
+        z["keys"][v, [0, 1]] = z["keys"][v, [1, 0]]
+
+    def bad_range(z):
+        z["keys"] = z["keys"].copy()
+        z["keys"][0, 0] = -3
+
+    for mutate in (bad_counts, bad_sort, bad_range):
+        corrupt(mutate)
