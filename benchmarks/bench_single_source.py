@@ -2,8 +2,21 @@
 
 SLING Algorithm 6 (paper), the beyond-paper Horner push, the naive
 n x Alg-3 strawman, the batched device path, and Linearize.
+
+``python -m benchmarks.bench_single_source --mesh S`` adds the scaling
+rows (EXPERIMENTS.md section Scaling): the node-sharded engine's
+batched multi-source throughput at mesh sizes 1 and S, equivalence
+against the single-device answer, and a zero-recompile assertion
+across the micro-batches. Run as its own process -- the S host devices
+must be forced before jax initializes (done here when XLA_FLAGS is
+unset); ``run.py --smoke`` drives the 2-shard check through
+``mesh_subprocess``.
 """
 from __future__ import annotations
+
+import os
+import subprocess
+import sys
 
 import numpy as np
 
@@ -54,3 +67,89 @@ def run(sizes=(300, 1000, 3000), eps: float = 0.15, n_q: int = 5):
         t = timeit(lambda: [linearize.query_single_source(lin, g, int(u))
                             for u in qs])
         emit(f"fig2/single_source/linearize/n={n}", t / n_q, "")
+
+
+# ----------------------------------------------------------------------
+# scaling rows: node-sharded serving over a device mesh
+# ----------------------------------------------------------------------
+def run_mesh(n: int = 1000, mesh: int = 4, eps: float = 0.15,
+             n_q: int = 32, batch: int = 8) -> None:
+    """Batched multi-source throughput on the node-sharded engine.
+
+    Emits one row per mesh size in (1, mesh); asserts the sharded
+    answers match the single-device engine and that the micro-batch
+    stream compiles zero new programs after warmup.
+    """
+    import jax
+
+    from repro.core import shard_query
+    from repro.serve import EngineConfig, QueryEngine
+    if jax.device_count() < mesh:
+        raise RuntimeError(
+            f"--mesh {mesh} needs {mesh} devices, found "
+            f"{jax.device_count()}; run as its own process so "
+            "XLA_FLAGS can force host devices")
+    g = generators.barabasi_albert(n, 3, seed=0, directed=False)
+    idx = build.build_index(g, eps=eps, seed=0)
+    rng = np.random.default_rng(0)
+    qs = rng.integers(0, g.n, n_q).astype(np.int32)
+    ref = None
+    for S in sorted({1, mesh}):
+        m = shard_query.serving_mesh(S) if S > 1 else None
+        eng = QueryEngine(idx, g, EngineConfig(source_batch=batch,
+                                               cache_size=0, mesh=m))
+        eng.warmup()
+        shapes0 = len(eng.stats()["unique_shapes"])
+        got = eng.single_source(qs)           # the measured micro-batch
+        if ref is None:
+            ref = got
+        else:
+            err = np.abs(got - ref).max()
+            assert err < 1e-4, f"sharded != single-device: {err}"
+        t_us = timeit(lambda: eng.single_source(qs))   # us per stream
+        grew = len(eng.stats()["unique_shapes"]) - shapes0
+        assert grew == 0, f"micro-batch recompiled: {grew} new shapes"
+        qps = n_q / (t_us * 1e-6)
+        emit(f"fig2/single_source/sling_sharded/mesh={S}/n={n}",
+             t_us / n_q,
+             f"{qps:.0f} q/s batched multi-source, zero-recompile OK")
+    print("MESH_OK")
+
+
+def mesh_subprocess(mesh: int = 2, n: int = 300) -> None:
+    """run.py --smoke hook: the sharded query check in a subprocess
+    (host devices must be forced before the child's jax initializes).
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={mesh}"
+    env.setdefault("PYTHONPATH", "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_single_source",
+         "--mesh", str(mesh), "--n", str(n), "--queries", "16"],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert "MESH_OK" in r.stdout, r.stdout + r.stderr
+    for line in r.stdout.splitlines():
+        if line.startswith("fig2/"):
+            print(line)
+
+
+def _main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", type=int, default=4)
+    ap.add_argument("--n", type=int, default=1000)
+    ap.add_argument("--eps", type=float, default=0.15)
+    ap.add_argument("--queries", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+    # before any jax computation: module imports above only define jits
+    os.environ.setdefault(
+        "XLA_FLAGS",
+        f"--xla_force_host_platform_device_count={args.mesh}")
+    print("name,us_per_call,derived")
+    run_mesh(n=args.n, mesh=args.mesh, eps=args.eps,
+             n_q=args.queries, batch=args.batch)
+
+
+if __name__ == "__main__":
+    _main()

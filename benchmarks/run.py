@@ -43,6 +43,10 @@ def main() -> None:
     if want("source"):
         from benchmarks import bench_single_source
         bench_single_source.run(sizes=sizes)
+        if args.smoke:
+            # 2-shard sharded-serving check (subprocess: forces host
+            # devices before the child's jax backend initializes)
+            bench_single_source.mesh_subprocess(mesh=2, n=300)
     if want("preprocess"):
         from benchmarks import bench_preprocess
         bench_preprocess.run(sizes=sizes[:2])

@@ -13,6 +13,10 @@ cd "$(dirname "$0")/.."
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
+echo "== sharded serving suite (forced 4 host devices) =="
+XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    python -m pytest -x -q -m mesh
+
 echo "== smoke benchmark (500-node serving guard) =="
 PYTHONPATH=src python -m benchmarks.run --smoke
 echo "CI OK"

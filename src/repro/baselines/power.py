@@ -20,13 +20,18 @@ from repro.graph import csr
 
 
 def transition_dense(g: csr.Graph) -> np.ndarray:
-    """W(i, u) = 1/|I(i)| for u in I(i): the reverse-walk step matrix
-    (row i = distribution over in-neighbors of i). W = P^T."""
+    """W(i, u) = mult(u -> i)/|I(i)|: the reverse-walk step matrix
+    (row i = distribution over in-neighbors of i). W = P^T.
+
+    Accumulated with np.add.at so multigraphs (parallel edges, each a
+    distinct transition) get row-stochastic rows; plain fancy-index
+    assignment would keep only one parallel edge's mass.
+    """
     W = np.zeros((g.n, g.n), dtype=np.float64)
     deg = g.in_deg
     for v in range(g.n):
         if deg[v]:
-            W[v, g.in_neighbors(v)] = 1.0 / deg[v]
+            np.add.at(W[v], g.in_neighbors(v), 1.0 / deg[v])
     return W
 
 

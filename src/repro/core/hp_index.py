@@ -134,6 +134,48 @@ def _one_hot_block(n: int, sub: np.ndarray, block: int,
     return h.at[jnp.asarray(sub), jnp.arange(len(sub))].set(vals)
 
 
+def capacity_bucket(x: int, quantum: int = 64,
+                    headroom: float = 1.25) -> int:
+    """Smallest multiple of ``quantum`` >= x * headroom (>= quantum).
+
+    The shared device-array sizing rule behind hot-swap shape
+    stability (DESIGN.md sections 7-8): arrays padded to a capacity
+    bucket keep their compiled shapes across incremental swaps until
+    the bucket overflows, and an overflow is counted, never silent.
+    """
+    return max(quantum, int(-(-int(x * headroom) // quantum) * quantum))
+
+
+def shard_layout(n: int, n_shards: int) -> tuple[int, int]:
+    """(n_pad, n_loc): the node count padded so ``n_shards`` equal
+    slabs of ``n_loc`` rows tile it exactly (shard s owns global ids
+    [s*n_loc, (s+1)*n_loc); ids >= n are padding)."""
+    if not (1 <= n_shards <= n):
+        raise ValueError(f"need 1 <= n_shards <= n, got {n_shards}/{n}")
+    n_loc = -(-n // n_shards)
+    return n_loc * n_shards, n_loc
+
+
+def pad_packed_rows(hp: "HPTable", n_pad: int,
+                    width_cap: int) -> tuple[np.ndarray, np.ndarray]:
+    """Shard-sliceable packed layout: (n_pad, width_cap) keys/vals.
+
+    Row i < n is H(i) right-padded with the INT32_PAD_KEY sentinel
+    (every join and push already ignores it); rows >= n are all-PAD, so
+    a slab slice of the result is a self-contained packed table for the
+    slab's nodes. ``width_cap`` is the capacity bucket the serving
+    layer compiled against.
+    """
+    if width_cap < hp.width or n_pad < hp.n:
+        raise ValueError(f"caps below table size: width {width_cap} < "
+                         f"{hp.width} or rows {n_pad} < {hp.n}")
+    keys = np.full((n_pad, width_cap), INT32_PAD_KEY, np.int32)
+    vals = np.zeros((n_pad, width_cap), np.float32)
+    keys[:hp.n, :hp.width] = hp.keys
+    vals[:hp.n, :hp.width] = hp.vals
+    return keys, vals
+
+
 @dataclasses.dataclass
 class HPTable:
     """Fixed-width packed H sets for the whole graph.

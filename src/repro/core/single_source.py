@@ -16,8 +16,15 @@ answer is sum_l A_hat^l seed_l, which Horner-factorizes as
 
 -- L pushes instead of L(L+1)/2, an O(L) speedup with *tighter* error:
 we prune at the smallest of the paper's per-group thresholds
-tau = (sqrt c)^L * theta, so every dropped contribution is one the paper
-would also have dropped. Accuracy therefore dominates Alg 6's.
+tau = (sqrt c)^L * theta (``prune_tau``), so every dropped contribution
+is one the paper would also have dropped. Accuracy therefore dominates
+Alg 6's.
+
+Every device path -- single-device batched, the model-axis pod push,
+and the node-sharded serving fan-out (core/shard_query.py) -- runs the
+same :func:`horner_push` kernel over a node *slab*; the single-device
+case is simply the slab that covers all n nodes with an identity
+frontier gather.
 """
 from __future__ import annotations
 
@@ -31,6 +38,17 @@ from repro.core.hp_index import INT32_PAD_KEY
 from repro.graph import csr
 
 
+def prune_tau(plan) -> float:
+    """The Horner prune threshold tau = (sqrt c)^l_max * theta.
+
+    The smallest of Alg 6's per-group thresholds (see module
+    docstring); resolved on host once so the device kernels never
+    re-derive it from (theta, c) -- an earlier revision hardcoded
+    sqrt(0.6) inside the kernel, which over-pruned for c < 0.6.
+    """
+    return float(plan.theta * plan.sqrt_c ** plan.l_max)
+
+
 def _seed_matrix(idx, u: int, g: csr.Graph) -> np.ndarray:
     """(L+1, n) float64: seeds[l, k] = h~^(l)(u,k) * d_k."""
     n = idx.n
@@ -38,7 +56,10 @@ def _seed_matrix(idx, u: int, g: csr.Graph) -> np.ndarray:
     keys, vals = idx._host_entries(u, g)
     ls = keys // n
     ks = keys % n
-    seeds[ls, ks] += vals * idx.d[ks].astype(np.float64)
+    # np.add.at, not fancy-index +=: a row carrying a duplicate (l, k)
+    # key must contribute BOTH entries (buffered scatter keeps only the
+    # last hit and silently drops the rest of the mass)
+    np.add.at(seeds, (ls, ks), vals * idx.d[ks].astype(np.float64))
     return seeds
 
 
@@ -67,12 +88,10 @@ def single_source_paper(idx, g: csr.Graph, u: int) -> np.ndarray:
 def single_source_horner(idx, g: csr.Graph, u: int) -> np.ndarray:
     """Beyond-paper Horner-stacked push (host/NumPy)."""
     n = idx.n
-    sc = idx.plan.sqrt_c
-    theta = idx.plan.theta
-    w = csr.normalized_pull_weights(g, sc).astype(np.float64)
+    w = csr.normalized_pull_weights(g, idx.plan.sqrt_c).astype(np.float64)
     seeds = _seed_matrix(idx, u, g)
     L = seeds.shape[0] - 1
-    tau = (sc ** L) * theta
+    tau = prune_tau(idx.plan)
     acc = seeds[L].copy()
     for l in range(L - 1, -1, -1):
         acc = np.where(acc > tau, acc, 0.0)
@@ -83,41 +102,74 @@ def single_source_horner(idx, g: csr.Graph, u: int) -> np.ndarray:
 
 
 # ----------------------------------------------------------------------
-# batched device path: (B,) query nodes -> (B, n) scores
+# the shared device kernel: Horner push over a node slab
 # ----------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("n", "l_max"))
-def batched_single_source(keys, vals, d, edge_src, edge_dst, w,
-                          us, theta, n: int, l_max: int):
-    """Horner push for a batch of sources entirely on device.
+def horner_push(ku, xu, d, src, dst, w, tau, *, n: int, l_max: int,
+                slab_start=0, slab_size: int | None = None,
+                d_offset=None, gather=None):
+    """Horner-stacked push for a batch of sources over one node slab.
 
-    keys/vals: packed HP table (N, K); us: (B,) int32.
-    Returns (B, n) float32.
+    The one body behind every device path (DESIGN.md section 3):
+
+      * single device (:func:`batched_single_source`): the slab covers
+        all ``n`` nodes, ``gather`` is the identity;
+      * model-axis pod push (:func:`batched_single_source_sharded`):
+        the slab is this shard's node rows, ``d`` stays replicated
+        (``d_offset=0``), ``gather`` all-gathers the pruned frontier
+        over "model";
+      * node-sharded serving (core/shard_query.py): the slab is this
+        shard's rows with ``d`` sharded alongside (``d_offset`` =
+        ``slab_start``), ``gather`` runs over the "data" axis.
+
+    ku/xu: (B, W) packed H rows of the query nodes (replicated across
+    shards); ``d`` is indexed at (key target - d_offset); ``src`` holds
+    frontier-global edge sources, ``dst`` slab-local destinations;
+    ``tau`` is the resolved prune threshold (:func:`prune_tau`).
+    Returns (B, slab_size) float32 scores for the slab's nodes.
     """
-    B = us.shape[0]
-    ku = keys[us]                       # (B, K)
-    xu = vals[us]
+    B = ku.shape[0]
+    slab_size = n if slab_size is None else slab_size
+    d_offset = slab_start if d_offset is None else d_offset
     ls = jnp.where(ku == INT32_PAD_KEY, -1, ku // n)
     ks = jnp.clip(ku % n, 0, n - 1)
-    contrib = xu * d[ks]                # (B, K)
-    sc = w  # alias note: w already includes sqrt(c)
-    tau = theta * (0.7746 ** l_max)     # refined below by caller threshold
+    contrib = xu * d[jnp.clip(ks - d_offset, 0, d.shape[0] - 1)]
+    k_loc = ks - slab_start
+    in_slab = (k_loc >= 0) & (k_loc < slab_size)
+    k_loc = jnp.clip(k_loc, 0, slab_size - 1)
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
 
     def seed(l):
-        sel = jnp.where(ls == l, contrib, 0.0)          # (B, K)
-        z = jnp.zeros((B, n), jnp.float32)
-        return z.at[jnp.arange(B)[:, None], ks].add(sel)
+        sel = jnp.where((ls == l) & in_slab, contrib, 0.0)    # (B, W)
+        z = jnp.zeros((B, slab_size), jnp.float32)
+        return z.at[rows, k_loc].add(sel)
 
     def push(x):
-        xp = jnp.where(x > tau, x, 0.0)                 # (B, n)
-        msgs = xp[:, edge_src] * w[None, :]             # (B, m)
-        return jax.vmap(
-            lambda mm: jax.ops.segment_sum(mm, edge_dst, num_segments=n)
-        )(msgs)
+        xp = jnp.where(x > tau, x, 0.0)                       # (B, slab)
+        xg = xp if gather is None else gather(xp)             # (B, frontier)
+        msgs = xg[:, src] * w[None, :]                        # (B, E)
+        return jax.vmap(lambda mm: jax.ops.segment_sum(
+            mm, dst, num_segments=slab_size))(msgs)
 
     acc = seed(l_max)
     for l in range(l_max - 1, -1, -1):  # unrolled; l_max is static
         acc = push(acc) + seed(l)
     return acc
+
+
+# ----------------------------------------------------------------------
+# batched device path: (B,) query nodes -> (B, n) scores
+# ----------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("n", "l_max"))
+def batched_single_source(keys, vals, d, edge_src, edge_dst, w,
+                          us, tau, n: int, l_max: int):
+    """Horner push for a batch of sources entirely on device.
+
+    keys/vals: packed HP table (N, K); us: (B,) int32; ``tau``: the
+    resolved prune threshold (:func:`prune_tau`). Returns (B, n)
+    float32.
+    """
+    return horner_push(keys[us], vals[us], d, edge_src, edge_dst, w,
+                       tau, n=n, l_max=l_max)
 
 
 def single_source_device(idx, g: csr.Graph, us: np.ndarray) -> np.ndarray:
@@ -127,9 +179,30 @@ def single_source_device(idx, g: csr.Graph, us: np.ndarray) -> np.ndarray:
     w = jnp.asarray(csr.normalized_pull_weights(g, idx.plan.sqrt_c))
     out = batched_single_source(
         keys, vals, d, jnp.asarray(g.edge_src), jnp.asarray(g.edge_dst),
-        w, jnp.asarray(us, jnp.int32), jnp.float32(idx.plan.theta),
+        w, jnp.asarray(us, jnp.int32), jnp.float32(prune_tau(idx.plan)),
         idx.n, idx.plan.l_max)
     return np.asarray(out)
+
+
+def single_source_batch(idx, g: csr.Graph, us,
+                        mesh=None, axis: str = "data") -> np.ndarray:
+    """Public multi-source batched entry point: (B,) ids -> (B, n).
+
+    Sources are vmapped inside one compiled program, so a serving
+    micro-batch amortizes a single compile (and, with ``mesh``, a
+    single mesh fan-out) across all B queries. With ``mesh`` the query
+    runs node-sharded over ``mesh[axis]`` (core/shard_query.py); for a
+    long-lived serving loop prefer building the
+    :class:`~repro.core.shard_query.ShardedIndex` once (or use
+    :class:`~repro.serve.QueryEngine` with ``EngineConfig(mesh=...)``)
+    instead of re-uploading per call.
+    """
+    us = np.atleast_1d(np.asarray(us, np.int32))
+    if mesh is None:
+        return single_source_device(idx, g, us)
+    from repro.core import shard_query
+    si = shard_query.shard_index(idx, g, mesh, axis=axis)
+    return shard_query.sharded_single_source(si, us)
 
 
 def single_source_naive(idx, g: csr.Graph, u: int) -> np.ndarray:
@@ -141,7 +214,7 @@ def single_source_naive(idx, g: csr.Graph, u: int) -> np.ndarray:
 # pod-scale path: shard_map Horner push with dst-partitioned edges
 # ----------------------------------------------------------------------
 def batched_single_source_sharded(keys, vals, d, blk_src, blk_dstl,
-                                  blk_w, us, theta: float, n: int,
+                                  blk_w, us, tau: float, n: int,
                                   l_max: int, mesh,
                                   bf16_frontier: bool = False):
     """Pod-scale Alg 6 (Horner form): queries sharded over the data
@@ -152,9 +225,10 @@ def batched_single_source_sharded(keys, vals, d, blk_src, blk_dstl,
     otherwise all-reduces the full (B, n) frontier per push;
     EXPERIMENTS.md section Perf, sling-serve iteration).
 
-    keys/vals: (B?, no -- full (N, W)) packed rows gathered for us on
-    the fly; blk_*: (NS_m, E_max) edges grouped by dst model-shard.
-    Returns (B, n) scores sharded (data, model).
+    keys/vals: full (N, W) packed rows gathered for us on the fly;
+    blk_*: (NS_m, E_max) edges grouped by dst model-shard; ``tau``: the
+    resolved prune threshold (:func:`prune_tau`). Returns (B, n)
+    scores sharded (data, model).
     """
     from jax.sharding import PartitionSpec as P
     data_axes = tuple(a for a in ("pod", "data")
@@ -164,26 +238,9 @@ def batched_single_source_sharded(keys, vals, d, blk_src, blk_dstl,
     manual = set(data_axes) | {"model"}
 
     def local(ku, xu, d_full, bs, bd, bw):
-        # ku/xu: (B_l, W) packed H rows of this shard's queries
-        B_l, W = ku.shape
         midx = jax.lax.axis_index("model")
-        ls = jnp.where(ku == INT32_PAD_KEY, -1, ku // n)
-        ks = jnp.clip(ku % n, 0, n - 1)
-        contrib = xu * d_full[ks]
-        k_loc = ks - midx * n_l
-        in_shard = (k_loc >= 0) & (k_loc < n_l)
-        k_loc = jnp.clip(k_loc, 0, n_l - 1)
-        rows = jnp.arange(B_l, dtype=jnp.int32)[:, None]
-        src, dstl, w_e = bs[0], bd[0], bw[0]
-        tau = theta * (0.7746 ** l_max)
 
-        def seed(l):
-            sel = jnp.where((ls == l) & in_shard, contrib, 0.0)
-            z = jnp.zeros((B_l, n_l), jnp.float32)
-            return z.at[rows, k_loc].add(sel)
-
-        def push(x):
-            xp = jnp.where(x > tau, x, 0.0)
+        def gather(xp):
             if bf16_frontier:
                 # halves the dominant AG payload; bf16 rel-err ~2^-8
                 # per push accumulates to <~1% of each score -- callers
@@ -195,15 +252,11 @@ def batched_single_source_sharded(keys, vals, d, blk_src, blk_dstl,
             x_full = jax.lax.all_gather(xp, "model", axis=1, tiled=True)
             if bf16_frontier:
                 x_full = jax.lax.optimization_barrier(x_full)
-            x_full = x_full.astype(jnp.float32)
-            msgs = x_full[:, src] * w_e[None, :]          # (B_l, E_max)
-            return jax.vmap(lambda mm: jax.ops.segment_sum(
-                mm, dstl, num_segments=n_l))(msgs)
+            return x_full.astype(jnp.float32)
 
-        acc = seed(l_max)
-        for l in range(l_max - 1, -1, -1):
-            acc = push(acc) + seed(l)
-        return acc
+        return horner_push(ku, xu, d_full, bs[0], bd[0], bw[0], tau,
+                           n=n, l_max=l_max, slab_start=midx * n_l,
+                           slab_size=n_l, d_offset=0, gather=gather)
 
     from repro import compat
     sm = compat.shard_map(

@@ -25,21 +25,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.single_source import batched_single_source, single_source_paper
+from repro.core.single_source import (batched_single_source, prune_tau,
+                                      single_source_paper)
 from repro.graph import csr
 
 
 @partial(jax.jit, static_argnames=("n", "l_max", "k"))
-def batched_topk(keys, vals, d, edge_src, edge_dst, w, us, theta,
+def batched_topk(keys, vals, d, edge_src, edge_dst, w, us, tau,
                  n: int, l_max: int, k: int):
     """Fused Horner push + top-k for a batch of sources.
 
-    keys/vals: packed HP table (N, W); us: (B,) int32.
-    Returns (scores (B, k) float32, nodes (B, k) int32), scores
-    descending per row.
+    keys/vals: packed HP table (N, W); us: (B,) int32; ``tau``: the
+    resolved prune threshold (:func:`~repro.core.single_source.
+    prune_tau`). Returns (scores (B, k) float32, nodes (B, k) int32),
+    scores descending per row.
     """
     scores = batched_single_source(keys, vals, d, edge_src, edge_dst, w,
-                                   us, theta, n=n, l_max=l_max)
+                                   us, tau, n=n, l_max=l_max)
     top_v, top_i = jax.lax.top_k(scores, k)
     return top_v, top_i.astype(jnp.int32)
 
@@ -54,7 +56,7 @@ def topk_device(idx, g: csr.Graph, us: np.ndarray,
     w = jnp.asarray(csr.normalized_pull_weights(g, idx.plan.sqrt_c))
     top_v, top_i = batched_topk(
         keys, vals, d, jnp.asarray(g.edge_src), jnp.asarray(g.edge_dst),
-        w, jnp.asarray(us, jnp.int32), jnp.float32(idx.plan.theta),
+        w, jnp.asarray(us, jnp.int32), jnp.float32(prune_tau(idx.plan)),
         idx.n, idx.plan.l_max, k)
     return np.asarray(top_v), np.asarray(top_i)
 

@@ -76,6 +76,60 @@ def bipartite(n_users: int, n_items: int, m: int, seed: int = 0) -> csr.Graph:
     return csr.undirected(n_users + n_items, u, n_users + i)
 
 
+def dag(n: int, m: int, seed: int = 0) -> csr.Graph:
+    """Random DAG: edges point forward in a shuffled topological order.
+
+    Reverse sqrt(c)-walks always terminate at in-degree-0 roots within
+    n steps -- the structurally-absorbing regime of the d_k = 1
+    convention (graph/csr.py docstring), and a stress case for the
+    oracle suite: many nodes have short, exhaustible H sets.
+    """
+    rng = np.random.default_rng(seed)
+    pos = np.empty(n, dtype=np.int64)
+    pos[rng.permutation(n)] = np.arange(n)
+    a = rng.integers(0, n, size=int(m * 1.5), dtype=np.int64)
+    b = rng.integers(0, n, size=int(m * 1.5), dtype=np.int64)
+    keep = a != b
+    a, b = a[keep], b[keep]
+    src = np.where(pos[a] < pos[b], a, b)[:m]
+    dst = np.where(pos[a] < pos[b], b, a)[:m]
+    return csr.from_edges(n, src, dst)
+
+
+def with_sinks(n: int, m: int, n_sinks: int = 4,
+               seed: int = 0) -> csr.Graph:
+    """Sparse directed graph where ``n_sinks`` nodes keep in-degree 0.
+
+    Those nodes absorb reverse walks immediately (d_k = 1, H(v) = the
+    step-0 self entry only) -- the "graph with sinks" oracle case.
+    """
+    rng = np.random.default_rng(seed)
+    sinks = rng.choice(n, size=n_sinks, replace=False)
+    src = rng.integers(0, n, size=int(m * 1.6), dtype=np.int64)
+    dst = rng.integers(0, n, size=int(m * 1.6), dtype=np.int64)
+    keep = (src != dst) & ~np.isin(dst, sinks)
+    g = csr.from_edges(n, src[keep][:m], dst[keep][:m])
+    assert np.all(g.in_deg[sinks] == 0)
+    return g
+
+
+def multigraph(n: int, m: int, seed: int = 0) -> csr.Graph:
+    """Self-loop-free directed multigraph: parallel (src, dst) edges
+    are kept (``dedup=False``), so in-neighbor lists carry
+    multiplicity -- pull weights accumulate per parallel edge and walk
+    sampling picks positions, both treating each edge as its own
+    transition."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, size=2 * m, dtype=np.int64)
+    dst = rng.integers(0, n, size=2 * m, dtype=np.int64)
+    keep = src != dst
+    src, dst = src[keep][:m], dst[keep][:m]
+    if m >= 2 and len(src) >= 2:
+        # guarantee at least one parallel edge
+        src[-1], dst[-1] = src[0], dst[0]
+    return csr.from_edges(n, src, dst, dedup=False)
+
+
 def cycle(n: int) -> csr.Graph:
     """Directed n-cycle: the Appendix-A adversarial case for Linearize
     (its Gauss-Seidel system matrix is not diagonally dominant at c=0.6)."""

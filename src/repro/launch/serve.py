@@ -7,6 +7,11 @@ query stream through the unified engine -- single-source by default;
 padding, k-bucketing, and caching all live in the engine; this file
 only parses flags, generates traffic, and reports latency.
 
+``--mesh S`` serves node-sharded: the index partitions over an S-way
+"data" mesh axis and single-source/top-k fan out with shard_map
+(DESIGN.md section 8). On CPU the S host devices are forced via
+XLA_FLAGS before jax initializes (done here when the flag is unset).
+
 ``--mutate N`` appends an edge-churn replay (DESIGN.md section 7,
 EXPERIMENTS.md "Dynamic workloads"): N random insert/delete batches of
 ``--churn`` fraction of the edges each are applied with the
@@ -18,6 +23,7 @@ reserve -- including the full-rebuild trigger firing.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import numpy as np
@@ -45,6 +51,10 @@ def main() -> None:
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--pair-backend", default="auto",
                     choices=("auto", "join", "pallas"))
+    ap.add_argument("--mesh", type=int, default=0, metavar="S",
+                    help="node-shard the index over an S-way mesh and "
+                         "serve single-source/top-k via shard_map "
+                         "(0 = single-device)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mutate", type=int, default=0, metavar="N",
                     help="replay N edge-churn batches with incremental "
@@ -60,6 +70,17 @@ def main() -> None:
     if args.queries < 1 or args.batch < 1:
         ap.error("--queries and --batch must be >= 1")
 
+    mesh = None
+    if args.mesh > 0:
+        # must land before jax initializes its backend (the imports
+        # above only define jitted functions, they run nothing)
+        os.environ.setdefault(
+            "XLA_FLAGS",
+            f"--xla_force_host_platform_device_count={args.mesh}")
+        from repro.core import shard_query
+        mesh = shard_query.serving_mesh(args.mesh)
+        print(f"mesh: {args.mesh}-way node-sharded serving over 'data'")
+
     g = generators.barabasi_albert(args.n, args.deg, seed=args.seed,
                                    directed=False)
     print(f"graph: n={g.n} m={g.m}")
@@ -72,7 +93,7 @@ def main() -> None:
 
     eng = QueryEngine(idx, g, EngineConfig(
         source_batch=args.batch, pair_batch=max(args.batch, 16),
-        pair_backend=args.pair_backend))
+        pair_backend=args.pair_backend, mesh=mesh))
     warm = eng.warmup()
     print("warmup (compile priming): "
           + "  ".join(f"{k}={v:.2f}s" for k, v in warm.items()))
@@ -105,7 +126,7 @@ def main() -> None:
     grew = len(st["unique_shapes"]) - shapes_before
     print(f"engine: {st['batches']} batches, {st['pad_slots']} pad "
           f"slots, cache {st['cache_hits']}/{st['cache_hits'] + st['cache_misses']} hits, "
-          f"backend={st['pair_backend']}")
+          f"backend={st['pair_backend']}, mesh={st['mesh_shards']}")
     print(f"compiled shapes: {len(st['unique_shapes'])} total, "
           f"{grew} new after warmup "
           f"({'compile-once OK' if grew == 0 else 'RECOMPILED'})")

@@ -159,6 +159,31 @@ def logical(x, *names: Optional[str]):
 
 
 # ----------------------------------------------------------------------
+# node-sharded SLING serving state (core/shard_query.py, DESIGN.md §8)
+# ----------------------------------------------------------------------
+def sling_index_specs(axis: str = "data") -> dict[str, P]:
+    """PartitionSpecs for the node-sharded serving state.
+
+    The packed HP rows, the diagonal correction vector, and the
+    dst-partitioned edge blocks all shard their leading node/shard
+    dimension over ``axis``; query ids (and the psum-replicated query
+    rows derived from them) are replicated. One table so the device_put
+    in ``shard_query.shard_index`` and the shard_map in_specs of the
+    fan-out kernels cannot drift apart.
+    """
+    row = P((axis,), None)
+    return {
+        "keys": row,         # (n_pad, width_cap) packed H rows
+        "vals": row,
+        "d": P((axis,)),     # (n_pad,) correction factors
+        "blk_src": row,      # (n_shards, edge_cap) dst-partitioned edges
+        "blk_dstl": row,
+        "blk_w": row,
+        "queries": P(),      # (B,) query ids: replicated
+    }
+
+
+# ----------------------------------------------------------------------
 # parameter specs: rule table keyed by path regex -> logical dim names
 # ----------------------------------------------------------------------
 PARAM_RULES: list[tuple[str, tuple[Optional[str], ...]]] = [

@@ -21,6 +21,12 @@ a traffic-serving system needs (README section "Serving"):
     vmapped searchsorted join (core/index.py) or the Pallas all-pairs
     equality-join kernel (kernels/hp_join, DESIGN.md section 2) when a
     compiled-Pallas backend is available;
+  * **node-sharded serving** -- with ``EngineConfig(mesh=...)`` the
+    index partitions across the mesh axis and single-source/top-k
+    queries dispatch through the shard_map fan-out
+    (core/shard_query.py, DESIGN.md section 8); batching, k-bucketing,
+    caching and hot-swap semantics are unchanged, and swaps re-use the
+    compiled fan-out programs via the same capacity-bucket contract;
   * **epoch-based hot-swap** -- ``swap_index()`` installs an
     incrementally repaired index (core/update.py) behind the same
     compiled executables: device arrays live in capacity buckets
@@ -45,9 +51,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import hp_index
 from repro.core.hp_index import INT32_PAD_KEY
 from repro.core.index import SlingIndex, _pair_query_batch
-from repro.core.single_source import batched_single_source
+from repro.core.single_source import batched_single_source, prune_tau
 from repro.core.topk import batched_topk
 from repro.graph import csr
 
@@ -95,6 +102,15 @@ class EngineConfig:
     # the new index overflows its bucket (counted in stats()).
     swap_headroom: float = 1.25
     cap_quantum: int = 64        # buckets are multiples of this
+    # node-sharded serving (DESIGN.md section 8): a jax Mesh whose
+    # ``mesh_axis`` partitions the index's node slabs; single-source
+    # and top-k dispatch through the shard_map fan-out
+    # (core/shard_query.py). None = single-device. The pair path stays
+    # on the default device -- its merge join reads two packed rows,
+    # not the graph, so fanning it out would add a collective per pair
+    # for no memory win.
+    mesh: object = None
+    mesh_axis: str = "data"
 
 
 class QueryEngine:
@@ -116,6 +132,7 @@ class QueryEngine:
                        "swap_recompiles": 0, "invalidated": 0}
         self._width_cap = self._bucket(index.hp.width)
         self._edge_cap = self._bucket(g.m)
+        self._shard_edge_cap = 0     # set by the first sharded install
         self._install(index, g)
         assert index.n >= 1
 
@@ -123,8 +140,8 @@ class QueryEngine:
     # device state install / hot-swap
     # ------------------------------------------------------------------
     def _bucket(self, x: int) -> int:
-        q = self.cfg.cap_quantum
-        return max(q, int(-(-int(x * self.cfg.swap_headroom) // q) * q))
+        return hp_index.capacity_bucket(x, self.cfg.cap_quantum,
+                                        self.cfg.swap_headroom)
 
     def _install(self, index: SlingIndex, g: csr.Graph) -> None:
         """Upload ``index``/``g`` padded to the capacity buckets.
@@ -142,19 +159,25 @@ class QueryEngine:
         vals = np.zeros((n, wc), np.float32)
         keys[:, :index.hp.width] = index.hp.keys
         vals[:, :index.hp.width] = index.hp.vals
-        e_src = np.zeros(ec, np.int32)
-        e_dst = np.zeros(ec, np.int32)
-        e_w = np.zeros(ec, np.float32)
-        e_src[:g.m] = g.edge_src
-        e_dst[:g.m] = g.edge_dst
-        e_w[:g.m] = csr.normalized_pull_weights(g, index.plan.sqrt_c)
         self._keys = jnp.asarray(keys)
         self._vals = jnp.asarray(vals)
         self._d = jnp.asarray(index.d.astype(np.float32))
-        self._edge_src = jnp.asarray(e_src)
-        self._edge_dst = jnp.asarray(e_dst)
-        self._w = jnp.asarray(e_w)
-        self._theta = jnp.float32(index.plan.theta)
+        if self.cfg.mesh is None:
+            e_src = np.zeros(ec, np.int32)
+            e_dst = np.zeros(ec, np.int32)
+            e_w = np.zeros(ec, np.float32)
+            e_src[:g.m] = g.edge_src
+            e_dst[:g.m] = g.edge_dst
+            e_w[:g.m] = csr.normalized_pull_weights(g, index.plan.sqrt_c)
+            self._edge_src = jnp.asarray(e_src)
+            self._edge_dst = jnp.asarray(e_dst)
+            self._w = jnp.asarray(e_w)
+        else:
+            # mesh mode: source/topk dispatch through the sharded edge
+            # blocks and the pair join reads only keys/vals/d -- the
+            # single-device edge arrays would be dead device memory
+            self._edge_src = self._edge_dst = self._w = None
+        self._tau = jnp.float32(prune_tau(index.plan))
         if self._pair_backend == "pallas":
             from repro.kernels.hp_join.ops import fold_sqrt_d
             fk, fv = fold_sqrt_d(index)
@@ -166,7 +189,22 @@ class QueryEngine:
             self._folded_vals = jnp.asarray(fv2)
         for a in (self._keys, self._vals, self._d, self._edge_src,
                   self._edge_dst, self._w):
-            a.block_until_ready()
+            if a is not None:
+                a.block_until_ready()
+        # node-sharded serving state: rebuilt with the same capacity
+        # buckets so a hot-swap re-uses every compiled fan-out program
+        self._sharded = None
+        if self.cfg.mesh is not None:
+            from repro.core import shard_query
+            self._sharded = shard_query.shard_index(
+                index, g, self.cfg.mesh, axis=self.cfg.mesh_axis,
+                width_cap=self._width_cap,
+                edge_cap=self._shard_edge_cap,
+                cap_quantum=self.cfg.cap_quantum,
+                headroom=self.cfg.swap_headroom)
+            self._shard_edge_cap = self._sharded.edge_cap
+            self._width_cap = max(self._width_cap,
+                                  self._sharded.width_cap)
         self.index = index
         self.g = g
 
@@ -201,9 +239,22 @@ class QueryEngine:
         if index.hp.width > self._width_cap:
             self._width_cap = self._bucket(index.hp.width)
             recompiles += 1
-        if g.m > self._edge_cap:
+        if self._sharded is None and g.m > self._edge_cap:
+            # single-device mode only: in mesh mode no compiled
+            # program closes over the (unbuilt) total-edge bucket --
+            # the per-shard check below is the real one
             self._edge_cap = self._bucket(g.m)
             recompiles += 1
+        if self._sharded is not None:
+            # a shifted edge distribution can overflow one shard's
+            # block even when the total m still fits its bucket
+            # (packed-width overflow is already counted above: the
+            # sharded width cap tracks self._width_cap)
+            from repro.core import shard_query
+            req = shard_query.required_edge_cap(
+                g, self._sharded.n_shards, self._sharded.n_loc)
+            if req > self._shard_edge_cap:
+                recompiles += 1
         self._install(index, g)
         dropped = self.invalidate(affected)
         ms = 1e3 * (time.perf_counter() - t0)
@@ -307,11 +358,17 @@ class QueryEngine:
                                            np.int32)]).astype(np.int32)
         out = np.empty((len(us_p), self.index.n), np.float32)
         for lo in range(0, len(us_p), B):
-            self._record("source", (B,))
-            out[lo:lo + B] = np.asarray(batched_single_source(
-                self._keys, self._vals, self._d, self._edge_src,
-                self._edge_dst, self._w, jnp.asarray(us_p[lo:lo + B]),
-                self._theta, n=self.index.n, l_max=self.index.plan.l_max))
+            self._record("source", self._shape_tag(B))
+            if self._sharded is not None:
+                from repro.core import shard_query
+                out[lo:lo + B] = shard_query.sharded_single_source(
+                    self._sharded, us_p[lo:lo + B])
+            else:
+                out[lo:lo + B] = np.asarray(batched_single_source(
+                    self._keys, self._vals, self._d, self._edge_src,
+                    self._edge_dst, self._w, jnp.asarray(us_p[lo:lo + B]),
+                    self._tau, n=self.index.n,
+                    l_max=self.index.plan.l_max))
         return out[:len(us)]
 
     def _dispatch_topk(self, us: np.ndarray, bucket: int):
@@ -323,14 +380,26 @@ class QueryEngine:
         sv = np.empty((len(us_p), bucket), np.float32)
         si = np.empty((len(us_p), bucket), np.int32)
         for lo in range(0, len(us_p), B):
-            self._record("topk", (B, bucket))
-            v, i = batched_topk(
-                self._keys, self._vals, self._d, self._edge_src,
-                self._edge_dst, self._w, jnp.asarray(us_p[lo:lo + B]),
-                self._theta, self.index.n, self.index.plan.l_max, bucket)
+            self._record("topk", self._shape_tag(B, bucket))
+            if self._sharded is not None:
+                from repro.core import shard_query
+                v, i = shard_query.sharded_topk(
+                    self._sharded, us_p[lo:lo + B], bucket)
+            else:
+                v, i = batched_topk(
+                    self._keys, self._vals, self._d, self._edge_src,
+                    self._edge_dst, self._w, jnp.asarray(us_p[lo:lo + B]),
+                    self._tau, self.index.n, self.index.plan.l_max,
+                    bucket)
             sv[lo:lo + B] = np.asarray(v)
             si[lo:lo + B] = np.asarray(i)
         return sv[:len(us)], si[:len(us)]
+
+    def _shape_tag(self, *shape):
+        """Dispatch-shape key; sharded programs are distinct shapes."""
+        if self._sharded is not None:
+            return shape + ("mesh", self._sharded.n_shards)
+        return shape
 
     # ------------------------------------------------------------------
     # public API
@@ -440,6 +509,8 @@ class QueryEngine:
             "cache_entries": len(self._cache),
             "unique_shapes": sorted(self._shapes),
             "pair_backend": self._pair_backend,
+            "mesh_shards": (self._sharded.n_shards
+                            if self._sharded is not None else 0),
         }
 
     # ------------------------------------------------------------------

@@ -84,15 +84,24 @@ def recsys_retrieval_step(cfg) -> Callable:
 
 
 # ------------------------------------------------------------- SLING
+def _sling_tau(cfg) -> float:
+    """Resolved Horner prune threshold (single_source.prune_tau) at
+    the paper's operating point theta = 0.000725; the dry-run configs
+    carry (c, l_max) but no theory.SlingPlan."""
+    return 0.000725 * (cfg.c ** 0.5) ** cfg.l_max
+
+
 def sling_serve_step(cfg) -> Callable:
     """Batched single-source SimRank (Alg 6, Horner) as a serving cell."""
     from repro.core.single_source import batched_single_source
+
+    tau = _sling_tau(cfg)
 
     def step(index, graph, batch):
         return batched_single_source(
             index["keys"], index["vals"], index["d"],
             graph["edge_src"], graph["edge_dst"], graph["w"],
-            batch["us"], jnp.float32(0.000725), cfg.n, cfg.l_max)
+            batch["us"], jnp.float32(tau), cfg.n, cfg.l_max)
     return step
 
 
@@ -101,10 +110,12 @@ def sling_serve_step_sharded(cfg, mesh, bf16_frontier: bool = False) -> Callable
     (EXPERIMENTS.md section Perf, sling-serve iteration)."""
     from repro.core.single_source import batched_single_source_sharded
 
+    tau = _sling_tau(cfg)
+
     def step(index, graph, batch):
         return batched_single_source_sharded(
             index["keys"], index["vals"], index["d"],
             graph["blk_src"], graph["blk_dstl"], graph["blk_w"],
-            batch["us"], 0.000725, cfg.n, cfg.l_max, mesh,
+            batch["us"], tau, cfg.n, cfg.l_max, mesh,
             bf16_frontier=bf16_frontier)
     return step

@@ -1,0 +1,50 @@
+"""Brute-force differential oracle for the SLING query paths.
+
+Exact SimRank on <= 64-node graphs via the dense power method
+(baselines/power.py, Lemma-1 iteration count pushed to ~1e-9), plus the
+deterministic graph zoo the differential suite sweeps: Erdos-Renyi,
+power-law (Barabasi-Albert), random DAG, graph-with-sinks (in-degree-0
+absorbers), and a self-loop-free multigraph. Every public query path --
+single_pair (host merge join + batched device join), single-source
+(paper Alg 6, Horner, batched device, sharded fan-out), and top-k --
+must agree with the oracle within the Theorem-1 planned eps; the
+comparisons themselves live in tests/test_oracle_differential.py and
+tests/test_shard_query.py.
+
+Indexes under differential test are built with ``exact_d=True`` so the
+only error sources are the ones Theorem 1 budgets deterministically
+(theta pruning + float accumulation), making "within planned eps" a
+hard assertion rather than a probabilistic one.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.baselines import power
+from repro.graph import csr, generators
+
+# ground-truth slack: power-method tail (~1e-9 by iteration count) plus
+# float32 accumulation in the device paths
+SLACK = 1e-5
+
+
+def exact_simrank(g: csr.Graph, c: float) -> np.ndarray:
+    """(n, n) float64 ground truth, within ~1e-9 (Lemma 1)."""
+    return power.all_pairs(g, c=c, iters=power.iterations_for(1e-9, c))
+
+
+def cases() -> dict[str, csr.Graph]:
+    """The differential graph zoo (all <= 64 nodes, deterministic)."""
+    return {
+        "er": generators.erdos_renyi(48, 150, seed=3, directed=True),
+        "powerlaw": generators.barabasi_albert(64, 3, seed=1,
+                                               directed=False),
+        "dag": generators.dag(40, 110, seed=5),
+        "sinks": generators.with_sinks(40, 120, n_sinks=5, seed=7),
+        "multigraph": generators.multigraph(32, 90, seed=9),
+    }
+
+
+def tolerance(plan) -> float:
+    """The assertion bound: the planned eps plus measurement slack."""
+    return float(plan.eps) + SLACK

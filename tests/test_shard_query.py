@@ -1,0 +1,305 @@
+"""Node-sharded serving (core/shard_query.py): layout invariants,
+shard-equivalence against the single-device path, and churn + hot-swap
+cycles through the mesh-aware engine.
+
+Mesh sizes > 1 need forced host devices and carry the ``mesh`` marker:
+scripts/ci.sh runs them under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``; in a plain
+single-device run they skip. The 4-way case is additionally covered in
+the default suite by a ``slow`` subprocess test (same pattern as
+test_sharding.py) so tier-1 never loses it.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import build, hp_index, shard_query, update
+from repro.core.single_source import (single_source_batch,
+                                      single_source_device)
+from repro.core.topk import topk_device
+from repro.graph import generators
+from repro.serve import EngineConfig, QueryEngine
+
+
+def _mesh_or_skip(n_shards):
+    if jax.device_count() < n_shards:
+        pytest.skip(f"needs {n_shards} devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count)")
+    return shard_query.serving_mesh(n_shards)
+
+
+@pytest.fixture(scope="module")
+def case(small_graph):
+    idx = build.build_index(small_graph, eps=0.1, exact_d=True, seed=0)
+    return small_graph, idx
+
+
+# ----------------------------------------------------------------------
+# layout invariants (host-side, no mesh needed)
+# ----------------------------------------------------------------------
+def test_shard_layout_and_capacity_bucket():
+    assert hp_index.shard_layout(150, 4) == (152, 38)
+    assert hp_index.shard_layout(8, 1) == (8, 8)
+    assert hp_index.shard_layout(7, 7) == (7, 1)
+    with pytest.raises(ValueError):
+        hp_index.shard_layout(3, 4)
+    assert hp_index.capacity_bucket(1) == 64
+    assert hp_index.capacity_bucket(100, quantum=64, headroom=1.25) == 128
+    # monotone and always >= input
+    for x in (1, 63, 64, 65, 1000):
+        assert hp_index.capacity_bucket(x) >= x
+
+
+def test_pad_packed_rows_is_shard_sliceable(case):
+    g, idx = case
+    n_pad, n_loc = hp_index.shard_layout(idx.n, 4)
+    wc = hp_index.capacity_bucket(idx.hp.width)
+    keys, vals = hp_index.pad_packed_rows(idx.hp, n_pad, wc)
+    assert keys.shape == (n_pad, wc) and vals.shape == (n_pad, wc)
+    np.testing.assert_array_equal(keys[:idx.n, :idx.hp.width],
+                                  idx.hp.keys)
+    # pad rows and pad columns are inert: PAD keys, zero values
+    assert np.all(keys[idx.n:] == hp_index.INT32_PAD_KEY)
+    assert np.all(keys[:, idx.hp.width:] == hp_index.INT32_PAD_KEY)
+    assert np.all(vals[:, idx.hp.width:] == 0.0)
+    with pytest.raises(ValueError):
+        hp_index.pad_packed_rows(idx.hp, idx.n, idx.hp.width - 1)
+
+
+def test_partition_edges_preserves_edge_multiset(case):
+    g, idx = case
+    S = 4
+    n_pad, n_loc = hp_index.shard_layout(g.n, S)
+    cap = shard_query.required_edge_cap(g, S, n_loc)
+    bs, bdl, bw = shard_query.partition_edges(
+        g, idx.plan.sqrt_c, S, n_loc, cap)
+    assert bs.shape == (S, cap)
+    got = []
+    for s in range(S):
+        live = bw[s] > 0          # real pull weights are > 0
+        assert np.all(bdl[s][live] >= 0) and np.all(bdl[s][live] < n_loc)
+        got += [(int(a), int(b) + s * n_loc)
+                for a, b in zip(bs[s][live], bdl[s][live])]
+    want = sorted(zip(g.edge_src.tolist(), g.edge_dst.tolist()))
+    assert sorted(got) == want
+    with pytest.raises(ValueError):
+        shard_query.partition_edges(g, idx.plan.sqrt_c, S, n_loc, cap - 1)
+
+
+def test_sling_index_specs_cover_the_state():
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.sharding import sling_index_specs
+    s = sling_index_specs("data")
+    assert s["keys"] == P(("data",), None)
+    assert s["d"] == P(("data",))
+    assert s["queries"] == P()
+    assert set(s) == {"keys", "vals", "d", "blk_src", "blk_dstl",
+                      "blk_w", "queries"}
+
+
+# ----------------------------------------------------------------------
+# shard equivalence (mesh size 1 runs everywhere; 2/4 under -m mesh)
+# ----------------------------------------------------------------------
+def _assert_equivalent(idx, g, si, us, k=10, atol=1e-5):
+    ref = single_source_device(idx, g, us)
+    out = shard_query.sharded_single_source(si, us)
+    np.testing.assert_allclose(out, ref, atol=atol)
+    rv, ri = topk_device(idx, g, us, k)
+    sv, sid = shard_query.sharded_topk(si, us, k)
+    np.testing.assert_allclose(sv, rv, atol=atol)
+    # ids may swap only inside float ties: the single-device score of
+    # every returned node must match the returned score
+    rows = np.arange(len(us))[:, None]
+    np.testing.assert_allclose(ref[rows, sid], sv, atol=atol)
+    # full ranking exercises k > n_loc in the merge
+    fv, _ = shard_query.sharded_topk(si, us, g.n)
+    rfv, _ = topk_device(idx, g, us, g.n)
+    np.testing.assert_allclose(fv, rfv, atol=atol)
+
+
+def test_shard_equivalence_mesh1(case):
+    g, idx = case
+    si = shard_query.shard_index(idx, g, shard_query.serving_mesh(1))
+    us = np.array([0, 3, 77, g.n - 1], np.int32)
+    _assert_equivalent(idx, g, si, us)
+
+
+@pytest.mark.mesh
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_shard_equivalence(case, n_shards):
+    g, idx = case                       # n = 150: 4 shards pad to 152
+    mesh = _mesh_or_skip(n_shards)
+    si = shard_query.shard_index(idx, g, mesh)
+    us = np.array([0, 3, 77, g.n - 1], np.int32)
+    _assert_equivalent(idx, g, si, us)
+    # queries owned by every shard exercise the psum row fetch
+    n_loc = si.n_loc
+    owners = np.array([min(s * n_loc, g.n - 1)
+                       for s in range(n_shards)], np.int32)
+    _assert_equivalent(idx, g, si, owners)
+
+
+def test_single_source_batch_api(case):
+    g, idx = case
+    us = np.array([5, 9, 31], np.int32)
+    ref = single_source_device(idx, g, us)
+    np.testing.assert_allclose(single_source_batch(idx, g, us), ref,
+                               atol=0)
+    mesh = shard_query.serving_mesh(1)
+    np.testing.assert_allclose(
+        single_source_batch(idx, g, us, mesh=mesh), ref, atol=1e-5)
+    # scalar-ish input is promoted to a batch of one
+    one = single_source_batch(idx, g, [7])
+    assert one.shape == (1, g.n)
+
+
+# ----------------------------------------------------------------------
+# mesh-aware engine: equivalence + churn/hot-swap shape stability
+# ----------------------------------------------------------------------
+@pytest.mark.mesh
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_engine_mesh_equivalence_and_compile_once(small_graph, n_shards):
+    mesh = _mesh_or_skip(n_shards)
+    g = small_graph
+    idx_m = build.build_index(g, eps=0.1, exact_d=True, seed=0)
+    idx_s = build.build_index(g, eps=0.1, exact_d=True, seed=0)
+    eng_m = QueryEngine(idx_m, g, EngineConfig(pair_batch=16,
+                                               source_batch=4, mesh=mesh))
+    eng_s = QueryEngine(idx_s, g, EngineConfig(pair_batch=16,
+                                               source_batch=4))
+    eng_m.warmup()
+    before = set(eng_m.stats()["unique_shapes"])
+    rng = np.random.default_rng(0)
+    for q in (1, 3, 5, 11):
+        us = rng.integers(0, g.n, q).astype(np.int32)
+        np.testing.assert_allclose(eng_m.single_source(us),
+                                   eng_s.single_source(us), atol=1e-5)
+        sv_m, si_m = eng_m.topk(us, 7)
+        sv_s, _ = eng_s.topk(us, 7)
+        np.testing.assert_allclose(sv_m, sv_s, atol=1e-5)
+        np.testing.assert_allclose(eng_m.pairs(us, us[::-1]),
+                                   eng_s.pairs(us, us[::-1]), atol=1e-6)
+    st = eng_m.stats()
+    assert set(st["unique_shapes"]) == before
+    assert st["mesh_shards"] == n_shards
+
+
+@pytest.mark.mesh
+def test_engine_mesh_churn_swap_cycle(small_graph):
+    """update_index + swap_index keeps the sharded path equivalent to
+    the single-device path and triggers zero recompiles (extends the
+    test_engine.py swap contract to the mesh)."""
+    mesh = _mesh_or_skip(2)
+    g = small_graph
+    idx_m = build.build_index(g, eps=0.1, exact_d=True, seed=0)
+    idx_s = build.build_index(g, eps=0.1, exact_d=True, seed=0)
+    eng_m = QueryEngine(idx_m, g, EngineConfig(pair_batch=16,
+                                               source_batch=4, mesh=mesh))
+    eng_s = QueryEngine(idx_s, g, EngineConfig(pair_batch=16,
+                                               source_batch=4))
+    eng_m.warmup()
+    before = set(eng_m.stats()["unique_shapes"])
+    us = np.array([2, 7, 42, 149], np.int32)
+    gg = g
+    for i in range(3):
+        delta = update.random_delta(gg, n_add=8, n_del=8, seed=40 + i)
+        rep = build.update_index(idx_m, gg, delta, exact_d=True)
+        rep_s = build.update_index(idx_s, gg, delta, exact_d=True)
+        gg = rep.graph
+        eng_m.swap_index(idx_m, gg, affected=rep.affected)
+        eng_s.swap_index(idx_s, rep_s.graph, affected=rep_s.affected)
+        np.testing.assert_allclose(eng_m.single_source(us),
+                                   eng_s.single_source(us), atol=1e-5)
+        sv_m, _ = eng_m.topk(us, 5)
+        sv_s, _ = eng_s.topk(us, 5)
+        np.testing.assert_allclose(sv_m, sv_s, atol=1e-5)
+    st = eng_m.stats()
+    assert set(st["unique_shapes"]) == before
+    assert st["swap_recompiles"] == 0
+    assert st["swaps"] == 3 and st["epoch"] == 3
+
+
+@pytest.mark.mesh
+def test_mesh_swap_ignores_single_device_edge_bucket(small_graph):
+    """The total-edge bucket guards arrays mesh mode never builds;
+    outgrowing it must not count a phantom recompile while every
+    per-shard block still fits (the per-shard check is the real one)."""
+    mesh = _mesh_or_skip(2)
+    g = small_graph
+    idx = build.build_index(g, eps=0.1, exact_d=True, seed=0)
+    eng = QueryEngine(idx, g, EngineConfig(source_batch=4, mesh=mesh))
+    eng._edge_cap = 0          # any m now "overflows" the unused bucket
+    out = eng.swap_index(idx, g)
+    assert out["recompiles"] == 0
+    assert eng.stats()["swap_recompiles"] == 0
+
+
+@pytest.mark.mesh
+def test_sharded_swap_reuses_capacity_buckets(small_graph):
+    """shard_index(width_cap=..., edge_cap=...) round-trips the caps a
+    previous install chose, so swapped arrays keep their shapes."""
+    mesh = _mesh_or_skip(2)
+    g = small_graph
+    idx = build.build_index(g, eps=0.1, exact_d=True, seed=0)
+    a = shard_query.shard_index(idx, g, mesh)
+    b = shard_query.shard_index(idx, g, mesh, width_cap=a.width_cap,
+                                edge_cap=a.edge_cap)
+    assert (a.width_cap, a.edge_cap) == (b.width_cap, b.edge_cap)
+    assert a.keys.shape == b.keys.shape
+    assert a.blk_src.shape == b.blk_src.shape
+
+
+# ----------------------------------------------------------------------
+# default-suite coverage of the 4-way mesh (subprocess, slow)
+# ----------------------------------------------------------------------
+@pytest.mark.slow
+def test_sharded_serving_subprocess_4way():
+    """4-way shard equivalence + engine churn cycle in a subprocess
+    with forced host devices, so the plain tier-1 run (one device)
+    still exercises a real mesh."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys; sys.path.insert(0, "src")
+import numpy as np
+from repro.core import build, shard_query, update
+from repro.core.single_source import single_source_device
+from repro.core.topk import topk_device
+from repro.graph import generators
+from repro.serve import EngineConfig, QueryEngine
+g = generators.barabasi_albert(150, 3, seed=1, directed=False)
+idx = build.build_index(g, eps=0.1, exact_d=True, seed=0)
+mesh = shard_query.serving_mesh(4)
+si = shard_query.shard_index(idx, g, mesh)
+us = np.array([0, 3, 77, 149], np.int32)
+ref = single_source_device(idx, g, us)
+out = shard_query.sharded_single_source(si, us)
+assert np.abs(out - ref).max() < 1e-5, np.abs(out - ref).max()
+sv, sid = shard_query.sharded_topk(si, us, 10)
+rv, _ = topk_device(idx, g, us, 10)
+assert np.abs(sv - rv).max() < 1e-5
+eng = QueryEngine(idx, g, EngineConfig(source_batch=4, mesh=mesh))
+eng.warmup()
+before = set(eng.stats()["unique_shapes"])
+delta = update.random_delta(g, n_add=8, n_del=8, seed=5)
+rep = build.update_index(idx, g, delta, exact_d=True)
+eng.swap_index(idx, rep.graph, affected=rep.affected)
+got = eng.single_source(us)
+want = single_source_device(idx, rep.graph, us)
+assert np.abs(got - want).max() < 1e-5
+st = eng.stats()
+assert set(st["unique_shapes"]) == before
+assert st["swap_recompiles"] == 0
+print("SHARD_QUERY_4WAY_OK")
+"""
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run([sys.executable, "-c", code], cwd=root,
+                       capture_output=True, text=True, env=env,
+                       timeout=600)
+    assert "SHARD_QUERY_4WAY_OK" in r.stdout, r.stdout + r.stderr

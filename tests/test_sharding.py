@@ -128,7 +128,7 @@ import jax, jax.numpy as jnp, numpy as np
 from repro.graph import generators
 from repro.core import build
 from repro.core.single_source import (batched_single_source_sharded,
-                                      single_source_horner)
+                                      prune_tau, single_source_horner)
 g = generators.barabasi_albert(128, 3, seed=0, directed=False)
 idx = build.build_index(g, eps=0.2, exact_d=True)
 from repro import compat
@@ -154,7 +154,7 @@ with mesh:
     out = batched_single_source_sharded(
         jnp.asarray(idx.hp.keys), jnp.asarray(idx.hp.vals),
         jnp.asarray(idx.d), jnp.asarray(bs), jnp.asarray(bd),
-        jnp.asarray(bw), jnp.asarray(us), idx.plan.theta, g.n,
+        jnp.asarray(bw), jnp.asarray(us), prune_tau(idx.plan), g.n,
         idx.plan.l_max, mesh)
 out = np.asarray(out)
 for i, u in enumerate(us):
