@@ -51,6 +51,36 @@ def default_t_max(sqrt_c: float, tail: float = 1e-4) -> int:
     return max(1, int(math.ceil(math.log(tail) / math.log(sqrt_c))))
 
 
+# Smallest padded dispatch width for a walk chunk. Anything below this
+# pads up to it, so the bucket set for a given ``chunk`` is
+# {WALK_CHUNK_MIN, 2*WALK_CHUNK_MIN, ..., chunk}: at most
+# log2(chunk / WALK_CHUNK_MIN) + 1 compiled programs per (graph shape,
+# t_max), however ragged the sample counts get.
+WALK_CHUNK_MIN = 1 << 10
+
+
+def chunk_bucket(w: int, chunk: int, min_bucket: int = WALK_CHUNK_MIN) -> int:
+    """Padded dispatch width for a walk batch of ``w`` pairs: the
+    smallest power of two >= w, clamped to [min_bucket, chunk].
+
+    Every chunk -- including the single-chunk case -- dispatches at a
+    bucket width, so Alg 4's data-dependent phase-2 batch sizes (and
+    the ragged subsets ``update_index`` re-estimates) reuse a small
+    fixed set of compiled programs instead of compiling one per
+    distinct sample count.
+    """
+    if w >= chunk:
+        return chunk
+    b = 1 << max(0, int(w - 1).bit_length())
+    return min(chunk, max(min_bucket, b))
+
+
+def compile_count() -> int:
+    """Distinct compiled paired-walk programs in this process (the
+    regression gate for recompile storms on the preprocessing path)."""
+    return int(paired_meet._cache_size())
+
+
 @partial(jax.jit, static_argnames=("t_max",))
 def paired_meet(dg_in_ptr, dg_in_idx, dg_in_deg,
                 start_a, start_b, key, sqrt_c: float, t_max: int):
@@ -96,24 +126,35 @@ def paired_meet(dg_in_ptr, dg_in_idx, dg_in_deg,
 def paired_meet_chunked(dg: DeviceGraph, start_a: np.ndarray,
                         start_b: np.ndarray, key, sqrt_c: float,
                         t_max: int, chunk: int = 1 << 19) -> np.ndarray:
-    """Host-driven chunked wrapper over :func:`paired_meet`."""
+    """Host-driven chunked wrapper over :func:`paired_meet`.
+
+    Every chunk is padded to a :func:`chunk_bucket` width -- full
+    chunks dispatch at exactly ``chunk``, the trailing (or sole)
+    partial chunk at the smallest power-of-two bucket that holds it --
+    so the compiled-program set is bounded and shape-stable across
+    arbitrary sample counts. (The previous revision left the
+    single-chunk case unpadded, so every distinct sample count -- one
+    per Alg 4 phase-2 batch, one per ``update_index`` subset --
+    compiled a fresh XLA program.) Pad lanes walk from node 0 and are
+    sliced off before the result leaves this function.
+    """
     W = len(start_a)
     out = np.zeros(W, dtype=bool)
+    if W == 0:
+        return out
     n_chunks = (W + chunk - 1) // chunk
-    keys = jr.split(key, max(n_chunks, 1))
+    keys = jr.split(key, n_chunks)
     for i in range(n_chunks):
         lo, hi = i * chunk, min((i + 1) * chunk, W)
-        pad = 0
-        sa = jnp.asarray(start_a[lo:hi], dtype=jnp.int32)
-        sb = jnp.asarray(start_b[lo:hi], dtype=jnp.int32)
-        if (hi - lo) < chunk and n_chunks > 1:
-            pad = chunk - (hi - lo)
-            sa = jnp.pad(sa, (0, pad))
-            sb = jnp.pad(sb, (0, pad))
+        bucket = chunk_bucket(hi - lo, chunk)
+        sa = np.zeros(bucket, np.int32)
+        sb = np.zeros(bucket, np.int32)
+        sa[: hi - lo] = start_a[lo:hi]
+        sb[: hi - lo] = start_b[lo:hi]
         met = paired_meet(dg.in_ptr, dg.in_idx, dg.in_deg,
-                          sa, sb, keys[i], sqrt_c, t_max)
-        met = np.asarray(met)
-        out[lo:hi] = met[: hi - lo]
+                          jnp.asarray(sa), jnp.asarray(sb),
+                          keys[i], sqrt_c, t_max)
+        out[lo:hi] = np.asarray(met)[: hi - lo]
     return out
 
 

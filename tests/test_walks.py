@@ -28,6 +28,74 @@ def test_default_t_max():
     assert math.sqrt(0.6) ** (t - 1) > 1e-4
 
 
+def test_chunk_bucket_policy():
+    from repro.core import walks
+    chunk = 1 << 19
+    # below the floor: everything pads to the minimum bucket
+    assert walks.chunk_bucket(1, chunk) == walks.WALK_CHUNK_MIN
+    assert walks.chunk_bucket(walks.WALK_CHUNK_MIN, chunk) == \
+        walks.WALK_CHUNK_MIN
+    # power-of-two growth, clamped at the chunk size
+    assert walks.chunk_bucket(walks.WALK_CHUNK_MIN + 1, chunk) == \
+        2 * walks.WALK_CHUNK_MIN
+    assert walks.chunk_bucket(chunk - 1, chunk) == chunk
+    assert walks.chunk_bucket(chunk, chunk) == chunk
+    assert walks.chunk_bucket(chunk + 5, chunk) == chunk
+    # monotone, always >= w (up to the chunk cap), always a bucket
+    prev = 0
+    for w in (1, 7, 1000, 1024, 1025, 4096, 70000, chunk):
+        b = walks.chunk_bucket(w, chunk)
+        assert b >= min(w, chunk) and b >= prev
+        assert b == chunk or (b & (b - 1)) == 0
+        prev = b
+
+
+def test_chunked_dispatch_compile_count_bounded(small_graph):
+    """Regression: ragged sample counts (Alg 4 phase 2, update_index
+    subsets) must reuse a bounded set of compiled walk programs -- the
+    unpadded single-chunk path compiled one program per distinct W."""
+    import jax.random as jr
+    from repro.core import walks
+    dg = walks.DeviceGraph.from_graph(small_graph)
+    sc, t_max, chunk = 0.7746, 8, 1 << 12
+    rng = np.random.default_rng(0)
+
+    def run(w, seed):
+        sa = rng.integers(0, small_graph.n, w).astype(np.int32)
+        sb = rng.integers(0, small_graph.n, w).astype(np.int32)
+        return walks.paired_meet_chunked(dg, sa, sb, jr.PRNGKey(seed),
+                                         sc, t_max, chunk)
+
+    # prime every bucket this chunk size can ever dispatch
+    for w in (1, walks.WALK_CHUNK_MIN + 1, chunk - 1, chunk + 3):
+        run(w, seed=w)
+    primed = walks.compile_count()
+    # a storm of distinct ragged widths: zero new programs
+    for i, w in enumerate((3, 17, 257, 1025, 2049, 4095, 4097, 9001)):
+        got = run(w, seed=100 + i)
+        assert got.shape == (w,)
+    assert walks.compile_count() == primed
+
+
+def test_padded_chunk_matches_unpadded_region(small_graph):
+    """Pad lanes must never leak into the real result: the same walks
+    dispatched under different chunkings agree on the real region."""
+    import jax.random as jr
+    from repro.core import walks
+    g = small_graph
+    dg = walks.DeviceGraph.from_graph(g)
+    rng = np.random.default_rng(1)
+    w = 700
+    sa = rng.integers(0, g.n, w).astype(np.int32)
+    sb = rng.integers(0, g.n, w).astype(np.int32)
+    met = walks.paired_meet_chunked(dg, sa, sb, jr.PRNGKey(2), 0.7746,
+                                    10, chunk=1 << 12)
+    assert met.shape == (w,) and met.dtype == bool
+    # equal starts always meet at step 0 regardless of padding
+    eq = sa == sb
+    assert np.all(met[eq])
+
+
 def test_walk_positions_stop_monotone(small_graph):
     import jax.random as jr
     from repro.core import walks
