@@ -1,14 +1,23 @@
-"""Paper Figure 3 + Section 5.1: preprocessing cost.
+"""Paper Figure 3 + Sections 5.1/5.4: preprocessing cost.
 
 SLING with Algorithm 1 vs Algorithm 4 d_k estimation (the paper's
-adaptive-sampling claim), HP-table construction, MC and Linearize."""
+adaptive-sampling claim), HP-table construction host-driven vs
+device-resident (the fused propagation scan), MC and Linearize; plus
+the mesh-scaling rows for the sharded build
+(``--mesh S``/:func:`run_mesh`, EXPERIMENTS.md "Preprocessing
+scaling") and the diagonal-path recompile gate ``run.py --smoke``
+drives through :func:`mesh_subprocess`.
+"""
 from __future__ import annotations
 
+import os
+import subprocess
+import sys
 import time
 
 from benchmarks.common import emit
 from repro.baselines import linearize, montecarlo
-from repro.core import build, diagonal, hp_index, theory
+from repro.core import diagonal, hp_index, theory, walks
 from repro.graph import generators
 
 
@@ -28,10 +37,25 @@ def run(sizes=(300, 1000), eps: float = 0.2):
         emit(f"fig3/preprocess/d_alg4/n={n}", 1e6 * t_alg4,
              f"adaptive;speedup={t_alg1 / max(t_alg4, 1e-9):.1f}x")
 
+        # host-vs-device HP build: the step-driven loop (one dispatch
+        # + host sync per step, early exit) vs the fused windowed
+        # scan. Each variant runs once untimed so the rows compare
+        # steady-state build time, not first-call XLA compilation.
+        for fused in (False, True):
+            hp_index.build_hp_table(g, p.theta, p.sqrt_c, p.l_max,
+                                    block=256, fused=fused)
         t0 = time.perf_counter()
-        hp_index.build_hp_table(g, p.theta, p.sqrt_c, p.l_max, block=256)
-        emit(f"fig3/preprocess/hp_table/n={n}",
-             1e6 * (time.perf_counter() - t0), f"theta={p.theta:.2e}")
+        hp_index.build_hp_table(g, p.theta, p.sqrt_c, p.l_max,
+                                block=256, fused=False)
+        t_host = time.perf_counter() - t0
+        emit(f"fig3/preprocess/hp_table_host/n={n}", 1e6 * t_host,
+             "step-driven, per-step sync")
+        t0 = time.perf_counter()
+        hp_index.build_hp_table(g, p.theta, p.sqrt_c, p.l_max,
+                                block=256, fused=True)
+        t_dev = time.perf_counter() - t0
+        emit(f"fig3/preprocess/hp_table_device/n={n}", 1e6 * t_dev,
+             f"fused scan;speedup={t_host / max(t_dev, 1e-9):.1f}x")
 
         t0 = time.perf_counter()
         montecarlo.build(g, eps=eps, seed=0, n_w_override=1000)
@@ -42,3 +66,95 @@ def run(sizes=(300, 1000), eps: float = 0.2):
         linearize.build(g, R=100, seed=0)
         emit(f"fig3/preprocess/linearize/n={n}",
              1e6 * (time.perf_counter() - t0), "R=100,L=3")
+
+
+# ----------------------------------------------------------------------
+# mesh-scaling rows + the preprocess recompile gate
+# ----------------------------------------------------------------------
+def run_mesh(n: int = 1000, mesh: int = 2, eps: float = 0.2,
+             block: int = 128) -> None:
+    """Sharded-build scaling rows at mesh sizes 1 and ``mesh``.
+
+    Asserts (a) the sharded table equals the single-device table entry
+    for entry, and (b) the diagonal walk path compiles zero new
+    programs across re-estimation once the chunk buckets are primed
+    -- the two acceptance gates of the parallel-preprocessing issue.
+    Needs ``mesh`` devices: run as its own process so XLA_FLAGS can
+    force host devices (``mesh_subprocess``).
+    """
+    import jax
+    import jax.random as jr
+    import numpy as np
+
+    from repro.core.shard_query import serving_mesh
+    if jax.device_count() < mesh:
+        raise RuntimeError(
+            f"--mesh {mesh} needs {mesh} devices, found "
+            f"{jax.device_count()}; run via mesh_subprocess so "
+            "XLA_FLAGS can force host devices")
+    g = generators.barabasi_albert(n, 3, seed=0, directed=False)
+    p = theory.plan(eps=eps, n=g.n)
+
+    ref = None
+    for S in sorted({1, mesh}):
+        m = serving_mesh(S)
+        hp_index.shard_build_hp(g, p.theta, p.sqrt_c, p.l_max, m,
+                                block=block)     # compile once
+        t0 = time.perf_counter()
+        hp = hp_index.shard_build_hp(g, p.theta, p.sqrt_c, p.l_max, m,
+                                     block=block)
+        t_build = time.perf_counter() - t0
+        if ref is None:
+            ref = hp_index.build_hp_table(g, p.theta, p.sqrt_c, p.l_max,
+                                          block=block)
+        assert (np.array_equal(hp.keys, ref.keys)
+                and np.array_equal(hp.vals, ref.vals)
+                and np.array_equal(hp.counts, ref.counts)), \
+            f"sharded build != single-device at S={S}"
+        emit(f"fig3/preprocess/hp_table_sharded/mesh={S}/n={n}",
+             1e6 * t_build,
+             f"{int(hp.counts.sum())} entries, equivalence OK")
+
+    # recompile gate: primed chunk buckets absorb every ragged width
+    dg = walks.DeviceGraph.from_graph(g)
+    walks.prime_chunk_buckets(dg, jr.PRNGKey(0), p.sqrt_c, p.t_max)
+    primed = walks.compile_count()
+    for seed in (1, 2):
+        diagonal.estimate_diagonal(g, p, seed=seed, dg=dg)
+    grew = walks.compile_count() - primed
+    emit(f"fig3/preprocess/d_recompiles/n={n}", float(grew),
+         "programs compiled after bucket priming (must be 0)")
+    assert grew == 0, f"diagonal path recompiled: {grew} new programs"
+    print("MESH_PREPROCESS_OK")
+
+
+def mesh_subprocess(mesh: int = 2, n: int = 240) -> None:
+    """run.py --smoke hook: 2-shard build equivalence + the diagonal
+    recompile gate in a subprocess (host devices must be forced before
+    the child's jax initializes)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={mesh}"
+    env.setdefault("PYTHONPATH", "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_preprocess",
+         "--mesh", str(mesh), "--n", str(n)],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert "MESH_PREPROCESS_OK" in r.stdout, r.stdout + r.stderr
+    for line in r.stdout.splitlines():
+        if line.startswith("fig3/"):
+            print(line)
+
+
+def _main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", type=int, default=2)
+    ap.add_argument("--n", type=int, default=1000)
+    ap.add_argument("--eps", type=float, default=0.2)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run_mesh(n=args.n, mesh=args.mesh, eps=args.eps)
+
+
+if __name__ == "__main__":
+    _main()

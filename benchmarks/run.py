@@ -50,6 +50,11 @@ def main() -> None:
     if want("preprocess"):
         from benchmarks import bench_preprocess
         bench_preprocess.run(sizes=sizes[:2])
+        if args.smoke:
+            # preprocess smoke (subprocess, forced host devices):
+            # 2-shard build equivalence + the diagonal walk-path
+            # recompile gate
+            bench_preprocess.mesh_subprocess(mesh=2, n=240)
     if want("space"):
         from benchmarks import bench_space
         bench_space.run(sizes=sizes)

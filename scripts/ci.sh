@@ -6,7 +6,11 @@
 # zero recompiles after warmup, so engine-latency regressions fail CI
 # rather than landing silently. It also replays an edge-churn batch
 # through update_index + swap_index (bench_update) and asserts the
-# hot-swap triggers zero recompilations in the serving path.
+# hot-swap triggers zero recompilations in the serving path, and runs
+# the preprocess smoke (bench_preprocess.mesh_subprocess): 2-shard
+# build equivalence plus the diagonal walk-path recompile gate. The
+# mesh pytest suite below covers the sharded-build differential tests
+# (tests/test_build_shard.py) at real shard counts.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

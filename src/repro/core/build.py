@@ -1,13 +1,19 @@
 """Index-construction orchestration (preprocessing pipeline).
 
 build_index(g, eps) = theory.plan -> diagonal (Alg 4) -> HP table
-(Alg 2, blocked) -> optional Section-5 optimizations. Parallel and
-out-of-core modes per paper Section 5.4:
+(Alg 2, blocked) -> optional Section-5 optimizations. The whole hot
+path is device-resident and shape-stable: walk batches dispatch at
+``walks.chunk_bucket`` widths, HP blocks run one fused propagation
+scan per superblock (DESIGN.md section 9). Parallel and out-of-core
+modes per paper Section 5.4:
 
   * ``spill_dir`` streams HP blocks to disk (out-of-core assembly);
-  * ``shard_build_hp`` (launch/dryrun path) shards the target-node
-    blocks of Alg 2 over the device mesh with shard_map -- the paper's
-    "embarrassingly parallelizable" construction made explicit.
+  * ``mesh=`` shards the build over a device mesh: the target-node
+    blocks of Alg 2 partition over ``mesh_axis`` with shard_map
+    (:func:`~repro.core.hp_index.shard_build_hp` -- the paper's
+    "embarrassingly parallelizable" construction made explicit,
+    entry-for-entry identical to the single-device build) and the
+    Alg-4 walk batches shard over the same axis.
 """
 from __future__ import annotations
 
@@ -16,6 +22,7 @@ import time
 import numpy as np
 
 from repro.core import diagonal, hp_index, theory
+from repro.core.hp_index import build_hp_table, shard_build_hp  # noqa: F401 (re-export)
 from repro.core.index import SlingIndex
 from repro.graph import csr
 
@@ -25,18 +32,29 @@ def build_index(g: csr.Graph, eps: float = 0.025, delta: float | None = None,
                 block: int = 256, spill_dir: str | None = None,
                 space_reduce: bool = False, enhance: bool = False,
                 exact_d: bool = False, stale_frac: float = 0.0,
+                mesh=None, mesh_axis: str = "data",
                 verbose: bool = False) -> SlingIndex:
     p = theory.plan(eps=eps, delta=delta, c=c, n=g.n,
                     stale_frac=stale_frac)
+    if mesh is not None and not exact_d:
+        from repro.core import walks
+        walks.check_walk_mesh(mesh, mesh_axis, walks.DEFAULT_CHUNK)
     t0 = time.perf_counter()
     if exact_d:
         d = diagonal.exact_diagonal(g, c).astype(np.float32)
     else:
-        d = diagonal.estimate_diagonal(g, p, seed=seed, adaptive=adaptive)
+        d = diagonal.estimate_diagonal(g, p, seed=seed, adaptive=adaptive,
+                                       mesh=mesh, mesh_axis=mesh_axis)
     t1 = time.perf_counter()
-    hp = hp_index.build_hp_table(g, theta=p.theta, sqrt_c=p.sqrt_c,
-                                 l_max=p.l_max, block=block,
-                                 spill_dir=spill_dir, progress=verbose)
+    if mesh is not None:
+        hp = hp_index.shard_build_hp(g, theta=p.theta, sqrt_c=p.sqrt_c,
+                                     l_max=p.l_max, mesh=mesh,
+                                     axis=mesh_axis, block=block,
+                                     spill_dir=spill_dir, progress=verbose)
+    else:
+        hp = hp_index.build_hp_table(g, theta=p.theta, sqrt_c=p.sqrt_c,
+                                     l_max=p.l_max, block=block,
+                                     spill_dir=spill_dir, progress=verbose)
     t2 = time.perf_counter()
     idx = SlingIndex(plan=p, d=d, hp=hp)
     if space_reduce:

@@ -10,8 +10,12 @@ big batch of paired sqrt(c)-walks (``walks.paired_meet_chunked``) and
 ``segment_sum`` the meet indicators back per node. Algorithm 4's
 two-phase adaptive schedule becomes: phase 1 with n_r1 pairs for every
 node; nodes whose mu-hat exceeds eps_d get a ragged phase-2 batch sized
-by ``theory.phase2_pairs`` (the asymptotically optimal Bernoulli-mean
-sample count, Lemma 11).
+by ``theory.phase2_pairs_vec`` (the asymptotically optimal
+Bernoulli-mean sample count, Lemma 11, evaluated for the whole ``need``
+set in one vectorized expression). Ragged batches dispatch through
+``walks.chunk_bucket``-padded shapes, so the whole two-phase schedule
+-- and every ``update_index`` re-estimation after it -- reuses one
+small compiled-program set.
 
 Exact shortcuts (beyond-paper, zero-error):
   * in-degree 0: both walks stop immediately -> d_k = 1.
@@ -47,8 +51,10 @@ def _sample_start_pairs(g: csr.Graph, nodes: np.ndarray,
 
 
 def _count_meets(dg: walks.DeviceGraph, seg, sa, sb, valid, n_groups,
-                 key, sqrt_c, t_max, chunk):
-    met = walks.paired_meet_chunked(dg, sa, sb, key, sqrt_c, t_max, chunk)
+                 key, sqrt_c, t_max, chunk, mesh=None,
+                 mesh_axis: str = "data"):
+    met = walks.paired_meet_chunked(dg, sa, sb, key, sqrt_c, t_max, chunk,
+                                    mesh=mesh, mesh_axis=mesh_axis)
     met = met & valid
     cnt = np.bincount(seg[met], minlength=n_groups)
     return cnt.astype(np.int64)
@@ -56,10 +62,11 @@ def _count_meets(dg: walks.DeviceGraph, seg, sa, sb, valid, n_groups,
 
 def estimate_diagonal(g: csr.Graph, plan: theory.SlingPlan,
                       seed: int = 0, adaptive: bool = True,
-                      chunk: int = 1 << 19,
+                      chunk: int = walks.DEFAULT_CHUNK,
                       dg: walks.DeviceGraph | None = None,
                       nodes: np.ndarray | None = None,
-                      d_init: np.ndarray | None = None) -> np.ndarray:
+                      d_init: np.ndarray | None = None,
+                      mesh=None, mesh_axis: str = "data") -> np.ndarray:
     """Estimate all d_k. ``adaptive=True`` is Algorithm 4; False is the
     fixed-budget Algorithm 1 (kept as the paper-faithful baseline for the
     preprocessing benchmark).
@@ -67,9 +74,15 @@ def estimate_diagonal(g: csr.Graph, plan: theory.SlingPlan,
     ``nodes`` restricts estimation to a subset (incremental maintenance:
     core/update.py re-estimates only the affected neighborhood of an
     edge batch); entries outside the subset are taken from ``d_init``
-    (required when ``nodes`` is given). The sampling machinery is
-    identical -- walks run on the *current* graph, so subset estimates
-    carry the same Lemma-11 guarantee as a full pass.
+    (required when ``nodes`` is given) and are returned untouched --
+    re-estimation never perturbs what it did not sample. The sampling
+    machinery is identical -- walks run on the *current* graph, so
+    subset estimates carry the same Lemma-11 guarantee as a full pass.
+
+    ``mesh`` shards each walk batch over ``mesh_axis``
+    (walks.paired_meet_chunked); the sample stream, and therefore every
+    estimate and the eps_d accounting, is unchanged -- sharding only
+    data-parallelizes the walk compute (DESIGN.md section 9).
     """
     n = g.n
     c, sc, t_max = plan.c, plan.sqrt_c, plan.t_max
@@ -102,7 +115,7 @@ def estimate_diagonal(g: csr.Graph, plan: theory.SlingPlan,
     seg, sa, sb, valid = _sample_start_pairs(g, sampled, counts, rng)
     key, k1 = jr.split(key)
     cnt1 = _count_meets(dg, seg, sa, sb, valid, len(sampled), k1, sc,
-                        t_max, chunk)
+                        t_max, chunk, mesh=mesh, mesh_axis=mesh_axis)
     mu_hat = cnt1 / n_r1
 
     if not adaptive:
@@ -113,15 +126,14 @@ def estimate_diagonal(g: csr.Graph, plan: theory.SlingPlan,
     # ---- phase 2 (Alg 4 lines 12-19): only nodes with mu_hat > eps_d ----
     need = np.flatnonzero(mu_hat > plan.eps_d)
     if len(need):
-        extra = np.array(
-            [max(0, theory.phase2_pairs(float(mu_hat[i]), plan.eps_d,
-                                        plan.delta_d, c) - n_r1)
-             for i in need], dtype=np.int64)
+        budget = theory.phase2_pairs_vec(mu_hat[need], plan.eps_d,
+                                         plan.delta_d, c)
+        extra = np.maximum(budget - n_r1, 0)
         seg2, sa2, sb2, valid2 = _sample_start_pairs(
             g, sampled[need], extra, rng)
         key, k2 = jr.split(key)
         cnt2 = _count_meets(dg, seg2, sa2, sb2, valid2, len(need), k2, sc,
-                            t_max, chunk)
+                            t_max, chunk, mesh=mesh, mesh_axis=mesh_axis)
         total = extra + n_r1
         mu_hat[need] = (cnt1[need] + cnt2) / total
 

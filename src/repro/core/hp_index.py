@@ -42,6 +42,96 @@ def _push_block(h, edge_src, edge_dst, w, theta, n: int):
     return hp, h_next
 
 
+# Steps per fused propagation dispatch. Bounds the stacked-frontier
+# footprint to SCAN_WINDOW * n * block * 4 bytes regardless of l_max
+# (a single full-l_max scan would peak at (l_max+1)x the step-driven
+# loop's frontier), while still amortizing one dispatch + one host
+# sync over SCAN_WINDOW steps -- and the per-window sync restores the
+# step loop's early exit once the frontier is exhausted.
+SCAN_WINDOW = 8
+
+
+def _propagate_scan_body(h0, edge_src, edge_dst, w, theta, n: int,
+                         steps: int):
+    """``steps`` pruned pull steps of Alg 2 fused into one scan.
+
+    Returns (h_final, stack): stack[j] is exactly the ``h_pruned`` the
+    step-driven :func:`_push_block` loop records at that step -- same
+    prune, same segment_sum, per column -- with no per-step host sync
+    or dispatch; h_final seeds the next window. Traceable body shared
+    verbatim by the single-device jit (:data:`_propagate_scan`) and
+    each shard of :func:`shard_build_hp`'s shard_map, which is what
+    makes the sharded build entry-for-entry identical to the
+    single-device one.
+    """
+    def step(h, _):
+        hp = jnp.where(h > theta, h, 0.0)
+        msgs = hp[edge_src] * w[:, None]             # (m, B)
+        return jax.ops.segment_sum(msgs, edge_dst, num_segments=n), hp
+
+    return jax.lax.scan(step, h0, None, length=steps)
+
+
+_propagate_scan = partial(jax.jit, static_argnames=("n", "steps"),
+                          donate_argnums=(0,))(_propagate_scan_body)
+
+
+@partial(jax.jit, static_argnames=("mesh", "axis", "n", "steps"),
+         donate_argnums=(0,))
+def _propagate_scan_sharded(h0, edge_src, edge_dst, w, theta, *, mesh,
+                            axis: str, n: int, steps: int):
+    """Mesh-parallel Alg 2 superblock window: the seed columns
+    (independent target-node blocks) shard over ``axis``, the graph
+    replicates, and every shard runs :func:`_propagate_scan_body` on
+    its own (n, block) slab -- the paper's "embarrassingly
+    parallelizable" construction (Section 5.4) with zero per-step
+    collectives."""
+    from repro import compat
+    from repro.launch.sharding import sling_build_specs
+
+    specs = sling_build_specs(axis)
+
+    def local(h0_l, es, ed, w_l, th):
+        return _propagate_scan_body(h0_l, es, ed, w_l, th, n, steps)
+
+    sm = compat.shard_map(
+        local, mesh=mesh,
+        in_specs=(specs["seeds"], specs["replicated"],
+                  specs["replicated"], specs["replicated"],
+                  specs["replicated"]),
+        out_specs=(specs["seeds"], specs["stack"]))
+    return sm(h0, edge_src, edge_dst, w, theta)
+
+
+def _windowed_coo(run_window, h, theta, n: int, l_max: int,
+                  target_ids: np.ndarray,
+                  row_mask: np.ndarray | None = None):
+    """Drive ``run_window(h, steps) -> (h_next, stack)`` over l_max+1
+    steps in SCAN_WINDOW slices, extracting COO per window and exiting
+    early once the frontier is exhausted (one host sync per window).
+    The shared loop behind the fused single-device and sharded builds.
+    """
+    total = l_max + 1
+    window = min(SCAN_WINDOW, total)
+    srcs, keys, vals = [], [], []
+    done = 0
+    while done < total:
+        h, stack = run_window(h, window)
+        take = min(window, total - done)
+        s, k, v = _extract_coo(np.asarray(stack)[:take], target_ids, n,
+                               row_mask, l_offset=done)
+        if len(s):
+            srcs.append(s)
+            keys.append(k)
+            vals.append(v)
+        done += take
+        if done < total and not bool(jnp.any(h > theta)):
+            break
+    return (np.concatenate(srcs) if srcs else np.zeros(0, np.int32),
+            np.concatenate(keys) if keys else np.zeros(0, np.int32),
+            np.concatenate(vals) if vals else np.zeros(0, np.float32))
+
+
 @partial(jax.jit, static_argnames=("n", "l_max", "transpose"))
 def _mass_scan(h0, edge_src, edge_dst, w, theta_r, n: int, l_max: int,
                transpose: bool):
@@ -203,18 +293,63 @@ class HPTable:
         return self.keys.nbytes + self.vals.nbytes + self.counts.nbytes
 
 
+def _extract_coo(stack: np.ndarray, target_ids: np.ndarray, n: int,
+                 row_mask: np.ndarray | None = None,
+                 l_offset: int = 0):
+    """Stacked pruned frontiers (steps, n, B) -> COO triples
+    (src node int32, key = l*n + target int32, value float32), where
+    l = ``l_offset`` + position in the stack (window scans hand in
+    their step offset).
+
+    The one extraction shared by the single-device and sharded builds
+    and by row repair -- the key layout lives here and in
+    :func:`_propagate_block_coo` only. Padding columns beyond
+    ``target_ids`` are sliced off; ``row_mask`` (repair) keeps only
+    affected source rows.
+    """
+    stack = stack[:, :, :len(target_ids)]
+    if row_mask is not None:
+        stack = stack * row_mask[None, :, None]
+    l_idx, i_idx, b_idx = np.nonzero(stack)
+    keys = ((l_idx.astype(np.int64) + l_offset) * n
+            + target_ids[b_idx]).astype(np.int32)
+    return (i_idx.astype(np.int32), keys,
+            stack[l_idx, i_idx, b_idx].astype(np.float32))
+
+
 def _propagate_block_coo(h, edge_src, edge_dst, w, theta, n: int,
                          l_max: int, target_ids: np.ndarray,
-                         row_mask: np.ndarray | None = None):
+                         row_mask: np.ndarray | None = None,
+                         fused: bool = True):
     """Run the pruned pull (Alg 2) for one seed block and collect the
     kept entries as COO triples (src node, key = l*n + target, value).
 
-    The single propagate-and-extract loop shared by ``build_hp_table``
+    The single propagate-and-extract path shared by ``build_hp_table``
     (row_mask=None: every row) and ``repair_hp_rows`` (row_mask:
     affected rows only) -- the key layout and prune rule live here and
     nowhere else. ``h`` may carry padding columns beyond
     ``target_ids``; they are sliced off before extraction.
+
+    ``fused=True`` (default) runs SCAN_WINDOW steps per compiled scan
+    dispatch (:data:`_propagate_scan`): device-resident, one dispatch
+    and one host sync per window, stacked-frontier footprint bounded
+    by SCAN_WINDOW * n * B floats, early exit per window.
+    ``fused=False`` is the step-driven loop with a per-step dispatch +
+    host sync + early exit, kept as the host-driven baseline
+    benchmarks/bench_preprocess.py measures against; both produce
+    identical entries (post-exhaustion window steps propagate an
+    all-pruned zero frontier).
     """
+    target_ids = np.asarray(target_ids, np.int64)
+    if fused:
+        theta32 = jnp.float32(theta)
+
+        def run_window(h_, steps):
+            return _propagate_scan(h_, edge_src, edge_dst, w, theta32,
+                                   n=n, steps=steps)
+
+        return _windowed_coo(run_window, h, theta32, n, l_max,
+                             target_ids, row_mask)
     srcs, keys, vals = [], [], []
     for l in range(l_max + 1):
         hp_l, h = _push_block(h, edge_src, edge_dst, w,
@@ -230,68 +365,66 @@ def _propagate_block_coo(h, edge_src, edge_dst, w, theta, n: int,
             vals.append(hp_np[i_idx, b_idx].astype(np.float32))
         if not bool(jnp.any(h > theta)):
             break
-    return srcs, keys, vals
+    return (np.concatenate(srcs) if srcs else np.zeros(0, np.int32),
+            np.concatenate(keys) if keys else np.zeros(0, np.int32),
+            np.concatenate(vals) if vals else np.zeros(0, np.float32))
 
 
-def build_hp_table(g: csr.Graph, theta: float, sqrt_c: float,
-                   l_max: int, block: int = 256,
-                   width: int | None = None,
-                   spill_dir: str | None = None,
-                   progress: bool = False) -> HPTable:
-    """Construct H(v) for all v by blocked dense propagation.
+class _CooSink:
+    """Accumulates per-block COO triples, in RAM or via spill files.
 
-    ``spill_dir``: out-of-core mode (paper Section 5.4) -- per-block COO
-    triples are written to .npy spill files and assembled by an external
-    merge instead of being held in RAM.
+    The shared back half of the single-device and sharded builds:
+    ``spill_dir`` streams each block to a .npz (out-of-core assembly,
+    paper Section 5.4) instead of holding it; ``collect()`` re-reads
+    the spills in block order, so spilled and in-RAM assembly produce
+    the same concatenation.
     """
-    n = g.n
-    assert (l_max + 1) * n < 2**31 - 1, "int32 key space exceeded"
-    edge_src = jnp.asarray(g.edge_src)
-    edge_dst = jnp.asarray(g.edge_dst)
-    w = jnp.asarray(csr.normalized_pull_weights(g, sqrt_c))
 
-    src_acc, key_acc, val_acc = [], [], []
-    spill_files = []
-    import os
-    for b0 in range(0, n, block):
-        b1 = min(b0 + block, n)
-        B = b1 - b0
-        h = jnp.zeros((n, B), dtype=jnp.float32).at[
-            jnp.arange(b0, b1), jnp.arange(B)].set(1.0)
-        blk_src, blk_key, blk_val = _propagate_block_coo(
-            h, edge_src, edge_dst, w, theta, n, l_max,
-            target_ids=np.arange(b0, b1, dtype=np.int64))
-        if blk_src:
-            s = np.concatenate(blk_src)
-            k = np.concatenate(blk_key)
-            v = np.concatenate(blk_val)
-            if spill_dir is not None:
-                os.makedirs(spill_dir, exist_ok=True)
-                path = os.path.join(spill_dir, f"hp_block_{b0}.npz")
-                np.savez(path, src=s, key=k, val=v)
-                spill_files.append(path)
-            else:
-                src_acc.append(s); key_acc.append(k); val_acc.append(v)
-        if progress and (b0 // block) % 8 == 0:
-            print(f"  hp block {b0}/{n}")
+    def __init__(self, spill_dir: str | None, tag: str = "hp_block"):
+        self.spill_dir = spill_dir
+        self.tag = tag
+        self._acc: list[tuple] = []
+        self._files: list[str] = []
 
-    if spill_dir is not None:
-        for path in spill_files:
-            z = np.load(path)
-            src_acc.append(z["src"]); key_acc.append(z["key"])
-            val_acc.append(z["val"])
+    def add(self, b0: int, src, key, val) -> None:
+        if len(src) == 0:
+            return
+        if self.spill_dir is not None:
+            import os
+            os.makedirs(self.spill_dir, exist_ok=True)
+            path = os.path.join(self.spill_dir, f"{self.tag}_{b0}.npz")
+            np.savez(path, src=src, key=key, val=val)
+            self._files.append(path)
+        else:
+            self._acc.append((src, key, val))
 
-    if not src_acc:
+    def collect(self):
+        if self.spill_dir is not None:
+            self._acc = []
+            for path in self._files:
+                z = np.load(path)
+                self._acc.append((z["src"], z["key"], z["val"]))
+        if not self._acc:
+            return (np.zeros(0, np.int32), np.zeros(0, np.int32),
+                    np.zeros(0, np.float32))
+        return tuple(np.concatenate([t[i] for t in self._acc])
+                     for i in range(3))
+
+
+def _pack_coo(src, key, val, n: int, width: int | None, theta: float,
+              sqrt_c: float, l_max: int) -> HPTable:
+    """COO triples -> fixed-width packed HPTable (sorted rows, PAD
+    sentinel). Fully vectorized: the scatter lands every entry at its
+    (row, within-row-rank) slot in one shot -- the per-node Python
+    packing loop this replaces dominated assembly beyond ~1e5 rows.
+    """
+    if len(src) == 0:
         width = width or 1
         return HPTable(n=n, width=width,
                        keys=np.full((n, width), INT32_PAD_KEY, np.int32),
                        vals=np.zeros((n, width), np.float32),
                        counts=np.zeros(n, np.int32),
                        theta=theta, sqrt_c=sqrt_c, l_max=l_max)
-
-    src = np.concatenate(src_acc)
-    key = np.concatenate(key_acc)
-    val = np.concatenate(val_acc)
     # group by source node, then sort each row's keys (external-sort
     # analogue of paper Section 5.4's batch assembly)
     order = np.lexsort((key, src))
@@ -303,12 +436,101 @@ def build_hp_table(g: csr.Graph, theta: float, sqrt_c: float,
     vals = np.zeros((n, width), dtype=np.float32)
     row_start = np.zeros(n + 1, dtype=np.int64)
     np.cumsum(counts, out=row_start[1:])
-    for v_ in range(n):
-        c0, c1 = row_start[v_], row_start[v_ + 1]
-        keys[v_, : c1 - c0] = key[c0:c1]
-        vals[v_, : c1 - c0] = val[c0:c1]
+    cols = np.arange(len(key), dtype=np.int64) - row_start[src]
+    keys[src, cols] = key
+    vals[src, cols] = val
     return HPTable(n=n, width=width, keys=keys, vals=vals, counts=counts,
                    theta=theta, sqrt_c=sqrt_c, l_max=l_max)
+
+
+def build_hp_table(g: csr.Graph, theta: float, sqrt_c: float,
+                   l_max: int, block: int = 256,
+                   width: int | None = None,
+                   spill_dir: str | None = None,
+                   progress: bool = False,
+                   fused: bool = True) -> HPTable:
+    """Construct H(v) for all v by blocked dense propagation.
+
+    Every block dispatches at the full (n, block) shape (the last one
+    carries inert zero columns), so a build compiles exactly one
+    propagation program. ``spill_dir``: out-of-core mode (paper
+    Section 5.4) -- per-block COO triples are written to spill files
+    and assembled by an external merge instead of being held in RAM.
+    ``fused=False`` keeps the step-driven host-sync loop for the
+    preprocessing benchmark's host-vs-device comparison.
+    """
+    n = g.n
+    assert (l_max + 1) * n < 2**31 - 1, "int32 key space exceeded"
+    edge_src = jnp.asarray(g.edge_src)
+    edge_dst = jnp.asarray(g.edge_dst)
+    w = jnp.asarray(csr.normalized_pull_weights(g, sqrt_c))
+
+    sink = _CooSink(spill_dir)
+    for b0 in range(0, n, block):
+        b1 = min(b0 + block, n)
+        B = b1 - b0
+        h = jnp.zeros((n, block), dtype=jnp.float32).at[
+            jnp.arange(b0, b1), jnp.arange(B)].set(1.0)
+        s, k, v = _propagate_block_coo(
+            h, edge_src, edge_dst, w, theta, n, l_max,
+            target_ids=np.arange(b0, b1, dtype=np.int64), fused=fused)
+        sink.add(b0, s, k, v)
+        if progress and (b0 // block) % 8 == 0:
+            print(f"  hp block {b0}/{n}")
+
+    src, key, val = sink.collect()
+    return _pack_coo(src, key, val, n, width, theta, sqrt_c, l_max)
+
+
+def shard_build_hp(g: csr.Graph, theta: float, sqrt_c: float,
+                   l_max: int, mesh, axis: str = "data",
+                   block: int = 256, width: int | None = None,
+                   spill_dir: str | None = None,
+                   progress: bool = False) -> HPTable:
+    """Mesh-parallel :func:`build_hp_table` (paper Section 5.4).
+
+    Target-node blocks partition over ``mesh.shape[axis]``: each
+    dispatch propagates a superblock of S*block seed columns, sharded
+    so shard s runs the *same* (n, block) slab program
+    (:func:`_propagate_scan_body`) on the same contiguous column block
+    the single-device build would process -- columns are independent,
+    so the output is entry-for-entry identical to
+    ``build_hp_table(g, theta, sqrt_c, l_max, block=block)``
+    (tests/test_build_shard.py asserts bit equality on the oracle
+    zoo). The gathered superblock stacks spill per block when
+    ``spill_dir`` is set, composing out-of-core assembly with
+    sharding. Superblocks always dispatch at the full padded shape
+    and SCAN_WINDOW steps per dispatch: one compiled program per
+    build, frontier-stack footprint bounded per window.
+    """
+    n = g.n
+    assert (l_max + 1) * n < 2**31 - 1, "int32 key space exceeded"
+    S = int(mesh.shape[axis])
+    super_b = block * S
+    edge_src = jnp.asarray(g.edge_src)
+    edge_dst = jnp.asarray(g.edge_dst)
+    w = jnp.asarray(csr.normalized_pull_weights(g, sqrt_c))
+    theta32 = jnp.float32(theta)
+
+    def run_window(h_, steps):
+        return _propagate_scan_sharded(h_, edge_src, edge_dst, w,
+                                       theta32, mesh=mesh, axis=axis,
+                                       n=n, steps=steps)
+
+    sink = _CooSink(spill_dir, tag="hp_shard_block")
+    for b0 in range(0, n, super_b):
+        b1 = min(b0 + super_b, n)
+        B = b1 - b0
+        h = jnp.zeros((n, super_b), dtype=jnp.float32).at[
+            jnp.arange(b0, b1), jnp.arange(B)].set(1.0)
+        s, k, v = _windowed_coo(run_window, h, theta32, n, l_max,
+                                np.arange(b0, b1, dtype=np.int64))
+        sink.add(b0, s, k, v)
+        if progress:
+            print(f"  hp superblock {b0}/{n} ({S}-way)")
+
+    src, key, val = sink.collect()
+    return _pack_coo(src, key, val, n, width, theta, sqrt_c, l_max)
 
 
 def repair_hp_rows(g: csr.Graph, hp: HPTable, rows: np.ndarray,
@@ -354,9 +576,9 @@ def repair_hp_rows(g: csr.Graph, hp: HPTable, rows: np.ndarray,
         s_l, k_l, v_l = _propagate_block_coo(
             h, edge_src, edge_dst, w, hp.theta, n, hp.l_max,
             target_ids=sub, row_mask=row_mask)
-        src_acc += s_l
-        key_acc += k_l
-        val_acc += v_l
+        src_acc.append(s_l)
+        key_acc.append(k_l)
+        val_acc.append(v_l)
         if progress and (b0 // block) % 8 == 0:
             print(f"  repair block {b0}/{len(targets)}")
 

@@ -18,6 +18,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
+import numpy as np
+
 
 @dataclasses.dataclass(frozen=True)
 class SlingPlan:
@@ -154,13 +156,29 @@ def stale_increment(p: SlingPlan, theta_r: float, m_rows: float,
             + 2.0 * p.c * (m_d + theta_r) / ((1 - p.c) * (1.0 - p.sqrt_c)))
 
 
+def phase2_pairs_vec(mu_hat, eps_d: float, delta_d: float, c: float):
+    """Alg 4 lines 12-13, vectorized: total pair budgets n_r* for an
+    array of phase-1 estimates ``mu_hat``.
+
+    One fused NumPy expression over the whole ``need`` set --
+    ``diagonal.estimate_diagonal`` previously evaluated the scalar
+    formula in a Python list comprehension, which dominated phase-2
+    setup on large graphs. Bit-identical to the scalar form: same
+    expression tree, same float64 intermediates.
+    """
+    mu = np.asarray(mu_hat, np.float64)
+    eps_star = eps_d / c
+    mu_star = mu + np.sqrt(mu * eps_star)
+    return np.ceil((2 * mu_star + (2.0 / 3.0) * eps_star)
+                   / (eps_star ** 2)
+                   * math.log(4.0 / delta_d)).astype(np.int64)
+
+
 def phase2_pairs(mu_hat: float, eps_d: float, delta_d: float,
                  c: float) -> int:
-    """Alg 4 lines 12-13: total pair budget n_r* for phase 2."""
-    eps_star = eps_d / c
-    mu_star = mu_hat + math.sqrt(mu_hat * eps_star)
-    return int(math.ceil((2 * mu_star + (2.0 / 3.0) * eps_star)
-                         / (eps_star ** 2) * math.log(4.0 / delta_d)))
+    """Alg 4 lines 12-13: total pair budget n_r* for phase 2 (scalar
+    facade over :func:`phase2_pairs_vec` so the two can never drift)."""
+    return int(phase2_pairs_vec(mu_hat, eps_d, delta_d, c))
 
 
 def alg1_pairs(eps_d: float, delta_d: float, c: float) -> int:

@@ -33,15 +33,29 @@ class DeviceGraph:
     n: int
     m: int
     in_ptr: jnp.ndarray   # (n+1,) int32
-    in_idx: jnp.ndarray   # (m,) int32
+    in_idx: jnp.ndarray   # (edge_cap >= m,) int32
     in_deg: jnp.ndarray   # (n,) int32
 
     @staticmethod
-    def from_graph(g: csr.Graph) -> "DeviceGraph":
+    def from_graph(g: csr.Graph,
+                   edge_cap: int | None = None) -> "DeviceGraph":
+        """``in_idx`` is padded to an edge capacity bucket
+        (:func:`~repro.core.hp_index.capacity_bucket` by default, or
+        any explicit ``edge_cap >= m``): walk kernels never read past
+        ``in_ptr[v] + in_deg[v]``, so pad slots are inert, and an
+        edge-churned graph (``update_index``) whose m stays inside the
+        bucket re-enters the *same* compiled walk programs -- the
+        per-batch recompiles used to come from the raw (m,) shape as
+        much as from unpadded walk batches."""
+        from repro.core.hp_index import capacity_bucket
+        cap = (capacity_bucket(max(g.m, 1)) if edge_cap is None
+               else max(int(edge_cap), g.m, 1))
+        in_idx = np.zeros(cap, np.int32)
+        in_idx[:g.m] = g.in_idx
         return DeviceGraph(
             n=g.n, m=g.m,
             in_ptr=jnp.asarray(g.in_ptr, dtype=jnp.int32),
-            in_idx=jnp.asarray(g.in_idx, dtype=jnp.int32),
+            in_idx=jnp.asarray(in_idx),
             in_deg=jnp.asarray(g.in_deg, dtype=jnp.int32),
         )
 
@@ -50,6 +64,9 @@ def default_t_max(sqrt_c: float, tail: float = 1e-4) -> int:
     """Smallest t with (sqrt_c)^t <= tail."""
     return max(1, int(math.ceil(math.log(tail) / math.log(sqrt_c))))
 
+
+# Default walk-chunk width (lanes per full dispatch).
+DEFAULT_CHUNK = 1 << 19
 
 # Smallest padded dispatch width for a walk chunk. Anything below this
 # pads up to it, so the bucket set for a given ``chunk`` is
@@ -75,10 +92,48 @@ def chunk_bucket(w: int, chunk: int, min_bucket: int = WALK_CHUNK_MIN) -> int:
     return min(chunk, max(min_bucket, b))
 
 
+def check_walk_mesh(mesh, mesh_axis: str, chunk: int) -> None:
+    """Validate up front that every chunk bucket divides over the mesh
+    axis (buckets are powers of two plus ``chunk`` itself), instead of
+    failing mid-sampling on the first odd-sized phase-2 batch."""
+    S = int(mesh.shape[mesh_axis])
+    if WALK_CHUNK_MIN % S or chunk % S:
+        raise ValueError(
+            f"walk sharding needs mesh axis '{mesh_axis}' (size {S}) "
+            f"to divide both WALK_CHUNK_MIN={WALK_CHUNK_MIN} and "
+            f"chunk={chunk}: use a power-of-two shard count (or a "
+            "divisible chunk)")
+
+
 def compile_count() -> int:
     """Distinct compiled paired-walk programs in this process (the
     regression gate for recompile storms on the preprocessing path)."""
     return int(paired_meet._cache_size())
+
+
+def prime_chunk_buckets(dg: DeviceGraph, key, sqrt_c: float, t_max: int,
+                        chunk: int = DEFAULT_CHUNK, mesh=None,
+                        mesh_axis: str = "data") -> int:
+    """Compile every chunk bucket for this (graph shape, t_max) once.
+
+    The preprocessing analogue of ``QueryEngine.warmup()``: after this
+    returns, any sample count -- Alg 4 phase 1, every ragged phase-2
+    batch, every ``update_index`` subset whose graph stays inside
+    ``dg``'s edge capacity bucket -- dispatches into an
+    already-compiled program, so ``compile_count()`` is constant under
+    arbitrary churn (asserted by tests/test_build_shard.py and the
+    ``run.py --smoke`` preprocess gate). Returns the bucket count.
+    """
+    buckets, b = [], WALK_CHUNK_MIN
+    while b < chunk:
+        buckets.append(b)
+        b *= 2
+    buckets.append(chunk)
+    zero = np.zeros(max(buckets), np.int32)
+    for b in buckets:
+        paired_meet_chunked(dg, zero[:b], zero[:b], key, sqrt_c, t_max,
+                            chunk, mesh=mesh, mesh_axis=mesh_axis)
+    return len(buckets)
 
 
 @partial(jax.jit, static_argnames=("t_max",))
@@ -125,7 +180,8 @@ def paired_meet(dg_in_ptr, dg_in_idx, dg_in_deg,
 
 def paired_meet_chunked(dg: DeviceGraph, start_a: np.ndarray,
                         start_b: np.ndarray, key, sqrt_c: float,
-                        t_max: int, chunk: int = 1 << 19) -> np.ndarray:
+                        t_max: int, chunk: int = DEFAULT_CHUNK,
+                        mesh=None, mesh_axis: str = "data") -> np.ndarray:
     """Host-driven chunked wrapper over :func:`paired_meet`.
 
     Every chunk is padded to a :func:`chunk_bucket` width -- full
@@ -137,6 +193,14 @@ def paired_meet_chunked(dg: DeviceGraph, start_a: np.ndarray,
     per Alg 4 phase-2 batch, one per ``update_index`` subset --
     compiled a fresh XLA program.) Pad lanes walk from node 0 and are
     sliced off before the result leaves this function.
+
+    ``mesh`` shards each padded chunk over ``mesh_axis`` with the
+    graph arrays replicated (``launch/sharding.sling_build_specs``):
+    paired walks are embarrassingly parallel, so there is no
+    cross-device traffic beyond the initial broadcast, and the RNG
+    stream -- hence every meet indicator -- is identical to the
+    unsharded dispatch. Buckets are powers of two, hence divisible by
+    any power-of-two mesh axis.
     """
     W = len(start_a)
     out = np.zeros(W, dtype=bool)
@@ -144,6 +208,16 @@ def paired_meet_chunked(dg: DeviceGraph, start_a: np.ndarray,
         return out
     n_chunks = (W + chunk - 1) // chunk
     keys = jr.split(key, n_chunks)
+    graph_args = (dg.in_ptr, dg.in_idx, dg.in_deg)
+    if mesh is not None:
+        from jax.sharding import NamedSharding
+        from repro.launch.sharding import sling_build_specs
+        check_walk_mesh(mesh, mesh_axis, chunk)
+        specs = sling_build_specs(mesh_axis)
+        graph_args = tuple(
+            jax.device_put(a, NamedSharding(mesh, specs["replicated"]))
+            for a in graph_args)
+        walk_sharding = NamedSharding(mesh, specs["walks"])
     for i in range(n_chunks):
         lo, hi = i * chunk, min((i + 1) * chunk, W)
         bucket = chunk_bucket(hi - lo, chunk)
@@ -151,9 +225,11 @@ def paired_meet_chunked(dg: DeviceGraph, start_a: np.ndarray,
         sb = np.zeros(bucket, np.int32)
         sa[: hi - lo] = start_a[lo:hi]
         sb[: hi - lo] = start_b[lo:hi]
-        met = paired_meet(dg.in_ptr, dg.in_idx, dg.in_deg,
-                          jnp.asarray(sa), jnp.asarray(sb),
-                          keys[i], sqrt_c, t_max)
+        sa_d, sb_d = jnp.asarray(sa), jnp.asarray(sb)
+        if mesh is not None:
+            sa_d = jax.device_put(sa_d, walk_sharding)
+            sb_d = jax.device_put(sb_d, walk_sharding)
+        met = paired_meet(*graph_args, sa_d, sb_d, keys[i], sqrt_c, t_max)
         out[lo:hi] = np.asarray(met)[: hi - lo]
     return out
 

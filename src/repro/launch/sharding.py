@@ -183,6 +183,27 @@ def sling_index_specs(axis: str = "data") -> dict[str, P]:
     }
 
 
+def sling_build_specs(axis: str = "data") -> dict[str, P]:
+    """PartitionSpecs for the mesh-parallel *preprocessing* state
+    (core/hp_index.shard_build_hp, core/walks, DESIGN.md section 9).
+
+    Alg 2's target-node blocks partition over the trailing *column*
+    axis of the (n, S*block) seed superblock -- columns are
+    independent, so shard s's slab of ``block`` columns is exactly the
+    block the single-device build would process -- and the stacked
+    pruned frontiers come back column-sharded. Walk batches shard
+    their single walk dimension; the graph arrays stay replicated on
+    both paths. One table so the build kernels' shard_map in_specs and
+    the walk batch device_put cannot drift apart.
+    """
+    return {
+        "seeds": P(None, (axis,)),        # (n, S*block) one-hot columns
+        "stack": P(None, None, (axis,)),  # (l_max+1, n, S*block) out
+        "walks": P((axis,)),              # (bucket,) walk starts
+        "replicated": P(),                # graph arrays / scalars
+    }
+
+
 # ----------------------------------------------------------------------
 # parameter specs: rule table keyed by path regex -> logical dim names
 # ----------------------------------------------------------------------

@@ -1,0 +1,156 @@
+"""Mesh-parallel preprocessing (DESIGN.md section 9): the sharded HP
+build must be entry-for-entry identical to the single-device build,
+the diagonal walk path must never recompile under ragged churn, and
+the mesh-sharded diagonal must reproduce the unsharded sample stream.
+
+Mesh sizes > 1 need forced host devices and carry the ``mesh`` marker
+(scripts/ci.sh runs them under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``); mesh size 1
+and the compile-count gates run in the plain tier-1 suite.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+import oracle
+
+from repro.core import build, diagonal, hp_index, theory, update, walks
+from repro.core.shard_query import serving_mesh
+from repro.graph import generators
+
+
+def _mesh_or_skip(n_shards):
+    if jax.device_count() < n_shards:
+        pytest.skip(f"needs {n_shards} devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count)")
+    return serving_mesh(n_shards)
+
+
+def _assert_tables_equal(got, ref):
+    assert got.n == ref.n and got.width == ref.width
+    np.testing.assert_array_equal(got.counts, ref.counts)
+    np.testing.assert_array_equal(got.keys, ref.keys)
+    np.testing.assert_array_equal(got.vals, ref.vals)   # bit-identical
+
+
+# ----------------------------------------------------------------------
+# sharded build == single-device build, entry for entry
+# ----------------------------------------------------------------------
+def test_shard_build_equivalence_zoo_mesh1():
+    mesh = serving_mesh(1)
+    for name, g in oracle.cases().items():
+        p = theory.plan(eps=0.1, c=0.6, n=g.n)
+        ref = hp_index.build_hp_table(g, p.theta, p.sqrt_c, p.l_max,
+                                      block=16)
+        got = hp_index.shard_build_hp(g, p.theta, p.sqrt_c, p.l_max,
+                                      mesh, block=16)
+        _assert_tables_equal(got, ref)
+
+
+@pytest.mark.mesh
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_shard_build_equivalence_zoo(n_shards):
+    mesh = _mesh_or_skip(n_shards)
+    for name, g in oracle.cases().items():
+        p = theory.plan(eps=0.1, c=0.6, n=g.n)
+        ref = hp_index.build_hp_table(g, p.theta, p.sqrt_c, p.l_max,
+                                      block=16)
+        got = hp_index.shard_build_hp(g, p.theta, p.sqrt_c, p.l_max,
+                                      mesh, block=16)
+        _assert_tables_equal(got, ref)
+
+
+def test_shard_build_spill_dir_composes(tmp_path):
+    """Out-of-core superblock spills assemble to the same table."""
+    mesh = serving_mesh(1)
+    g = oracle.cases()["powerlaw"]
+    p = theory.plan(eps=0.1, c=0.6, n=g.n)
+    ref = hp_index.shard_build_hp(g, p.theta, p.sqrt_c, p.l_max, mesh,
+                                  block=16)
+    got = hp_index.shard_build_hp(g, p.theta, p.sqrt_c, p.l_max, mesh,
+                                  block=16, spill_dir=str(tmp_path))
+    _assert_tables_equal(got, ref)
+    assert list(tmp_path.glob("hp_shard_block_*.npz"))
+
+
+def test_fused_build_matches_stepwise():
+    """The fused one-dispatch scan records exactly the entries the
+    step-driven (per-step host sync, early exit) loop records."""
+    for name, g in oracle.cases().items():
+        p = theory.plan(eps=0.1, c=0.6, n=g.n)
+        ref = hp_index.build_hp_table(g, p.theta, p.sqrt_c, p.l_max,
+                                      block=16, fused=False)
+        got = hp_index.build_hp_table(g, p.theta, p.sqrt_c, p.l_max,
+                                      block=16, fused=True)
+        _assert_tables_equal(got, ref)
+
+
+@pytest.mark.mesh
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_build_index_mesh_end_to_end(n_shards):
+    """build_index(mesh=...) -- sampled diagonal included -- equals the
+    single-device build bit for bit: walk sharding must not perturb
+    the sample stream (DESIGN.md section 9 eps_d accounting)."""
+    mesh = _mesh_or_skip(n_shards)
+    g = generators.barabasi_albert(120, 3, seed=2, directed=False)
+    ref = build.build_index(g, eps=0.1, seed=0)
+    got = build.build_index(g, eps=0.1, seed=0, mesh=mesh)
+    np.testing.assert_array_equal(got.d, ref.d)
+    _assert_tables_equal(got.hp, ref.hp)
+
+
+@pytest.mark.mesh
+def test_sharded_diagonal_matches_unsharded():
+    mesh = _mesh_or_skip(2)
+    g = generators.barabasi_albert(150, 3, seed=1, directed=False)
+    p = theory.plan(eps=0.1, n=g.n)
+    d0 = diagonal.estimate_diagonal(g, p, seed=3)
+    d1 = diagonal.estimate_diagonal(g, p, seed=3, mesh=mesh)
+    np.testing.assert_array_equal(d0, d1)
+
+
+# ----------------------------------------------------------------------
+# compile-count gates: the preprocessing hot path is shape-stable
+# ----------------------------------------------------------------------
+def test_diagonal_compile_count_stable_across_phase2_and_churn():
+    """Alg 4's data-dependent phase-2 widths and update_index's ragged
+    re-estimation subsets must reuse the bucketed walk programs: after
+    ``prime_chunk_buckets`` (the preprocessing warmup), builds and
+    churn batches compile zero new walk kernels -- the recompile-storm
+    regression gate. Covers both storm sources: unpadded walk batches
+    and the raw (m,) edge-array shape changing with every delta."""
+    import jax.random as jr
+    g = generators.barabasi_albert(200, 3, seed=4, directed=False)
+    idx = build.build_index(g, eps=0.15, seed=0, stale_frac=0.5)
+    p = idx.plan
+    d0 = idx.d
+    walks.prime_chunk_buckets(walks.DeviceGraph.from_graph(g),
+                              jr.PRNGKey(0), p.sqrt_c, p.t_max)
+    primed = walks.compile_count()
+    # fresh seeds reshuffle every phase-2 width; subsets are ragged
+    for seed in (1, 2, 3):
+        diagonal.estimate_diagonal(g, p, seed=seed)
+        nodes = np.sort(np.random.default_rng(seed).choice(
+            g.n, 17 + 11 * seed, replace=False))
+        diagonal.estimate_diagonal(g, p, seed=seed, nodes=nodes,
+                                   d_init=d0)
+    # edge churn: m moves but stays inside the edge capacity bucket
+    gg = g
+    for i in range(3):
+        delta = update.random_delta(gg, n_add=6, n_del=6, seed=30 + i)
+        rep = build.update_index(idx, gg, delta, seed=50 + i)
+        gg = rep.graph
+    assert walks.compile_count() == primed
+
+
+def test_hp_build_single_compiled_program():
+    """Every build block (last one included) dispatches at the padded
+    (n, block) shape: one propagation program per build, and repeated
+    builds at the same shape reuse it."""
+    g = generators.barabasi_albert(100, 3, seed=5, directed=False)
+    p = theory.plan(eps=0.15, n=g.n)
+    hp_index.build_hp_table(g, p.theta, p.sqrt_c, p.l_max, block=64)
+    primed = int(hp_index._propagate_scan._cache_size())
+    hp_index.build_hp_table(g, p.theta, p.sqrt_c, p.l_max, block=64)
+    assert int(hp_index._propagate_scan._cache_size()) == primed

@@ -30,6 +30,47 @@ def test_alg1_within_eps_d(small_graph):
     assert np.abs(d_est - d_true).max() <= p.eps_d
 
 
+def test_phase2_pairs_vec_matches_scalar():
+    """The vectorized Alg-4 budget must be bit-identical to the scalar
+    formula it replaced (same expression tree, same float64 math)."""
+    import math
+    from repro.core import theory
+    eps_d, delta_d, c = 0.005, 1e-8, 0.6
+    mus = np.concatenate([np.linspace(0.0, 1.0, 101),
+                          10.0 ** np.linspace(-6, 0, 25)])
+    got = theory.phase2_pairs_vec(mus, eps_d, delta_d, c)
+    eps_star = eps_d / c
+    for mu, n_vec in zip(mus.tolist(), got.tolist()):
+        mu_star = mu + math.sqrt(mu * eps_star)
+        want = int(math.ceil((2 * mu_star + (2.0 / 3.0) * eps_star)
+                             / (eps_star ** 2) * math.log(4.0 / delta_d)))
+        assert n_vec == want, (mu, n_vec, want)
+    assert theory.phase2_pairs(0.25, eps_d, delta_d, c) == \
+        int(theory.phase2_pairs_vec(np.float64(0.25), eps_d, delta_d, c))
+
+
+def test_subset_estimation_deterministic_and_targeted(small_graph):
+    """estimate_diagonal(nodes=...) with a fixed seed is reproducible
+    and must not perturb d_init outside ``nodes`` -- the contract
+    update_index's d-repair (and its staleness accounting) relies on."""
+    from repro.core import diagonal, theory
+    g = small_graph
+    p = theory.plan(eps=0.15, n=g.n)
+    rng = np.random.default_rng(7)
+    d_init = (1.0 - 0.6 * rng.uniform(0.0, 1.0, g.n)).astype(np.float32)
+    nodes = np.sort(rng.choice(g.n, 23, replace=False))
+    d1 = diagonal.estimate_diagonal(g, p, seed=5, nodes=nodes,
+                                    d_init=d_init)
+    d2 = diagonal.estimate_diagonal(g, p, seed=5, nodes=nodes,
+                                    d_init=d_init)
+    np.testing.assert_array_equal(d1, d2)
+    outside = np.setdiff1d(np.arange(g.n), nodes)
+    np.testing.assert_array_equal(d1[outside], d_init[outside])
+    # the subset really was re-estimated, not copied
+    assert np.abs(d1[nodes].astype(np.float64)
+                  - d_init[nodes]).max() > 1e-6
+
+
 def test_d_range(small_graph):
     from repro.core import diagonal
     d = diagonal.exact_diagonal(small_graph, 0.6)
