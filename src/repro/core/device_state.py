@@ -1,0 +1,113 @@
+"""Process-wide cache of device-resident arrays for the one-shot
+query APIs.
+
+``topk_device``, ``single_source_device`` and ``SlingIndex.
+query_pairs`` are convenience entry points that take host objects per
+call; they used to re-upload the entire packed index (keys/vals/d and
+the edge arrays) on *every* call, so their latency measured H2D
+transfer, not query compute -- and benchmarks built on them reported
+transfer numbers. This module gives them a warm path: uploads are
+cached per (index, graph) identity and invalidated by a cheap
+fingerprint (epoch + array object identities), so repeated calls hit
+device-resident state exactly like :class:`~repro.serve.QueryEngine`
+does with its capacity-bucketed arrays.
+
+The fingerprint relies on the repo's mutation discipline: every
+in-place index mutation goes through ``core/update.py``, which bumps
+``idx.epoch``; anything else rebinds the arrays (new object identity).
+Entries are evicted by weakref finalizers when the index or graph
+dies, plus an LRU cap as a backstop against id reuse. Long-lived
+serving should still prefer ``QueryEngine`` -- it adds capacity-bucket
+shape stability across hot swaps, which a per-object cache cannot.
+"""
+from __future__ import annotations
+
+import dataclasses
+import weakref
+from collections import OrderedDict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph import csr
+
+_MAX_ENTRIES = 8
+_cache: "OrderedDict[tuple, tuple]" = OrderedDict()
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexArrays:
+    """Device-resident packed index (the pair-join working set)."""
+    keys: object   # (n, width) int32
+    vals: object   # (n, width) float32
+    d: object      # (n,) float32
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingArrays(IndexArrays):
+    """IndexArrays + the push working set (edges, weights, tau)."""
+    edge_src: object
+    edge_dst: object
+    w: object
+    tau: float
+
+
+def _index_fingerprint(idx) -> tuple:
+    return (idx.epoch, id(idx.plan), id(idx.hp.keys), id(idx.hp.vals),
+            id(idx.d), idx.hp.width)
+
+
+def _graph_fingerprint(g: csr.Graph) -> tuple:
+    return (id(g.edge_src), id(g.edge_dst), g.m)
+
+
+def _get(key: tuple, fingerprint: tuple, build, owners) -> object:
+    hit = _cache.get(key)
+    if hit is not None and hit[0] == fingerprint:
+        _cache.move_to_end(key)
+        return hit[1]
+    value = build()
+    _cache[key] = (fingerprint, value)
+    _cache.move_to_end(key)
+    for obj in owners:
+        try:
+            weakref.finalize(obj, _cache.pop, key, None)
+        except TypeError:
+            pass  # not weakref-able: the LRU cap still bounds the cache
+    while len(_cache) > _MAX_ENTRIES:
+        _cache.popitem(last=False)
+    return value
+
+
+def index_arrays(idx) -> IndexArrays:
+    """Cached upload of the packed index (keys/vals/d)."""
+    def build():
+        return IndexArrays(
+            keys=jnp.asarray(idx.hp.keys), vals=jnp.asarray(idx.hp.vals),
+            d=jnp.asarray(idx.d.astype(np.float32)))
+
+    return _get(("index", id(idx)), _index_fingerprint(idx), build, (idx,))
+
+
+def serving_arrays(idx, g: csr.Graph) -> ServingArrays:
+    """Cached upload of the full single-source/top-k working set."""
+    def build():
+        from repro.core.single_source import prune_tau
+        ia = index_arrays(idx)
+        return ServingArrays(
+            keys=ia.keys, vals=ia.vals, d=ia.d,
+            edge_src=jnp.asarray(g.edge_src),
+            edge_dst=jnp.asarray(g.edge_dst),
+            w=jnp.asarray(csr.normalized_pull_weights(g, idx.plan.sqrt_c)),
+            tau=prune_tau(idx.plan))
+
+    fp = _index_fingerprint(idx) + _graph_fingerprint(g)
+    return _get(("serving", id(idx), id(g)), fp, build, (idx, g))
+
+
+def cache_clear() -> None:
+    _cache.clear()
+
+
+def cache_len() -> int:
+    return len(_cache)

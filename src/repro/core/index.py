@@ -93,8 +93,12 @@ class SlingIndex:
     # batched device single-pair queries
     # ------------------------------------------------------------------
     def device_arrays(self):
-        return (jnp.asarray(self.hp.keys), jnp.asarray(self.hp.vals),
-                jnp.asarray(self.d.astype(np.float32)))
+        """Device copies of (keys, vals, d), warm-cached per index
+        epoch (core/device_state.py) so repeated one-shot queries skip
+        the re-upload."""
+        from repro.core import device_state
+        ia = device_state.index_arrays(self)
+        return ia.keys, ia.vals, ia.d
 
     def query_pairs(self, us: np.ndarray, vs: np.ndarray) -> np.ndarray:
         keys, vals, d = self.device_arrays()

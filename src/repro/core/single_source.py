@@ -173,13 +173,14 @@ def batched_single_source(keys, vals, d, edge_src, edge_dst, w,
 
 
 def single_source_device(idx, g: csr.Graph, us: np.ndarray) -> np.ndarray:
-    keys = jnp.asarray(idx.hp.keys)
-    vals = jnp.asarray(idx.hp.vals)
-    d = jnp.asarray(idx.d.astype(np.float32))
-    w = jnp.asarray(csr.normalized_pull_weights(g, idx.plan.sqrt_c))
+    """One-shot batched device path. The index/graph upload is warm
+    after the first call (core/device_state.py), so repeated calls
+    measure query compute, not H2D transfer."""
+    from repro.core import device_state
+    st = device_state.serving_arrays(idx, g)
     out = batched_single_source(
-        keys, vals, d, jnp.asarray(g.edge_src), jnp.asarray(g.edge_dst),
-        w, jnp.asarray(us, jnp.int32), jnp.float32(prune_tau(idx.plan)),
+        st.keys, st.vals, st.d, st.edge_src, st.edge_dst, st.w,
+        jnp.asarray(us, jnp.int32), jnp.float32(st.tau),
         idx.n, idx.plan.l_max)
     return np.asarray(out)
 

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.single_source import (batched_single_source, prune_tau,
+from repro.core.single_source import (batched_single_source,
                                       single_source_paper)
 from repro.graph import csr
 
@@ -48,15 +48,22 @@ def batched_topk(keys, vals, d, edge_src, edge_dst, w, us, tau,
 
 def topk_device(idx, g: csr.Graph, us: np.ndarray,
                 k: int) -> tuple[np.ndarray, np.ndarray]:
-    """Batched device top-k; k is clamped to n."""
+    """Batched device top-k; k is clamped to n.
+
+    The index/graph upload is warm after the first call
+    (core/device_state.py): repeated one-shot calls hit
+    device-resident state instead of re-uploading the packed table and
+    edge arrays, so benchmark numbers measure the fused
+    push-plus-top_k, not H2D transfer. A long-lived serving loop
+    should still prefer :class:`~repro.serve.QueryEngine` (adds
+    batching, caching, and hot-swap shape stability).
+    """
+    from repro.core import device_state
     k = min(int(k), idx.n)
-    keys = jnp.asarray(idx.hp.keys)
-    vals = jnp.asarray(idx.hp.vals)
-    d = jnp.asarray(idx.d.astype(np.float32))
-    w = jnp.asarray(csr.normalized_pull_weights(g, idx.plan.sqrt_c))
+    st = device_state.serving_arrays(idx, g)
     top_v, top_i = batched_topk(
-        keys, vals, d, jnp.asarray(g.edge_src), jnp.asarray(g.edge_dst),
-        w, jnp.asarray(us, jnp.int32), jnp.float32(prune_tau(idx.plan)),
+        st.keys, st.vals, st.d, st.edge_src, st.edge_dst, st.w,
+        jnp.asarray(us, jnp.int32), jnp.float32(st.tau),
         idx.n, idx.plan.l_max, k)
     return np.asarray(top_v), np.asarray(top_i)
 

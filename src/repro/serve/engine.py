@@ -126,8 +126,13 @@ class QueryEngine:
         self._pair_backend = backend
         self._cache = _LRU(self.cfg.cache_size)
         self._shapes: set = set()
+        # warmup dispatches prime shapes but are not traffic: they
+        # count under warmup_* so stats()["batches"]/["pad_slots"]
+        # measure only real requests
         self._counts = {"pair": 0, "source": 0, "topk": 0,
-                        "batches": 0, "pad_slots": 0}
+                        "batches": 0, "pad_slots": 0,
+                        "warmup_batches": 0, "warmup_pad_slots": 0}
+        self._in_warmup = False
         self._swaps = {"swaps": 0, "last_swap_ms": 0.0,
                        "swap_recompiles": 0, "invalidated": 0}
         self._width_cap = self._bucket(index.hp.width)
@@ -322,13 +327,18 @@ class QueryEngine:
         return min(min(fits), self.index.n) if fits else self.index.n
 
     def _record(self, kind: str, shape) -> None:
-        self._counts["batches"] += 1
+        key = "warmup_batches" if self._in_warmup else "batches"
+        self._counts[key] += 1
         self._shapes.add((kind,) + tuple(shape))
+
+    def _count_pad(self, pad: int) -> None:
+        key = "warmup_pad_slots" if self._in_warmup else "pad_slots"
+        self._counts[key] += pad
 
     def _dispatch_pairs(self, us: np.ndarray, vs: np.ndarray) -> np.ndarray:
         B = self.cfg.pair_batch
         pad = (-len(us)) % B
-        self._counts["pad_slots"] += pad
+        self._count_pad(pad)
         us_p = np.concatenate([us, np.zeros(pad, np.int32)]).astype(np.int32)
         vs_p = np.concatenate([vs, np.zeros(pad, np.int32)]).astype(np.int32)
         out = np.empty(len(us_p), np.float32)
@@ -353,7 +363,7 @@ class QueryEngine:
     def _dispatch_sources(self, us: np.ndarray) -> np.ndarray:
         B = self.cfg.source_batch
         pad = (-len(us)) % B
-        self._counts["pad_slots"] += pad
+        self._count_pad(pad)
         us_p = np.concatenate([us, np.full(pad, us[0] if len(us) else 0,
                                            np.int32)]).astype(np.int32)
         out = np.empty((len(us_p), self.index.n), np.float32)
@@ -374,7 +384,7 @@ class QueryEngine:
     def _dispatch_topk(self, us: np.ndarray, bucket: int):
         B = self.cfg.source_batch
         pad = (-len(us)) % B
-        self._counts["pad_slots"] += pad
+        self._count_pad(pad)
         us_p = np.concatenate([us, np.full(pad, us[0] if len(us) else 0,
                                            np.int32)]).astype(np.int32)
         sv = np.empty((len(us_p), bucket), np.float32)
@@ -479,23 +489,31 @@ class QueryEngine:
     def warmup(self) -> dict:
         """Compile every fixed shape before traffic arrives.
 
-        Returns {path: seconds}. Results are not cached, so warmup never
-        pollutes the LRU."""
+        Returns {path: seconds}. Results are not cached, so warmup
+        never pollutes the LRU; dispatch accounting lands in
+        ``stats()["warmup_batches"]``/``["warmup_pad_slots"]``, so a
+        warmed engine starts traffic with zero ``batches``/
+        ``pad_slots`` (one full topk sweep per bucket used to be
+        indistinguishable from real traffic)."""
         out = {}
-        z_pair = np.zeros(self.cfg.pair_batch, np.int32)
-        t0 = time.perf_counter()
-        self._dispatch_pairs(z_pair, z_pair)
-        out["pair"] = time.perf_counter() - t0
-        z_src = np.zeros(self.cfg.source_batch, np.int32)
-        t0 = time.perf_counter()
-        self._dispatch_sources(z_src)
-        out["source"] = time.perf_counter() - t0
-        buckets = {self._k_bucket(b) for b in self.cfg.k_buckets}
-        buckets.add(self.index.n)   # the k > max(buckets) fallback
-        for b in sorted(buckets):
+        self._in_warmup = True
+        try:
+            z_pair = np.zeros(self.cfg.pair_batch, np.int32)
             t0 = time.perf_counter()
-            self._dispatch_topk(z_src, b)
-            out[f"topk@{b}"] = time.perf_counter() - t0
+            self._dispatch_pairs(z_pair, z_pair)
+            out["pair"] = time.perf_counter() - t0
+            z_src = np.zeros(self.cfg.source_batch, np.int32)
+            t0 = time.perf_counter()
+            self._dispatch_sources(z_src)
+            out["source"] = time.perf_counter() - t0
+            buckets = {self._k_bucket(b) for b in self.cfg.k_buckets}
+            buckets.add(self.index.n)   # the k > max(buckets) fallback
+            for b in sorted(buckets):
+                t0 = time.perf_counter()
+                self._dispatch_topk(z_src, b)
+                out[f"topk@{b}"] = time.perf_counter() - t0
+        finally:
+            self._in_warmup = False
         return out
 
     def stats(self) -> dict:

@@ -28,6 +28,26 @@ def test_compile_once_across_request_sizes(engine):
     assert after == before, after - before
 
 
+def test_warmup_does_not_pollute_traffic_stats(engine):
+    """Bugfix: warmup() used to call the dispatchers directly, so a
+    warmed engine started life with phantom batches/pad_slots (one
+    full topk sweep per bucket). Warmup accounting is separate."""
+    engine.warmup()
+    st = engine.stats()
+    assert st["batches"] == 0 and st["pad_slots"] == 0
+    assert st["pair"] == 0 and st["source"] == 0 and st["topk"] == 0
+    assert st["warmup_batches"] > 0 and st["warmup_pad_slots"] == 0
+    warm = st["warmup_batches"]
+    # real traffic counts normally and never retro-inflates warmup
+    engine.single_source([1])
+    engine.pairs([2, 3], [4, 5])        # 2 pairs pad to pair_batch=16
+    st2 = engine.stats()
+    assert st2["batches"] == 2
+    assert st2["pad_slots"] == (engine.cfg.source_batch - 1) + 14
+    assert st2["warmup_batches"] == warm
+    assert st2["warmup_pad_slots"] == 0
+
+
 def test_padded_requests_match_unpadded(engine, small_graph, sling_index):
     """Odd-size (padded) requests return the same scores as the raw
     device path on the exact batch."""

@@ -111,6 +111,26 @@ def test_topk_device_standalone(er_case):
         _check_topk(sv[i], si[i], single_source_paper(idx, g, u), 5)
 
 
+def test_oneshot_upload_cache_reuses_and_invalidates(er_case):
+    """One-shot APIs warm-cache the device upload (core/device_state)
+    but must never serve arrays from a previous index state."""
+    from repro.core import device_state, update
+    g, _ = er_case
+    idx = build.build_index(g, eps=0.1, exact_d=True, seed=0)
+    st1 = device_state.serving_arrays(idx, g)
+    st2 = device_state.serving_arrays(idx, g)
+    assert st1 is st2          # warm: same uploaded arrays, no H2D
+    topk_device(idx, g, np.array([3], np.int32), 5)   # runs on st1
+    # an in-place repair bumps the epoch: the same (idx, g) key must
+    # miss on its stale fingerprint instead of serving pre-repair rows
+    delta = update.random_delta(g, n_add=6, n_del=6, seed=1)
+    rep = build.update_index(idx, g, delta, exact_d=True)
+    assert device_state.serving_arrays(idx, g) is not st1
+    sv_b, si_b = topk_device(idx, rep.graph, np.array([3], np.int32), 5)
+    naive = single_source_paper(idx, rep.graph, 3)
+    _check_topk(sv_b[0], si_b[0], naive, 5)
+
+
 def test_engine_roundtrip_save_load(tmp_path, small_graph, sling_index):
     """Engine over a save/load round-tripped index answers identically."""
     path = str(tmp_path / "idx.npz")
