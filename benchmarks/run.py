@@ -22,7 +22,7 @@ def main() -> None:
                     help="CI mode: minimal sizes + n=500 serving guard")
     ap.add_argument("--only", default=None,
                     help="comma list: pair,source,preprocess,space,"
-                         "accuracy,topk,serve,update,roofline")
+                         "accuracy,topk,serve,update,join,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -78,6 +78,19 @@ def main() -> None:
             bench_update.run(n=1500)
         else:
             bench_update.run(n=3000)              # >= 5x @ 1% churn gate
+    if want("join"):
+        from benchmarks import bench_join
+        if args.smoke:
+            # small sweep: recompile gate asserted, 3x gate is only
+            # calibrated at n >= 2000; plus the 2-shard mesh sweep
+            # equivalence check (subprocess: forced host devices)
+            bench_join.run(n=300, n_sources=64, tile=32)
+            bench_join.mesh_subprocess(mesh=2, n=300)
+        elif args.fast:
+            bench_join.run(n=1000, n_sources=128)
+        else:
+            bench_join.run(n=2000)               # >= 3x sweep gate
+            bench_join.mesh_subprocess(mesh=2, n=1000)
     if want("roofline") and not args.smoke:
         from benchmarks import roofline
         roofline.run()

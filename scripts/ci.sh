@@ -21,6 +21,19 @@ echo "== sharded serving suite (forced 4 host devices) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=4 \
     python -m pytest -x -q -m mesh
 
+echo "== bulk-join suite (forced 4 host devices) =="
+XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    python -m pytest -x -q -m join
+
+echo "== examples smoke (API drift gate) =="
+# the examples are the public face of the API: run them end to end so
+# churn in e.g. EngineConfig/JoinConfig signatures fails CI instead of
+# rotting in the docs
+PYTHONPATH=src python examples/quickstart.py > /dev/null
+PYTHONPATH=src python examples/sling_serve.py --n 400 > /dev/null
+PYTHONPATH=src python examples/train_gnn_simrank.py --n 300 --steps 40 \
+    > /dev/null
+
 echo "== smoke benchmark (500-node serving guard) =="
 PYTHONPATH=src python -m benchmarks.run --smoke
 echo "CI OK"

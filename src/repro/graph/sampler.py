@@ -5,9 +5,14 @@ fanout[0] in-neighbors, then fanout[1] of theirs, etc. Emits a padded
 fixed-shape subgraph (the minibatch_lg shape cell's contract): node
 table, edge (src, dst) pairs in *local* subgraph ids, masks.
 
-Optional ``weights="simrank"``: neighbors are sampled proportionally
-to their SLING single-source SimRank score from the seed -- the paper's
-technique as a sampling prior (DESIGN.md section 5).
+SimRank-weighted sampling (DESIGN.md section 5): neighbors are sampled
+proportionally to their SimRank similarity to the node being expanded.
+Pass ``knn=`` a materialized :class:`~repro.join.KnnGraph` (built once
+by the bulk join, :mod:`repro.join`) -- the per-node weights are O(k)
+host lookups into the artifact's CSR rows. The legacy ``sim_index=``
+path (a live SlingIndex) re-runs a full single-source push per visited
+node -- O(n) work and a device dispatch *per node per batch* for what
+is a static feature -- and remains only as a reference; prefer ``knn``.
 """
 from __future__ import annotations
 
@@ -28,9 +33,26 @@ class SampledSubgraph:
     seed_index: np.ndarray  # (B,) local ids of the seed nodes
 
 
+_SIM_FLOOR = 1e-9   # keeps unscored neighbors reachable (p > 0)
+
+
+def _knn_weights(knn, v: int, nbrs: np.ndarray) -> np.ndarray:
+    """Sampling weights for ``nbrs`` of ``v`` from a materialized
+    KnnGraph row: the artifact score where stored, the floor elsewhere
+    (a neighbor outside v's top-k scored below every stored entry; the
+    floor keeps it samplable without a device dispatch)."""
+    w = np.full(len(nbrs), _SIM_FLOOR)
+    if knn.has(v):
+        ids, scores = knn.neighbors(v)
+        row = dict(zip(ids.tolist(), scores.tolist()))
+        for j, u in enumerate(nbrs.tolist()):
+            w[j] += row.get(u, 0.0)
+    return w
+
+
 def sample_subgraph(g: csr.Graph, seeds: np.ndarray, fanout, rng,
                     n_pad: int, m_pad: int,
-                    sim_index=None) -> SampledSubgraph:
+                    sim_index=None, knn=None) -> SampledSubgraph:
     local: dict[int, int] = {}
     node_ids: list[int] = []
 
@@ -51,11 +73,15 @@ def sample_subgraph(g: csr.Graph, seeds: np.ndarray, fanout, rng,
             if len(nbrs) == 0:
                 continue
             k = min(f, len(nbrs))
-            if sim_index is not None:
+            if knn is not None:
+                w = _knn_weights(knn, v, np.asarray(nbrs))
+                picks = rng.choice(nbrs, size=k, replace=False,
+                                   p=w / w.sum())
+            elif sim_index is not None:
                 from repro.core.single_source import single_source_horner
-                w = single_source_horner(sim_index, g, v)[nbrs] + 1e-9
-                p = w / w.sum()
-                picks = rng.choice(nbrs, size=k, replace=False, p=p)
+                w = single_source_horner(sim_index, g, v)[nbrs] + _SIM_FLOOR
+                picks = rng.choice(nbrs, size=k, replace=False,
+                                   p=w / w.sum())
             else:
                 picks = rng.choice(nbrs, size=k, replace=False)
             for u in picks:

@@ -1,0 +1,14 @@
+"""Bulk similarity-join subsystem: device-streamed SimRank kNN-graph
+construction (DESIGN.md section 10).
+
+The offline counterpart of :mod:`repro.serve`: sweep a source set
+through the Horner-push slab kernel in fixed-shape tiles, reduce each
+tile with a device-resident top-k, and materialize a versioned
+:class:`KnnGraph` artifact that feature consumers (graph/sampler.py,
+examples/train_gnn_simrank.py) and ``QueryEngine.knn`` read instead of
+issuing per-node queries.
+"""
+from repro.join.artifact import (CKPT_FORMAT_VERSION,  # noqa: F401
+                                 KNN_FORMAT_VERSION, KnnGraph)
+from repro.join.sweep import (JoinConfig, compile_count,  # noqa: F401
+                              run_join)

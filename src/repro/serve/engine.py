@@ -27,6 +27,10 @@ a traffic-serving system needs (README section "Serving"):
     (core/shard_query.py, DESIGN.md section 8); batching, k-bucketing,
     caching and hot-swap semantics are unchanged, and swaps re-use the
     compiled fan-out programs via the same capacity-bucket contract;
+  * **materialized kNN lookups** -- ``attach_knn()`` installs a bulk
+    join artifact (:mod:`repro.join`, DESIGN.md section 10) and
+    ``knn(u)`` answers "k most similar to u" as an O(1) host lookup
+    with an epoch staleness check against hot-swapped indices;
   * **epoch-based hot-swap** -- ``swap_index()`` installs an
     incrementally repaired index (core/update.py) behind the same
     compiled executables: device arrays live in capacity buckets
@@ -60,20 +64,27 @@ from repro.graph import csr
 
 
 class _LRU:
-    """Minimal LRU map with hit/miss accounting."""
+    """Minimal LRU map with total and per-query-kind hit/miss
+    accounting (keys lead with the kind tag: "pair" / "src" /
+    "topk")."""
 
     def __init__(self, cap: int):
         self.cap = cap
         self._d: OrderedDict = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.hits_by_kind: dict[str, int] = {}
+        self.misses_by_kind: dict[str, int] = {}
 
     def get(self, key):
+        kind = key[0]
         if self.cap > 0 and key in self._d:
             self._d.move_to_end(key)
             self.hits += 1
+            self.hits_by_kind[kind] = self.hits_by_kind.get(kind, 0) + 1
             return self._d[key]
         self.misses += 1
+        self.misses_by_kind[kind] = self.misses_by_kind.get(kind, 0) + 1
         return None
 
     def put(self, key, value) -> None:
@@ -129,9 +140,11 @@ class QueryEngine:
         # warmup dispatches prime shapes but are not traffic: they
         # count under warmup_* so stats()["batches"]/["pad_slots"]
         # measure only real requests
-        self._counts = {"pair": 0, "source": 0, "topk": 0,
+        self._counts = {"pair": 0, "source": 0, "topk": 0, "knn": 0,
+                        "knn_stale_rejects": 0,
                         "batches": 0, "pad_slots": 0,
                         "warmup_batches": 0, "warmup_pad_slots": 0}
+        self._knn = None          # attached KnnGraph artifact (if any)
         self._in_warmup = False
         self._swaps = {"swaps": 0, "last_swap_ms": 0.0,
                        "swap_recompiles": 0, "invalidated": 0}
@@ -486,6 +499,57 @@ class QueryEngine:
         return sv, si
 
     # ------------------------------------------------------------------
+    # materialized kNN lookups (repro.join, DESIGN.md section 10)
+    # ------------------------------------------------------------------
+    def attach_knn(self, knn, allow_stale: bool = False) -> None:
+        """Attach a materialized :class:`~repro.join.KnnGraph` so
+        ``knn(u)`` answers from the artifact instead of the device.
+
+        The artifact must cover this engine's graph (same n) and, unless
+        ``allow_stale``, match the served index's epoch -- an artifact
+        swept before a hot-swap holds pre-swap scores.
+        """
+        if knn.n != self.index.n:
+            raise ValueError(f"KnnGraph covers n={knn.n} nodes, engine "
+                             f"serves n={self.index.n}")
+        if not allow_stale and knn.epoch != self.index.epoch:
+            raise ValueError(
+                f"KnnGraph was swept at index epoch {knn.epoch}, engine "
+                f"serves epoch {self.index.epoch}; re-run the join "
+                "(repro.join.run_join) or pass allow_stale=True")
+        self._knn = knn
+
+    def knn(self, u: int, k: int | None = None,
+            allow_stale: bool = False) -> tuple[np.ndarray, np.ndarray]:
+        """(ids, scores) of u's materialized nearest neighbors.
+
+        Served from the attached :class:`~repro.join.KnnGraph` -- an
+        O(1) host lookup, no device dispatch. **Staleness check**: a
+        ``swap_index`` bumps the served epoch past the artifact's, after
+        which lookups raise (counted in
+        ``stats()["knn_stale_rejects"]``) until a fresh join is
+        attached; ``allow_stale=True`` serves the pre-swap scores
+        explicitly. ``k`` truncates the stored row (scores are stored
+        descending).
+        """
+        self._counts["knn"] += 1
+        if self._knn is None:
+            raise RuntimeError("no KnnGraph attached; run the bulk join "
+                               "(repro.join.run_join) and attach_knn() "
+                               "its artifact")
+        if not allow_stale and self._knn.epoch != self.index.epoch:
+            self._counts["knn_stale_rejects"] += 1
+            raise RuntimeError(
+                f"attached KnnGraph is stale: swept at epoch "
+                f"{self._knn.epoch}, index now at epoch "
+                f"{self.index.epoch} (hot-swap); re-run the join or "
+                "pass allow_stale=True")
+        ids, scores = self._knn.neighbors(int(u))
+        if k is not None:
+            ids, scores = ids[:int(k)], scores[:int(k)]
+        return ids, scores
+
+    # ------------------------------------------------------------------
     def warmup(self) -> dict:
         """Compile every fixed shape before traffic arrives.
 
@@ -524,7 +588,10 @@ class QueryEngine:
             "stale": self.index.stale,
             "cache_hits": self._cache.hits,
             "cache_misses": self._cache.misses,
+            "cache_hits_by_kind": dict(self._cache.hits_by_kind),
+            "cache_misses_by_kind": dict(self._cache.misses_by_kind),
             "cache_entries": len(self._cache),
+            "knn_attached": self._knn is not None,
             "unique_shapes": sorted(self._shapes),
             "pair_backend": self._pair_backend,
             "mesh_shards": (self._sharded.n_shards

@@ -92,6 +92,24 @@ def test_lru_cache_hits_and_consistency(engine):
     assert engine.stats()["batches"] == b0
 
 
+def test_cache_counters_split_by_query_kind(engine):
+    """stats() reports hit/miss per query kind: the aggregate LRU
+    numbers could not distinguish a pair-path cache problem from a
+    top-k one (the LRU was observable only by total size)."""
+    engine.pairs([1], [2])                 # miss
+    engine.pairs([2], [1])                 # hit (canonicalized pair)
+    engine.single_source([3])              # miss
+    engine.single_source([3])              # hit
+    engine.topk([4], 5)                    # miss
+    engine.topk([4], 5)                    # hit
+    engine.topk([4], 7)                    # same bucket: hit
+    st = engine.stats()
+    assert st["cache_hits_by_kind"] == {"pair": 1, "src": 1, "topk": 2}
+    assert st["cache_misses_by_kind"] == {"pair": 1, "src": 1,
+                                          "topk": 1}
+    assert st["cache_hits"] == 4 and st["cache_misses"] == 3
+
+
 def test_cache_eviction_bounded(small_graph, sling_index):
     eng = QueryEngine(sling_index, small_graph,
                       EngineConfig(source_batch=4, cache_size=8))

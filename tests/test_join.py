@@ -1,0 +1,391 @@
+"""Bulk similarity-join subsystem (repro.join): exact-oracle
+differential over the graph zoo and c sweep, artifact format rules,
+checkpoint/resume bit-stability, mesh equivalence, and the engine's
+materialized-knn lookup path.
+
+The whole file carries the ``join`` marker (scripts/ci.sh re-runs it
+under forced 4 host devices so the mesh cases execute); mesh-size > 1
+cases additionally carry ``mesh`` and skip on a single device.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+import oracle
+
+from repro.core import build, shard_query, update
+from repro.graph import sampler
+from repro.join import (CKPT_FORMAT_VERSION, JoinConfig, KNN_FORMAT_VERSION,
+                        KnnGraph, compile_count, run_join)
+from repro.serve import EngineConfig, QueryEngine
+
+pytestmark = pytest.mark.join
+
+CASES = sorted(oracle.cases())
+SETTINGS = [(0.4, 0.15), (0.6, 0.1), (0.8, 0.2)]
+_cache: dict = {}
+
+
+def _cell(name: str, c: float, eps: float):
+    key = (name, c, eps)
+    if key not in _cache:
+        g = oracle.cases()[name]
+        idx = build.build_index(g, eps=eps, c=c, exact_d=True, seed=0)
+        _cache[key] = (g, idx, oracle.exact_simrank(g, c))
+    return _cache[key]
+
+
+def _check_row(ids, sc, truth, k, tol):
+    """Tolerance-aware top-k row check (tests/test_topk.py contract):
+    scores descending, close to the exact sorted top-k, every returned
+    node within tol of the exact k-th best (ties may swap ids)."""
+    order = np.argsort(-truth, kind="stable")[:k]
+    assert np.all(np.diff(sc) <= 1e-6)
+    np.testing.assert_allclose(sc, truth[order], atol=tol)
+    kth = truth[order[-1]]
+    assert np.all(truth[ids] >= kth - tol), (ids, truth[ids], kth)
+    np.testing.assert_allclose(sc, truth[ids], atol=tol)
+
+
+# ----------------------------------------------------------------------
+# exact-oracle differential: all-sources top-k over the zoo x c sweep
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("c,eps", SETTINGS)
+@pytest.mark.parametrize("name", CASES)
+def test_join_topk_matches_exact_oracle(name, c, eps):
+    g, idx, S = _cell(name, c, eps)
+    tol = oracle.tolerance(idx.plan)
+    k = 8
+    knn = run_join(idx, g, config=JoinConfig(k=k, tile=16))
+    assert knn.sources.tolist() == list(range(g.n))
+    assert knn.epoch == idx.epoch and knn.eps == idx.plan.eps
+    for u in range(g.n):
+        ids, sc = knn.neighbors(u)
+        assert len(ids) == min(k, g.n)
+        _check_row(ids, sc, S[u], min(k, g.n), tol)
+
+
+@pytest.mark.parametrize("name", ["er", "sinks"])
+def test_join_threshold_matches_exact_oracle(name):
+    """sim >= tau variant: with cap=n the row set must bracket the
+    exact threshold set (required above tau+tol, allowed above
+    tau-tol) and nothing is flagged truncated."""
+    c, eps = 0.6, 0.1
+    g, idx, S = _cell(name, c, eps)
+    tol = oracle.tolerance(idx.plan)
+    tau = 0.08
+    knn = run_join(idx, g,
+                   config=JoinConfig(tau=tau, cap=g.n, tile=16))
+    assert knn.mode == "threshold" and not knn.truncated.any()
+    for u in range(g.n):
+        ids, sc = knn.neighbors(u)
+        assert np.all(sc >= tau)
+        np.testing.assert_allclose(sc, S[u][ids], atol=tol)
+        got = set(ids.tolist())
+        must = set(np.flatnonzero(S[u] >= tau + tol).tolist())
+        may = set(np.flatnonzero(S[u] >= tau - tol).tolist())
+        assert must <= got <= may, (u, must - got, got - may)
+
+
+def test_threshold_truncation_is_flagged(small_graph, sling_index):
+    """A cap smaller than the match count must flag the row, never
+    silently drop matches: flagged rows are full (cap entries, all
+    >= tau) and re-running with a bigger cap resolves them."""
+    tau = 0.0  # every node matches (scores are >= 0): cap=4 truncates
+    small = run_join(sling_index, small_graph,
+                     config=JoinConfig(tau=tau, cap=4, tile=32))
+    assert small.truncated.all()
+    assert np.all(np.diff(small.indptr) == 4)
+    big = run_join(sling_index, small_graph,
+                   config=JoinConfig(tau=0.2, cap=small_graph.n, tile=32))
+    assert not big.truncated.any()
+
+
+# ----------------------------------------------------------------------
+# artifact format (INDEX_FORMAT.md "KnnGraph artifact")
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def knn150(small_graph, sling_index):
+    return run_join(sling_index, small_graph,
+                    config=JoinConfig(k=8, tile=32))
+
+
+def test_artifact_roundtrip(tmp_path, knn150):
+    path = str(tmp_path / "knn.npz")
+    knn150.save(path)
+    back = KnnGraph.load(path)
+    np.testing.assert_array_equal(back.sources, knn150.sources)
+    np.testing.assert_array_equal(back.indptr, knn150.indptr)
+    np.testing.assert_array_equal(back.nbr_ids, knn150.nbr_ids)
+    np.testing.assert_array_equal(back.nbr_scores, knn150.nbr_scores)
+    assert (back.epoch, back.eps, back.mode) == \
+        (knn150.epoch, knn150.eps, knn150.mode)
+    ids_a, sc_a = back.neighbors(7)
+    ids_b, sc_b = knn150.neighbors(7)
+    np.testing.assert_array_equal(ids_a, ids_b)
+    np.testing.assert_array_equal(sc_a, sc_b)
+
+
+def _rewrite_meta(src: str, dst: str, _arrays=None, **changes) -> None:
+    z = np.load(src, allow_pickle=False)
+    meta = json.loads(str(z["meta"]))
+    meta.update(changes)
+    arrays = {k: z[k] for k in z.files if k != "meta"}
+    arrays.update(_arrays or {})
+    with open(dst, "wb") as f:
+        np.savez_compressed(f, meta=json.dumps(meta), **arrays)
+
+
+def test_artifact_refuses_future_version(tmp_path, knn150):
+    path = str(tmp_path / "knn.npz")
+    knn150.save(path)
+    bad = str(tmp_path / "future.npz")
+    _rewrite_meta(path, bad, _format_version=KNN_FORMAT_VERSION + 1)
+    with pytest.raises(ValueError, match="format v"):
+        KnnGraph.load(bad)
+
+
+def test_artifact_refuses_unknown_meta_fields(tmp_path, knn150):
+    path = str(tmp_path / "knn.npz")
+    knn150.save(path)
+    bad = str(tmp_path / "unknown.npz")
+    _rewrite_meta(path, bad, score_scale=2.0)
+    with pytest.raises(ValueError, match="unknown fields"):
+        KnnGraph.load(bad)
+
+
+def test_artifact_refuses_corrupt_sources(tmp_path, knn150):
+    """A negative source id would wrap-around in the row-position
+    table and silently serve another node's row; load must refuse it
+    (INDEX_FORMAT.md: CSR invariants validated before any lookup)."""
+    path = str(tmp_path / "knn.npz")
+    knn150.save(path)
+    for bad_id in (-1, knn150.n):
+        bad_sources = knn150.sources.copy()
+        bad_sources[0] = bad_id
+        bad = str(tmp_path / f"corrupt{bad_id}.npz")
+        _rewrite_meta(path, bad, _arrays={"sources": bad_sources})
+        with pytest.raises(ValueError, match="source id outside"):
+            KnnGraph.load(bad)
+
+
+def test_artifact_lookup_outside_sources_raises(small_graph, sling_index):
+    subset = np.array([3, 9, 77], np.int32)
+    knn = run_join(sling_index, small_graph, sources=subset,
+                   config=JoinConfig(k=4, tile=4))
+    assert knn.has(9) and not knn.has(4)
+    knn.neighbors(9)
+    with pytest.raises(KeyError):
+        knn.neighbors(4)
+    with pytest.raises(ValueError, match="unique"):
+        run_join(sling_index, small_graph, sources=[3, 3],
+                 config=JoinConfig(k=4))
+    with pytest.raises(ValueError, match="outside"):
+        run_join(sling_index, small_graph, sources=[small_graph.n],
+                 config=JoinConfig(k=4))
+
+
+def test_exclude_self(small_graph, sling_index, knn150):
+    knn = run_join(sling_index, small_graph,
+                   config=JoinConfig(k=8, tile=32, exclude_self=True))
+    for u in (0, 50, 149):
+        ids, sc = knn.neighbors(u)
+        assert u not in ids and len(ids) == 8
+        # prefix agreement with the self-including sweep (which holds
+        # one fewer non-self candidate: it fetched k, not k+1)
+        ids_all, _ = knn150.neighbors(u)
+        keep = ids_all[ids_all != u]
+        np.testing.assert_array_equal(ids[:len(keep)], keep)
+
+
+# ----------------------------------------------------------------------
+# checkpoint / resume (tile-granular, bit-stable)
+# ----------------------------------------------------------------------
+def test_resume_equals_uninterrupted(tmp_path, small_graph, sling_index,
+                                     knn150):
+    ck = str(tmp_path / "sweep.ckpt.npz")
+    cfg = JoinConfig(k=8, tile=32, checkpoint_path=ck,
+                     checkpoint_every=1)
+    assert run_join(sling_index, small_graph, config=cfg,
+                    stop_after_tiles=2) is None
+    assert os.path.exists(ck)
+    resumed = run_join(sling_index, small_graph, config=cfg)
+    assert not os.path.exists(ck)   # complete sweeps clear their state
+    # bit-identical to the uninterrupted sweep (same compiled program
+    # replays only the missing tiles)
+    np.testing.assert_array_equal(resumed.nbr_ids, knn150.nbr_ids)
+    np.testing.assert_array_equal(resumed.nbr_scores, knn150.nbr_scores)
+    np.testing.assert_array_equal(resumed.indptr, knn150.indptr)
+
+
+def test_resume_refuses_mismatched_fingerprint(tmp_path, small_graph,
+                                               sling_index):
+    ck = str(tmp_path / "sweep.ckpt.npz")
+    cfg = JoinConfig(k=8, tile=32, checkpoint_path=ck,
+                     checkpoint_every=1)
+    assert run_join(sling_index, small_graph, config=cfg,
+                    stop_after_tiles=1) is None
+    with pytest.raises(ValueError, match="fingerprint mismatch"):
+        run_join(sling_index, small_graph,
+                 config=JoinConfig(k=4, tile=32, checkpoint_path=ck))
+    with pytest.raises(ValueError, match="source set"):
+        # same count (fingerprint-identical), different node ids
+        run_join(sling_index, small_graph,
+                 sources=np.arange(small_graph.n, dtype=np.int32)[::-1],
+                 config=JoinConfig(k=8, tile=32, checkpoint_path=ck))
+
+
+def test_checkpoint_refuses_future_version(tmp_path, small_graph,
+                                           sling_index):
+    ck = str(tmp_path / "sweep.ckpt.npz")
+    cfg = JoinConfig(k=8, tile=32, checkpoint_path=ck,
+                     checkpoint_every=1)
+    assert run_join(sling_index, small_graph, config=cfg,
+                    stop_after_tiles=1) is None
+    bad = str(tmp_path / "future.ckpt.npz")
+    _rewrite_meta(ck, bad, _format_version=CKPT_FORMAT_VERSION + 1)
+    with pytest.raises(ValueError, match="format v"):
+        run_join(sling_index, small_graph,
+                 config=JoinConfig(k=8, tile=32, checkpoint_path=bad))
+
+
+# ----------------------------------------------------------------------
+# zero recompiles across tiles / sweeps (capacity-bucket discipline)
+# ----------------------------------------------------------------------
+def test_zero_recompiles_across_tiles(small_graph, sling_index):
+    cfg = JoinConfig(k=8, tile=16)
+    run_join(sling_index, small_graph,
+             sources=np.arange(16, dtype=np.int32), config=cfg)  # prime
+    c0 = compile_count()
+    knn = run_join(sling_index, small_graph, config=cfg)  # 10 tiles
+    assert compile_count() == c0, "join recompiled across tiles"
+    # a different source subset reuses the same program too
+    run_join(sling_index, small_graph,
+             sources=np.arange(40, 90, dtype=np.int32), config=cfg)
+    assert compile_count() == c0
+    assert len(knn.sources) == small_graph.n
+
+
+# ----------------------------------------------------------------------
+# mesh composition: sharded sweep == single-device sweep
+# ----------------------------------------------------------------------
+def test_join_mesh1_equivalence(small_graph, sling_index, knn150):
+    mesh = shard_query.serving_mesh(1)
+    knn = run_join(sling_index, small_graph,
+                   config=JoinConfig(k=8, tile=32, mesh=mesh))
+    assert knn.mesh_shards == 1
+    np.testing.assert_array_equal(knn.nbr_ids, knn150.nbr_ids)
+    np.testing.assert_allclose(knn.nbr_scores, knn150.nbr_scores,
+                               atol=1e-6)
+
+
+@pytest.mark.mesh
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_join_mesh_equivalence(n_shards):
+    if jax.device_count() < n_shards:
+        pytest.skip(f"needs {n_shards} devices (XLA_FLAGS="
+                    "--xla_force_host_platform_device_count)")
+    g, idx, S = _cell("er", 0.6, 0.1)
+    tol = oracle.tolerance(idx.plan)
+    ref = run_join(idx, g, config=JoinConfig(k=8, tile=16))
+    mesh = shard_query.serving_mesh(n_shards)
+    knn = run_join(idx, g,
+                   config=JoinConfig(k=8, tile=16, mesh=mesh))
+    np.testing.assert_allclose(knn.nbr_scores, ref.nbr_scores,
+                               atol=1e-5)
+    np.testing.assert_array_equal(knn.indptr, ref.indptr)
+    # ids may swap only inside float ties; every row still oracle-true
+    for u in range(g.n):
+        ids, sc = knn.neighbors(u)
+        _check_row(ids, sc, S[u], len(ids), tol)
+
+
+@pytest.mark.mesh
+def test_join_mesh_resume_equals_uninterrupted(tmp_path):
+    """Preempted-and-resumed sharded sweep == uninterrupted sharded
+    sweep, entry for entry (the mesh layout is part of the checkpoint
+    fingerprint, so cached tiles only ever mix with tiles from the
+    same reduction order)."""
+    if jax.device_count() < 2:
+        pytest.skip("needs 2 devices")
+    g, idx, _ = _cell("er", 0.6, 0.1)
+    mesh = shard_query.serving_mesh(2)
+    full = run_join(idx, g, config=JoinConfig(k=8, tile=16, mesh=mesh))
+    ck = str(tmp_path / "mesh.ckpt.npz")
+    cfg = JoinConfig(k=8, tile=16, mesh=mesh, checkpoint_path=ck,
+                     checkpoint_every=1)
+    assert run_join(idx, g, config=cfg, stop_after_tiles=1) is None
+    # a single-device resume against the mesh checkpoint must refuse
+    with pytest.raises(ValueError, match="fingerprint mismatch"):
+        run_join(idx, g, config=JoinConfig(k=8, tile=16,
+                                           checkpoint_path=ck))
+    resumed = run_join(idx, g, config=cfg)
+    np.testing.assert_array_equal(resumed.nbr_ids, full.nbr_ids)
+    np.testing.assert_array_equal(resumed.nbr_scores, full.nbr_scores)
+
+
+# ----------------------------------------------------------------------
+# consumers: engine knn path + sampler weights
+# ----------------------------------------------------------------------
+def test_engine_knn_lookup_and_staleness(small_graph):
+    g = small_graph
+    idx = build.build_index(g, eps=0.1, exact_d=True, seed=0)
+    knn = run_join(idx, g, config=JoinConfig(k=8, tile=32))
+    eng = QueryEngine(idx, g, EngineConfig(source_batch=4))
+    with pytest.raises(RuntimeError, match="no KnnGraph"):
+        eng.knn(3)
+    eng.attach_knn(knn)
+    ids, sc = eng.knn(3)
+    ids_a, sc_a = knn.neighbors(3)
+    np.testing.assert_array_equal(ids, ids_a)
+    np.testing.assert_array_equal(sc, sc_a)
+    ids_k, _ = eng.knn(3, k=2)
+    np.testing.assert_array_equal(ids_k, ids_a[:2])
+    # hot-swap bumps the served epoch past the artifact's: lookups
+    # must refuse rather than serve pre-swap scores
+    delta = update.random_delta(g, n_add=6, n_del=6, seed=2)
+    rep = build.update_index(idx, g, delta, exact_d=True)
+    eng.swap_index(idx, rep.graph, affected=rep.affected)
+    with pytest.raises(RuntimeError, match="stale"):
+        eng.knn(3)
+    eng.knn(3, allow_stale=True)     # explicit opt-in still works
+    st = eng.stats()
+    assert st["knn"] == 5 and st["knn_stale_rejects"] == 1
+    assert st["knn_attached"]
+    # re-attaching the stale artifact needs the same opt-in; a fresh
+    # join at the new epoch attaches cleanly
+    with pytest.raises(ValueError, match="epoch"):
+        eng.attach_knn(knn)
+    fresh = run_join(idx, rep.graph, config=JoinConfig(k=8, tile=32))
+    eng.attach_knn(fresh)
+    eng.knn(3)
+
+
+def test_engine_knn_rejects_wrong_graph(small_graph, sling_index):
+    from repro.graph import generators
+    g2 = generators.erdos_renyi(32, 90, seed=0, directed=True)
+    idx2 = build.build_index(g2, eps=0.2, exact_d=True, seed=0)
+    knn2 = run_join(idx2, g2, config=JoinConfig(k=4, tile=16))
+    eng = QueryEngine(sling_index, small_graph)
+    with pytest.raises(ValueError, match="n="):
+        eng.attach_knn(knn2)
+
+
+def test_sampler_reads_artifact_scores(small_graph, sling_index, knn150):
+    v = 7
+    nbrs = np.asarray(small_graph.in_neighbors(v))
+    w = sampler._knn_weights(knn150, v, nbrs)
+    ids, sc = knn150.neighbors(v)
+    row = dict(zip(ids.tolist(), sc.tolist()))
+    expect = np.array([row.get(int(u), 0.0) for u in nbrs]) + 1e-9
+    np.testing.assert_allclose(w, expect)
+    # nodes outside a subset sweep fall back to the uniform floor
+    subset = run_join(sling_index, small_graph,
+                      sources=np.array([0, 1], np.int32),
+                      config=JoinConfig(k=4, tile=2))
+    w2 = sampler._knn_weights(subset, v, nbrs)
+    np.testing.assert_allclose(w2, 1e-9)
