@@ -25,7 +25,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, emit_row, timeit
 from repro.core import build
 from repro.graph import generators
 from repro.join import JoinConfig, compile_count, run_join
@@ -52,6 +52,28 @@ def run(n: int = 2000, k: int = 16, tile: int = 64,
     emit(f"join/recompiles_after_first_tile/n={n}", float(grew),
          "must be 0")
     assert grew == 0, f"join recompiled across tiles: {grew} programs"
+
+    # Pallas-backed tile program: same artifact ids, its own compiled
+    # program, still zero recompiles across tiles (the blocked layout
+    # is capacity-bucketed exactly like the flat edge arrays)
+    ref = run_join(idx, g, sources, cfg)
+    cfg_pl = JoinConfig(k=k, tile=tile, push_backend="pallas")
+    run_join(idx, g, sources, cfg_pl)    # prime the pallas tile program
+    c0 = compile_count()
+    t_pl = timeit(lambda: run_join(idx, g, sources, cfg_pl), repeat=3)
+    grew = compile_count() - c0
+    assert grew == 0, \
+        f"pallas join recompiled across tiles: {grew} programs"
+    knn = run_join(idx, g, sources, cfg_pl)
+    assert np.array_equal(knn.nbr_ids, ref.nbr_ids), \
+        "pallas sweep ids diverge from lax sweep"
+    for backend, t in (("lax", t_join), ("pallas", t_pl)):
+        emit_row(f"join/sweep/k={k}/tile={tile}", n=n, backend=backend,
+                 mesh=1, wall_us=t / n_sources,
+                 throughput=1e6 * n_sources / t,
+                 derived="zero-recompile OK"
+                         + (", interpret-mode" if backend == "pallas"
+                            else ""))
 
     eng = QueryEngine(idx, g, EngineConfig(source_batch=8,
                                            k_buckets=(k,),

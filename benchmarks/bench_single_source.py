@@ -20,7 +20,7 @@ import sys
 
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, emit_row, timeit
 from repro.baselines import linearize
 from repro.core import build
 from repro.core.single_source import (single_source_device,
@@ -67,6 +67,88 @@ def run(sizes=(300, 1000, 3000), eps: float = 0.15, n_q: int = 5):
         t = timeit(lambda: [linearize.query_single_source(lin, g, int(u))
                             for u in qs])
         emit(f"fig2/single_source/linearize/n={n}", t / n_q, "")
+
+
+# ----------------------------------------------------------------------
+# push-backend rows: lax reference vs fused Pallas kernel
+# ----------------------------------------------------------------------
+def run_backends(n: int = 300, eps: float = 0.15, n_q: int = 16,
+                 op_count_n: int = 10_000) -> None:
+    """lax-vs-pallas rows for the batched single-source push.
+
+    Wall-time rows are honest but weak evidence on CPU (the Pallas
+    kernel runs in interpret mode there), so the backend gate is the
+    trace-only op count at ``op_count_n``: the number of
+    frontier-sized HBM materializations per compiled program
+    (``count_hbm_intermediates``), asserted pallas <= lax. Equivalence
+    of the two backends' answers is asserted on the real ``n`` run.
+    """
+    g = generators.barabasi_albert(n, 3, seed=0, directed=False)
+    idx = build.build_index(g, eps=eps, seed=0)
+    rng = np.random.default_rng(0)
+    qs = rng.integers(0, g.n, n_q).astype(np.int32)
+    got = {}
+    for backend in ("lax", "pallas"):
+        single_source_device(idx, g, qs, backend=backend)  # prime
+        t = timeit(lambda b=backend: single_source_device(idx, g, qs,
+                                                          backend=b))
+        got[backend] = single_source_device(idx, g, qs, backend=backend)
+        emit_row("fig2/single_source/push", n=n, backend=backend,
+                 mesh=1, wall_us=t / n_q, throughput=n_q / (t * 1e-6),
+                 derived="interpret-mode" if backend == "pallas" else "")
+    err = float(np.abs(got["pallas"] - got["lax"]).max())
+    assert err < 1e-5, f"pallas != lax single-source: {err}"
+    emit(f"fig2/single_source/backend_equivalence/n={n}", err,
+         "max |pallas - lax|, must be < 1e-5")
+    op_count_gate(n=op_count_n)
+
+
+def op_count_gate(n: int = 10_000, deg: int = 3, B: int = 16,
+                  W: int = 64, l_max: int = 10) -> None:
+    """Trace-only fusion gate at production-ish n (no graph is built --
+    the programs are traced on ShapeDtypeStructs, so this is cheap even
+    at n = 10^4): count frontier-sized intermediates in each backend's
+    jaxpr and assert the fused kernel materializes fewer."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.single_source import (batched_single_source,
+                                          batched_single_source_pallas)
+    from repro.kernels.horner_push import ops as hp_ops
+
+    m = deg * n
+    bn, eb = hp_ops.DEFAULT_BN, hp_ops.DEFAULT_EB
+    nb = -(-n // bn)
+    ep = -(-((m + nb - 1) // nb) // eb + 1) * eb  # plausible block width
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    lax_args = (s((n, W), jnp.int32), s((n, W), f32), s((n,), f32),
+                s((m,), jnp.int32), s((m,), jnp.int32), s((m,), f32),
+                s((B,), jnp.int32), s((), f32))
+    pl_args = (s((n, W), jnp.int32), s((n, W), f32), s((n,), f32),
+               s((nb, ep), jnp.int32), s((nb, ep), jnp.int32),
+               s((nb, ep), f32), s((B,), jnp.int32), s((), f32))
+    min_elems = B * n // 2   # anything frontier-sized
+    c_lax = hp_ops.count_hbm_intermediates(
+        lambda *a: batched_single_source(*a, n=n, l_max=l_max),
+        *lax_args, min_elems=min_elems)
+    c_pl = hp_ops.count_hbm_intermediates(
+        lambda *a: batched_single_source_pallas(
+            *a, n=n, l_max=l_max, bn=bn, eb=eb, interpret=True),
+        *pl_args, min_elems=min_elems)
+    cost = hp_ops.push_cost_model(n, m, B, ep, l_max, bn=bn, eb=eb)
+    emit_row("fig2/single_source/hbm_ops", n=n, backend="lax", mesh=1,
+             wall_us=float("nan"), throughput=None, ops=c_lax,
+             model_bytes=cost["lax_bytes"],
+             derived=f"{c_lax} frontier-sized ops (trace-only)")
+    emit_row("fig2/single_source/hbm_ops", n=n, backend="pallas", mesh=1,
+             wall_us=float("nan"), throughput=None, ops=c_pl,
+             model_bytes=cost["pallas_bytes"],
+             derived=f"{c_pl} frontier-sized ops (trace-only)")
+    assert c_pl <= c_lax, \
+        f"pallas materializes more HBM intermediates: {c_pl} > {c_lax}"
+    from benchmarks import roofline
+    roofline.push_sanity(cost, n=n)
 
 
 # ----------------------------------------------------------------------

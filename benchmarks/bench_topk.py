@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, emit_row, timeit
 from repro.baselines import linearize, power
 from repro.core import build
 from repro.graph import generators
@@ -47,13 +47,24 @@ def run_engine(n: int = 300, eps: float = 0.1, ks=(1, 10, 50),
     # one-shot module API on its warm path: the device upload is
     # cached (core/device_state.py), so after the first call these
     # rows measure the fused push + top_k, not H2D transfer of the
-    # packed index -- comparable to the engine rows above
+    # packed index -- comparable to the engine rows above. One row per
+    # push backend; identical selection (ids asserted equal), only the
+    # push body changes.
     from repro.core.topk import topk_device
     k_max = max(ks)
-    topk_device(idx, g, qs, k_max)         # prime upload + compile
-    t = timeit(lambda: topk_device(idx, g, qs, k_max))
-    emit(f"serve/topk/device_oneshot_warm/n={n}/k={k_max}", t / n_q,
-         "cached upload")
+    ids = {}
+    for backend in ("lax", "pallas"):
+        topk_device(idx, g, qs, k_max, backend=backend)  # prime
+        t = timeit(lambda b=backend: topk_device(idx, g, qs, k_max,
+                                                 backend=b))
+        ids[backend] = topk_device(idx, g, qs, k_max, backend=backend)[1]
+        emit_row(f"serve/topk/device_oneshot_warm/k={k_max}", n=n,
+                 backend=backend, mesh=1, wall_us=t / n_q,
+                 throughput=n_q / (t * 1e-6),
+                 derived="cached upload" + (", interpret-mode"
+                                            if backend == "pallas" else ""))
+    assert np.array_equal(ids["lax"], ids["pallas"]), \
+        "pallas top-k ids diverge from lax"
     # strawman: dense (B, n) back to host, argsort there
     dense = eng.single_source  # cache_size=0: always the device path
     t = timeit(lambda: np.argsort(-dense(qs), axis=1)[:, :max(ks)])

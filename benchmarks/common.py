@@ -1,6 +1,8 @@
 """Shared benchmark helpers."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
@@ -23,3 +25,53 @@ ROWS: list[tuple[str, float, str]] = []
 def emit(name: str, us: float, derived: str = "") -> None:
     ROWS.append((name, us, derived))
     print(f"{name},{us:.1f},{derived}")
+
+
+# ----------------------------------------------------------------------
+# structured rows: the machine-readable twin of emit(), collected into
+# a versioned BENCH_<mode>.json by run.py so backend/mesh comparisons
+# (lax vs pallas rows) survive as data, not just CSV stdout
+# ----------------------------------------------------------------------
+BENCH_SCHEMA_VERSION = 1
+
+JROWS: list[dict] = []
+
+
+def emit_row(bench: str, *, n: int, backend: str, mesh: int,
+             wall_us: float, throughput: float | None = None,
+             derived: str = "", **extra) -> None:
+    """Record one structured benchmark row and print its CSV twin.
+
+    Schema (BENCH_SCHEMA_VERSION): ``bench`` (measurement id), ``n``
+    (graph size), ``backend`` ("lax" | "pallas"), ``mesh`` (shard
+    count, 1 = single device), ``wall`` (microseconds, NaN for
+    trace-only rows), ``throughput`` (per-second rate, None when the
+    row has no natural rate). Extra keys ride along unvalidated.
+    """
+    row = {
+        "schema": BENCH_SCHEMA_VERSION,
+        "bench": str(bench),
+        "n": int(n),
+        "backend": str(backend),
+        "mesh": int(mesh),
+        # trace-only rows pass NaN -> stored as null (strict JSON)
+        "wall": None if wall_us != wall_us else float(wall_us),
+        "throughput": None if throughput is None else float(throughput),
+    }
+    row.update(extra)
+    JROWS.append(row)
+    if not derived and throughput is not None:
+        derived = f"{throughput:.0f}/s"
+    emit(f"{bench}/backend={backend}/mesh={mesh}/n={n}", wall_us, derived)
+
+
+def write_json(mode: str, path: str | None = None) -> str:
+    """Write accumulated structured rows to ``BENCH_<mode>.json``."""
+    if path is None:
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        path = os.path.join(repo, f"BENCH_{mode}.json")
+    doc = {"schema": BENCH_SCHEMA_VERSION, "mode": mode, "rows": JROWS}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"# wrote {len(JROWS)} structured rows -> {path}")
+    return path

@@ -44,6 +44,36 @@ def run(paths=None) -> None:
                 f"peakGiB={rec['bytes_per_device']['peak_est'] / 2**30:.2f}")
 
 
+# ----------------------------------------------------------------------
+# Horner-push memory-bandwidth bound (kernels/horner_push)
+# ----------------------------------------------------------------------
+# Representative HBM bandwidths for the floor rows; the point is the
+# *ratio* between the two backends' analytic floors, not the absolute
+# numbers (interpret-mode CPU walls sit far above either floor).
+HBM_GBS = {"tpu_v4": 1200.0, "host": 50.0}
+
+
+def push_sanity(cost: dict, n: int) -> None:
+    """Sanity-check the push backends against the bandwidth bound.
+
+    ``cost`` is ``repro.kernels.horner_push.push_cost_model(...)``:
+    analytic HBM bytes per query batch for the lax reference and the
+    fused Pallas kernel. Emits the memory-bound wall-time floor for
+    each backend at representative bandwidths and asserts the fused
+    kernel's analytic traffic is strictly below the reference's --
+    the roofline form of the fusion claim.
+    """
+    for dev, gbs in HBM_GBS.items():
+        for backend in ("lax", "pallas"):
+            floor_us = 1e6 * cost[f"{backend}_bytes"] / (gbs * 1e9)
+            emit(f"roofline/push_floor/{dev}/{backend}/n={n}", floor_us,
+                 f"{cost[f'{backend}_bytes'] / 2**20:.1f} MiB/batch "
+                 f"@ {gbs:.0f} GB/s")
+    assert cost["pallas_bytes"] < cost["lax_bytes"], (
+        "fused kernel models more HBM traffic than the lax reference: "
+        f"{cost['pallas_bytes']} >= {cost['lax_bytes']}")
+
+
 def markdown_table(path: str) -> str:
     """Markdown rendering used to refresh EXPERIMENTS.md."""
     rows = [

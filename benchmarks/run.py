@@ -5,8 +5,15 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
 minutes on one CPU core; default sizes match the figures in
 EXPERIMENTS.md. ``--smoke`` is the CI mode (scripts/ci.sh): tiny
 graphs, every section exercised once, plus the n=500 serving-path
-latency guard and the zero-recompile-on-swap guard (bench_update) --
-finishes in ~a minute.
+latency guard, the zero-recompile-on-swap guard (bench_update), the
+lax-vs-pallas push equivalence + op-count fusion gates
+(bench_single_source.run_backends), and the per-backend
+zero-recompile-across-tiles join gate (bench_join) -- finishes in ~a
+minute.
+
+Every mode also writes the structured rows to ``BENCH_<mode>.json``
+(schema: bench, n, backend, mesh, wall, throughput; see
+benchmarks.common.emit_row).
 
     PYTHONPATH=src python -m benchmarks.run [--fast|--smoke] [--only ...]
 """
@@ -43,6 +50,10 @@ def main() -> None:
     if want("source"):
         from benchmarks import bench_single_source
         bench_single_source.run(sizes=sizes)
+        # lax-vs-pallas push rows + the smoke gates: backend
+        # equivalence on the real run, trace-only op-count fusion
+        # check at n = 10^4 (both assert)
+        bench_single_source.run_backends(n=sizes[0])
         if args.smoke:
             # 2-shard sharded-serving check (subprocess: forces host
             # devices before the child's jax backend initializes)
@@ -94,6 +105,10 @@ def main() -> None:
     if want("roofline") and not args.smoke:
         from benchmarks import roofline
         roofline.run()
+
+    from benchmarks import common
+    mode = "smoke" if args.smoke else ("fast" if args.fast else "full")
+    common.write_json(mode)
 
 
 if __name__ == "__main__":

@@ -25,6 +25,13 @@ echo "== bulk-join suite (forced 4 host devices) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=4 \
     python -m pytest -x -q -m join
 
+echo "== pallas kernel suite (interpret mode, forced 4 host devices) =="
+# the fused Horner-push kernel wall (tests/test_horner_kernel.py) in
+# interpret mode; the forced devices make the sharded kernel
+# composition (mesh-marked cases in the pallas module) execute too
+XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    python -m pytest -x -q -m pallas
+
 echo "== examples smoke (API drift gate) =="
 # the examples are the public face of the API: run them end to end so
 # churn in e.g. EngineConfig/JoinConfig signatures fails CI instead of

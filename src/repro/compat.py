@@ -10,6 +10,21 @@ change.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
+
+
+def segment_sum(data, segment_ids, num_segments: int):
+    """``jax.ops.segment_sum`` replacement on the scatter-add primitive.
+
+    ``jax.ops.segment_sum`` is deprecated (and removed past the jax.ops
+    namespace sunset); the indexed-add lowering is the same XLA scatter
+    the old wrapper produced, so switching call sites is
+    bit-equivalent. Negative or >= num_segments ids are dropped
+    (scatter's out-of-bounds fill mode), matching the old semantics.
+    """
+    shape = (num_segments,) + data.shape[1:]
+    return jnp.zeros(shape, data.dtype).at[segment_ids].add(
+        data, mode="drop")
 
 
 def make_mesh(axis_shapes, axis_names):

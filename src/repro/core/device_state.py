@@ -105,6 +105,37 @@ def serving_arrays(idx, g: csr.Graph) -> ServingArrays:
     return _get(("serving", id(idx), id(g)), fp, build, (idx, g))
 
 
+@dataclasses.dataclass(frozen=True)
+class BlockedPushArrays:
+    """Dest-block-grouped edge layout for the Pallas Horner-push
+    backend (kernels/horner_push, DESIGN.md section 11)."""
+    blk_src: object    # (NB, E_pad) int32
+    blk_dstl: object   # (NB, E_pad) int32, -1 pads
+    blk_w: object      # (NB, E_pad) float32
+    bn: int
+    eb: int
+
+
+def blocked_push_arrays(idx, g: csr.Graph, bn: int | None = None,
+                        eb: int | None = None) -> BlockedPushArrays:
+    """Cached upload of the blocked edge layout (Pallas backend's twin
+    of :func:`serving_arrays`; cached separately so lax-only processes
+    never pay the layout build)."""
+    from repro.kernels.horner_push import ops as hp_ops
+    bn = bn or hp_ops.DEFAULT_BN
+    eb = eb or hp_ops.DEFAULT_EB
+
+    def build():
+        bs, bdl, bw = hp_ops.graph_block_layout(
+            g, idx.plan.sqrt_c, bn=bn, eb=eb)
+        return BlockedPushArrays(
+            blk_src=jnp.asarray(bs), blk_dstl=jnp.asarray(bdl),
+            blk_w=jnp.asarray(bw), bn=bn, eb=eb)
+
+    fp = _index_fingerprint(idx) + _graph_fingerprint(g) + (bn, eb)
+    return _get(("blocked", id(idx), id(g), bn, eb), fp, build, (idx, g))
+
+
 def cache_clear() -> None:
     _cache.clear()
 

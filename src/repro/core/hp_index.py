@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.graph import csr
 
 INT32_PAD_KEY = np.int32(2**31 - 1)
@@ -38,7 +39,7 @@ def _push_block(h, edge_src, edge_dst, w, theta, n: int):
     """
     hp = jnp.where(h > theta, h, 0.0)
     msgs = hp[edge_src] * w[:, None]                 # (m, B)
-    h_next = jax.ops.segment_sum(msgs, edge_dst, num_segments=n)
+    h_next = compat.segment_sum(msgs, edge_dst, num_segments=n)
     return hp, h_next
 
 
@@ -67,7 +68,7 @@ def _propagate_scan_body(h0, edge_src, edge_dst, w, theta, n: int,
     def step(h, _):
         hp = jnp.where(h > theta, h, 0.0)
         msgs = hp[edge_src] * w[:, None]             # (m, B)
-        return jax.ops.segment_sum(msgs, edge_dst, num_segments=n), hp
+        return compat.segment_sum(msgs, edge_dst, num_segments=n), hp
 
     return jax.lax.scan(step, h0, None, length=steps)
 
@@ -147,7 +148,7 @@ def _mass_scan(h0, edge_src, edge_dst, w, theta_r, n: int, l_max: int,
         h, acc, skip = carry
         hp = jnp.where(h > theta_r, h, 0.0)
         msgs = hp[s] * w[:, None]
-        h_next = jax.ops.segment_sum(msgs, d, num_segments=n)
+        h_next = compat.segment_sum(msgs, d, num_segments=n)
         return (h_next, acc + hp, skip + (h - hp)), None
 
     (_, acc, skip), _ = jax.lax.scan(

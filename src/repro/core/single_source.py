@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core.hp_index import INT32_PAD_KEY
 from repro.graph import csr
 
@@ -147,7 +148,7 @@ def horner_push(ku, xu, d, src, dst, w, tau, *, n: int, l_max: int,
         xp = jnp.where(x > tau, x, 0.0)                       # (B, slab)
         xg = xp if gather is None else gather(xp)             # (B, frontier)
         msgs = xg[:, src] * w[None, :]                        # (B, E)
-        return jax.vmap(lambda mm: jax.ops.segment_sum(
+        return jax.vmap(lambda mm: compat.segment_sum(
             mm, dst, num_segments=slab_size))(msgs)
 
     acc = seed(l_max)
@@ -172,16 +173,50 @@ def batched_single_source(keys, vals, d, edge_src, edge_dst, w,
                        tau, n=n, l_max=l_max)
 
 
-def single_source_device(idx, g: csr.Graph, us: np.ndarray) -> np.ndarray:
+@partial(jax.jit, static_argnames=("n", "l_max", "bn", "eb", "interpret"))
+def batched_single_source_pallas(keys, vals, d, blk_src, blk_dstl,
+                                 blk_w, us, tau, n: int, l_max: int,
+                                 bn: int, eb: int,
+                                 interpret: bool = True):
+    """Pallas-backed twin of :func:`batched_single_source`.
+
+    Same (B, n) float32 result (up to float32 reduction order -- the
+    blocked layout sums each destination's messages in ELL order, the
+    lax path in edge-list order); takes the (NB, E_pad) blocked edge
+    layout (``kernels/horner_push.block_align_edges``) in place of the
+    flat edge arrays. Kept as a separate jit so the two backends never
+    share a cache entry and ``_cache_size`` gates can tell them apart.
+    """
+    from repro.kernels.horner_push import ops as hp_ops
+    return hp_ops.horner_push_pallas(
+        keys[us], vals[us], d, blk_src, blk_dstl, blk_w, tau,
+        n=n, l_max=l_max, bn=bn, eb=eb, interpret=interpret)
+
+
+def single_source_device(idx, g: csr.Graph, us: np.ndarray,
+                         backend: str | None = None) -> np.ndarray:
     """One-shot batched device path. The index/graph upload is warm
     after the first call (core/device_state.py), so repeated calls
-    measure query compute, not H2D transfer."""
+    measure query compute, not H2D transfer.
+
+    ``backend``: "lax" | "pallas" | None/"auto" (defer to the
+    process-wide switch, ``repro.kernels.horner_push``).
+    """
     from repro.core import device_state
+    from repro.kernels.horner_push import resolve_push_backend
     st = device_state.serving_arrays(idx, g)
-    out = batched_single_source(
-        st.keys, st.vals, st.d, st.edge_src, st.edge_dst, st.w,
-        jnp.asarray(us, jnp.int32), jnp.float32(st.tau),
-        idx.n, idx.plan.l_max)
+    if resolve_push_backend(backend) == "pallas":
+        bl = device_state.blocked_push_arrays(idx, g)
+        out = batched_single_source_pallas(
+            st.keys, st.vals, st.d, bl.blk_src, bl.blk_dstl, bl.blk_w,
+            jnp.asarray(us, jnp.int32), jnp.float32(st.tau),
+            idx.n, idx.plan.l_max, bl.bn, bl.eb,
+            interpret=jax.default_backend() != "tpu")
+    else:
+        out = batched_single_source(
+            st.keys, st.vals, st.d, st.edge_src, st.edge_dst, st.w,
+            jnp.asarray(us, jnp.int32), jnp.float32(st.tau),
+            idx.n, idx.plan.l_max)
     return np.asarray(out)
 
 

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.single_source import (batched_single_source,
+                                      batched_single_source_pallas,
                                       single_source_paper)
 from repro.graph import csr
 
@@ -46,8 +47,24 @@ def batched_topk(keys, vals, d, edge_src, edge_dst, w, us, tau,
     return top_v, top_i.astype(jnp.int32)
 
 
-def topk_device(idx, g: csr.Graph, us: np.ndarray,
-                k: int) -> tuple[np.ndarray, np.ndarray]:
+@partial(jax.jit,
+         static_argnames=("n", "l_max", "k", "bn", "eb", "interpret"))
+def batched_topk_pallas(keys, vals, d, blk_src, blk_dstl, blk_w, us,
+                        tau, n: int, l_max: int, k: int, bn: int,
+                        eb: int, interpret: bool = True):
+    """Pallas-backed twin of :func:`batched_topk`: the fused Horner
+    push kernel feeds the same ``jax.lax.top_k`` selection inside one
+    XLA program, so the backend switch changes only the push body --
+    the (B, k) transfer contract and tie-breaking are identical."""
+    scores = batched_single_source_pallas(
+        keys, vals, d, blk_src, blk_dstl, blk_w, us, tau,
+        n=n, l_max=l_max, bn=bn, eb=eb, interpret=interpret)
+    top_v, top_i = jax.lax.top_k(scores, k)
+    return top_v, top_i.astype(jnp.int32)
+
+
+def topk_device(idx, g: csr.Graph, us: np.ndarray, k: int,
+                backend: str | None = None) -> tuple[np.ndarray, np.ndarray]:
     """Batched device top-k; k is clamped to n.
 
     The index/graph upload is warm after the first call
@@ -57,14 +74,26 @@ def topk_device(idx, g: csr.Graph, us: np.ndarray,
     push-plus-top_k, not H2D transfer. A long-lived serving loop
     should still prefer :class:`~repro.serve.QueryEngine` (adds
     batching, caching, and hot-swap shape stability).
+
+    ``backend``: "lax" | "pallas" | None/"auto" (defer to the
+    process-wide switch, ``repro.kernels.horner_push``).
     """
     from repro.core import device_state
+    from repro.kernels.horner_push import resolve_push_backend
     k = min(int(k), idx.n)
     st = device_state.serving_arrays(idx, g)
-    top_v, top_i = batched_topk(
-        st.keys, st.vals, st.d, st.edge_src, st.edge_dst, st.w,
-        jnp.asarray(us, jnp.int32), jnp.float32(st.tau),
-        idx.n, idx.plan.l_max, k)
+    if resolve_push_backend(backend) == "pallas":
+        bl = device_state.blocked_push_arrays(idx, g)
+        top_v, top_i = batched_topk_pallas(
+            st.keys, st.vals, st.d, bl.blk_src, bl.blk_dstl, bl.blk_w,
+            jnp.asarray(us, jnp.int32), jnp.float32(st.tau),
+            idx.n, idx.plan.l_max, k, bl.bn, bl.eb,
+            interpret=jax.default_backend() != "tpu")
+    else:
+        top_v, top_i = batched_topk(
+            st.keys, st.vals, st.d, st.edge_src, st.edge_dst, st.w,
+            jnp.asarray(us, jnp.int32), jnp.float32(st.tau),
+            idx.n, idx.plan.l_max, k)
     return np.asarray(top_v), np.asarray(top_i)
 
 

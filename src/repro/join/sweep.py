@@ -60,15 +60,24 @@ class JoinConfig:
     mesh_axis: str = "data"
     checkpoint_path: str | None = None  # tile-granular resume state
     checkpoint_every: int = 8           # tiles between checkpoint writes
+    # Horner-push backend for the tile program ("lax" | "pallas" |
+    # None/"auto" = process-wide switch); part of the checkpoint
+    # fingerprint -- the blocked layout sums messages in a different
+    # float32 order, so tiles from the two backends are not
+    # interchangeable bit-for-bit.
+    push_backend: str | None = None
 
 
 def compile_count() -> int:
     """Distinct compiled tile programs in this process (single-device
-    fused top-k + sharded fan-out) -- the regression gate for
-    recompiles across tiles (benchmarks/bench_join.py)."""
+    fused top-k + sharded fan-out, both push backends) -- the
+    regression gate for recompiles across tiles
+    (benchmarks/bench_join.py)."""
     from repro.core import shard_query, topk
     return int(topk.batched_topk._cache_size()
-               + shard_query._sharded_topk._cache_size())
+               + topk.batched_topk_pallas._cache_size()
+               + shard_query._sharded_topk._cache_size()
+               + shard_query._sharded_topk_pallas._cache_size())
 
 
 def _kq(cfg: JoinConfig, n: int) -> int:
@@ -95,7 +104,13 @@ def _fingerprint(idx, g, sources: np.ndarray, cfg: JoinConfig,
         "exclude_self": bool(cfg.exclude_self),
         "mesh_shards": _mesh_shards(cfg),
         "n_sources": int(len(sources)),
+        "push_backend": _resolved_backend(cfg),
     }
+
+
+def _resolved_backend(cfg: JoinConfig) -> str:
+    from repro.kernels.horner_push import resolve_push_backend
+    return resolve_push_backend(cfg.push_backend)
 
 
 def _mesh_shards(cfg: JoinConfig) -> int:
@@ -163,12 +178,29 @@ def _load_checkpoint(path: str, fp: dict, sources: np.ndarray):
 # ----------------------------------------------------------------------
 def _tile_runner(idx, g, cfg: JoinConfig, kq: int):
     """One compiled program for every tile: the fused single-device
-    top-k, or the mesh fan-out with the index sharded once up front."""
+    top-k, or the mesh fan-out with the index sharded once up front.
+    The resolved push backend selects the tile program's Horner-push
+    body (lax reference or the Pallas kernel); either way every tile
+    reuses the one compiled program."""
+    backend = _resolved_backend(cfg)
     if cfg.mesh is None:
+        import jax
         import jax.numpy as jnp
         from repro.core import device_state
-        from repro.core.topk import batched_topk
+        from repro.core.topk import batched_topk, batched_topk_pallas
         st = device_state.serving_arrays(idx, g)
+        if backend == "pallas":
+            bl = device_state.blocked_push_arrays(idx, g)
+
+            def run_tile(us):
+                v, i = batched_topk_pallas(
+                    st.keys, st.vals, st.d, bl.blk_src, bl.blk_dstl,
+                    bl.blk_w, jnp.asarray(us, jnp.int32),
+                    jnp.float32(st.tau), idx.n, idx.plan.l_max, kq,
+                    bl.bn, bl.eb,
+                    interpret=jax.default_backend() != "tpu")
+                return np.asarray(v), np.asarray(i)
+            return run_tile
 
         def run_tile(us):
             v, i = batched_topk(
@@ -179,10 +211,11 @@ def _tile_runner(idx, g, cfg: JoinConfig, kq: int):
         return run_tile
 
     from repro.core import shard_query
-    si = shard_query.shard_index(idx, g, cfg.mesh, axis=cfg.mesh_axis)
+    si = shard_query.shard_index(idx, g, cfg.mesh, axis=cfg.mesh_axis,
+                                 push_backend=backend)
 
     def run_tile(us):
-        return shard_query.sharded_topk(si, us, kq)
+        return shard_query.sharded_topk(si, us, kq, backend=backend)
     return run_tile
 
 

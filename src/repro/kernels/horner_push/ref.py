@@ -1,0 +1,66 @@
+"""NumPy reference for the fused Horner-push step over blocked edges.
+
+Mirrors the kernel's math (including the blocked edge layout and the
+node-major frontier) in float64, so layout-builder bugs and kernel bugs
+are distinguishable: the kernel is compared against this reference
+*and* against :func:`repro.core.single_source.single_source_horner`
+(which consumes the flat edge list); only a layout bug can separate
+the two references.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.hp_index import INT32_PAD_KEY
+
+
+def blocked_spmv_ref(x, blk_src, blk_dstl, blk_w, bn: int) -> np.ndarray:
+    """out[i*bn + dstl, b] += w * x[src, b] over all non-pad slots."""
+    NB, E_pad = blk_src.shape
+    out = np.zeros((NB * bn, x.shape[1]), np.float64)
+    for i in range(NB):
+        for e in range(E_pad):
+            dl = int(blk_dstl[i, e])
+            if dl < 0:
+                continue
+            out[i * bn + dl] += float(blk_w[i, e]) * x[int(blk_src[i, e])]
+    return out
+
+
+def horner_push_blocked_ref(ku, xu, d, blk_src, blk_dstl, blk_w, tau,
+                            *, n: int, l_max: int, bn: int,
+                            slab_start: int = 0,
+                            slab_size: int | None = None,
+                            d_offset: int | None = None) -> np.ndarray:
+    """Blocked-layout mirror of the device Horner push, float64.
+
+    Same contract as ``single_source.horner_push`` with gather=None
+    over a slab whose frontier is the slab itself. Returns
+    (B, slab_size) float64.
+    """
+    slab_size = n if slab_size is None else slab_size
+    d_offset = slab_start if d_offset is None else d_offset
+    B, W = ku.shape
+    NB = blk_src.shape[0]
+    n_pad = NB * bn
+    ls = np.where(ku == INT32_PAD_KEY, -1, ku // n)
+    ks = np.clip(ku % n, 0, n - 1)
+    contrib = xu.astype(np.float64) * np.asarray(d, np.float64)[
+        np.clip(ks - d_offset, 0, len(d) - 1)]
+    k_loc = ks - slab_start
+    in_slab = (k_loc >= 0) & (k_loc < slab_size)
+    contrib = np.where(in_slab, contrib, 0.0)
+    k_loc = np.clip(k_loc, 0, slab_size - 1)
+
+    def seed(l):
+        z = np.zeros((n_pad, B), np.float64)
+        sel = np.where(ls == l, contrib, 0.0)
+        for b in range(B):
+            np.add.at(z[:, b], k_loc[b], sel[b])
+        return z
+
+    acc = np.zeros((n_pad, B), np.float64)
+    for l in range(l_max, -1, -1):
+        xp = np.where(acc > tau, acc, 0.0)
+        acc = blocked_spmv_ref(xp, blk_src, blk_dstl, blk_w, bn) + seed(l)
+    return acc[:slab_size].T

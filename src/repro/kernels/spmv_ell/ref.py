@@ -16,11 +16,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 
 def spmm_ref(x, edge_src, edge_dst, w, n: int):
     """Plain segment-sum reference (any edge order)."""
     msgs = x[edge_src] * w[:, None]
-    return jax.ops.segment_sum(msgs, edge_dst, num_segments=n)
+    return compat.segment_sum(msgs, edge_dst, num_segments=n)
 
 
 def spmm_block_ref(x, blk_src, blk_dst_local, blk_w, n: int, bn: int):

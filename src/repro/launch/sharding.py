@@ -179,6 +179,9 @@ def sling_index_specs(axis: str = "data") -> dict[str, P]:
         "blk_src": row,      # (n_shards, edge_cap) dst-partitioned edges
         "blk_dstl": row,
         "blk_w": row,
+        # (n_shards, NB_loc, pblk_cap) per-shard dest-block-grouped
+        # edges for the Pallas push backend (kernels/horner_push)
+        "pblk": P((axis,), None, None),
         "queries": P(),      # (B,) query ids: replicated
     }
 

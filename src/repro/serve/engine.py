@@ -106,6 +106,13 @@ class EngineConfig:
     k_buckets: tuple[int, ...] = (1, 16, 64, 256)
     cache_size: int = 256        # LRU entries across all query types
     pair_backend: str = "auto"   # "auto" | "join" | "pallas"
+    # Horner-push backend for single-source/top-k (DESIGN.md §11):
+    # "lax" | "pallas" | "auto" ("auto" defers to the process-wide
+    # switch in repro.kernels.horner_push, which itself defaults to
+    # pallas on TPU and lax elsewhere). Resolved once at engine
+    # construction so a long-lived engine never flips programs
+    # mid-traffic.
+    push_backend: str = "auto"
     # hot-swap shape stability (DESIGN.md section 7): device arrays are
     # padded to capacity buckets with this headroom, so a repaired
     # index whose packed width or edge count grew a little swaps in
@@ -135,6 +142,10 @@ class QueryEngine:
             backend = ("pallas" if jax.default_backend() == "tpu"
                        else "join")
         self._pair_backend = backend
+        from repro.kernels.horner_push import resolve_push_backend
+        self._push_backend = resolve_push_backend(
+            None if self.cfg.push_backend == "auto"
+            else self.cfg.push_backend)
         self._cache = _LRU(self.cfg.cache_size)
         self._shapes: set = set()
         # warmup dispatches prime shapes but are not traffic: they
@@ -151,6 +162,8 @@ class QueryEngine:
         self._width_cap = self._bucket(index.hp.width)
         self._edge_cap = self._bucket(g.m)
         self._shard_edge_cap = 0     # set by the first sharded install
+        self._pblk_cap = 0           # pallas blocked-layout width bucket
+        self._shard_pblk_cap = 0
         self._install(index, g)
         assert index.n >= 1
 
@@ -195,6 +208,24 @@ class QueryEngine:
             # blocks and the pair join reads only keys/vals/d -- the
             # single-device edge arrays would be dead device memory
             self._edge_src = self._edge_dst = self._w = None
+        self._blk_src = self._blk_dstl = self._blk_w = None
+        if self._push_backend == "pallas" and self.cfg.mesh is None:
+            # blocked edge layout for the fused push kernel, padded to
+            # its own capacity bucket (an eb multiple: the chunk count
+            # is part of the compiled grid shape)
+            from repro.kernels.horner_push import ops as hp_ops
+            self._pblk_bn = hp_ops.DEFAULT_BN
+            self._pblk_eb = hp_ops.DEFAULT_EB
+            req = hp_ops.required_block_width(g, bn=self._pblk_bn)
+            cap = max(self._pblk_cap, self._bucket(req))
+            cap = -(-cap // self._pblk_eb) * self._pblk_eb
+            self._pblk_cap = cap
+            bs, bdl, bw = hp_ops.graph_block_layout(
+                g, index.plan.sqrt_c, bn=self._pblk_bn,
+                eb=self._pblk_eb, width_floor=cap)
+            self._blk_src = jnp.asarray(bs)
+            self._blk_dstl = jnp.asarray(bdl)
+            self._blk_w = jnp.asarray(bw)
         self._tau = jnp.float32(prune_tau(index.plan))
         if self._pair_backend == "pallas":
             from repro.kernels.hp_join.ops import fold_sqrt_d
@@ -219,8 +250,11 @@ class QueryEngine:
                 width_cap=self._width_cap,
                 edge_cap=self._shard_edge_cap,
                 cap_quantum=self.cfg.cap_quantum,
-                headroom=self.cfg.swap_headroom)
+                headroom=self.cfg.swap_headroom,
+                push_backend=self._push_backend,
+                pblk_cap=self._shard_pblk_cap)
             self._shard_edge_cap = self._sharded.edge_cap
+            self._shard_pblk_cap = self._sharded.pblk_cap
             self._width_cap = max(self._width_cap,
                                   self._sharded.width_cap)
         self.index = index
@@ -272,6 +306,20 @@ class QueryEngine:
             req = shard_query.required_edge_cap(
                 g, self._sharded.n_shards, self._sharded.n_loc)
             if req > self._shard_edge_cap:
+                recompiles += 1
+            if self._push_backend == "pallas":
+                p_req = shard_query.required_pblk_width(
+                    g, self._sharded.n_shards, self._sharded.n_loc,
+                    self._sharded.bn)
+                if p_req > self._shard_pblk_cap:
+                    recompiles += 1
+        elif self._push_backend == "pallas":
+            # blocked-layout bucket: E_pad is part of the pallas grid
+            # shape, so a per-node-block width overflow recompiles even
+            # when the total edge count still fits self._edge_cap
+            from repro.kernels.horner_push import ops as hp_ops
+            p_req = hp_ops.required_block_width(g, bn=self._pblk_bn)
+            if self._bucket(p_req) > self._pblk_cap:
                 recompiles += 1
         self._install(index, g)
         dropped = self.invalidate(affected)
@@ -385,7 +433,18 @@ class QueryEngine:
             if self._sharded is not None:
                 from repro.core import shard_query
                 out[lo:lo + B] = shard_query.sharded_single_source(
-                    self._sharded, us_p[lo:lo + B])
+                    self._sharded, us_p[lo:lo + B],
+                    backend=self._push_backend)
+            elif self._push_backend == "pallas":
+                from repro.core.single_source import \
+                    batched_single_source_pallas
+                out[lo:lo + B] = np.asarray(batched_single_source_pallas(
+                    self._keys, self._vals, self._d, self._blk_src,
+                    self._blk_dstl, self._blk_w,
+                    jnp.asarray(us_p[lo:lo + B]), self._tau,
+                    n=self.index.n, l_max=self.index.plan.l_max,
+                    bn=self._pblk_bn, eb=self._pblk_eb,
+                    interpret=jax.default_backend() != "tpu"))
             else:
                 out[lo:lo + B] = np.asarray(batched_single_source(
                     self._keys, self._vals, self._d, self._edge_src,
@@ -407,7 +466,17 @@ class QueryEngine:
             if self._sharded is not None:
                 from repro.core import shard_query
                 v, i = shard_query.sharded_topk(
-                    self._sharded, us_p[lo:lo + B], bucket)
+                    self._sharded, us_p[lo:lo + B], bucket,
+                    backend=self._push_backend)
+            elif self._push_backend == "pallas":
+                from repro.core.topk import batched_topk_pallas
+                v, i = batched_topk_pallas(
+                    self._keys, self._vals, self._d, self._blk_src,
+                    self._blk_dstl, self._blk_w,
+                    jnp.asarray(us_p[lo:lo + B]), self._tau,
+                    self.index.n, self.index.plan.l_max, bucket,
+                    self._pblk_bn, self._pblk_eb,
+                    interpret=jax.default_backend() != "tpu")
             else:
                 v, i = batched_topk(
                     self._keys, self._vals, self._d, self._edge_src,
@@ -419,7 +488,10 @@ class QueryEngine:
         return sv[:len(us)], si[:len(us)]
 
     def _shape_tag(self, *shape):
-        """Dispatch-shape key; sharded programs are distinct shapes."""
+        """Dispatch-shape key; sharded programs and the two push
+        backends are distinct compiled programs, hence distinct
+        shapes."""
+        shape = shape + (self._push_backend,)
         if self._sharded is not None:
             return shape + ("mesh", self._sharded.n_shards)
         return shape
@@ -594,6 +666,7 @@ class QueryEngine:
             "knn_attached": self._knn is not None,
             "unique_shapes": sorted(self._shapes),
             "pair_backend": self._pair_backend,
+            "push_backend": self._push_backend,
             "mesh_shards": (self._sharded.n_shards
                             if self._sharded is not None else 0),
         }

@@ -27,6 +27,14 @@ from repro.graph import csr, generators
 # float32 accumulation in the device paths
 SLACK = 1e-5
 
+# Horner-push backends under differential test. "pallas" runs the
+# fused kernel (kernels/horner_push) in interpret mode on CPU CI --
+# same grid, same assertions; additionally the two backends must agree
+# to float32 reduction-order tolerance (BACKEND_ATOL) on identical
+# inputs, a much tighter bond than the planned-eps envelope.
+BACKENDS = ("lax", "pallas")
+BACKEND_ATOL = 1e-5
+
 
 def exact_simrank(g: csr.Graph, c: float) -> np.ndarray:
     """(n, n) float64 ground truth, within ~1e-9 (Lemma 1)."""

@@ -19,6 +19,7 @@ import oracle
 
 from repro.core import build, shard_query, single_source
 from repro.core.single_source import (single_source_batch,
+                                      single_source_device,
                                       single_source_horner,
                                       single_source_paper)
 from repro.core.topk import topk_device, topk_host
@@ -94,6 +95,60 @@ def test_topk_within_planned_eps(name, c, eps):
             # approximate score)
             assert np.all(S[u][si[i]] >= truth[-1] - 2 * tol)
             np.testing.assert_allclose(sv[i], S[u][si[i]], atol=tol)
+
+
+# ----------------------------------------------------------------------
+# push-backend differential: the fused Pallas kernel over the same grid
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("backend", oracle.BACKENDS)
+@pytest.mark.parametrize("c,eps", SETTINGS)
+@pytest.mark.parametrize("name", CASES)
+def test_push_backends_within_planned_eps(name, c, eps, backend):
+    """Both Horner-push backends, full zoo x c grid: within planned
+    eps of the oracle AND float32-agreement between backends (the
+    Pallas kernel's blocked reduction may only differ from the lax
+    segment-sum by reduction order)."""
+    g, idx, S = _cell(name, c, eps)
+    tol = oracle.tolerance(idx.plan)
+    us = np.unique(np.array([0, 1, g.n // 2, g.n - 1], np.int32))
+    got = single_source_device(idx, g, us, backend=backend)
+    for i, u in enumerate(us.tolist()):
+        assert np.abs(got[i] - S[u]).max() <= tol
+    ref = single_source_device(idx, g, us, backend="lax")
+    assert np.abs(got - ref).max() <= oracle.BACKEND_ATOL
+
+
+@pytest.mark.parametrize("backend", oracle.BACKENDS)
+def test_public_paths_once_per_backend(backend):
+    """Every public query path -- source, top-k, sharded fan-out
+    (mesh 1), bulk join -- produces oracle-consistent answers under
+    the selected push backend, and both backends agree on ids."""
+    from repro.join import JoinConfig, run_join
+    g, idx, S = _cell("powerlaw", 0.6, 0.1)
+    tol = oracle.tolerance(idx.plan)
+    us = np.array([0, 3, g.n - 1], np.int32)
+    k = 10
+    # fused top-k
+    sv, sid = topk_device(idx, g, us, k, backend=backend)
+    for i, u in enumerate(us.tolist()):
+        truth = np.sort(S[u])[::-1][:k]
+        np.testing.assert_allclose(sv[i], truth, atol=tol)
+        np.testing.assert_allclose(sv[i], S[u][sid[i]], atol=tol)
+    # sharded fan-out at mesh size 1
+    mesh = shard_query.serving_mesh(1)
+    si = shard_query.shard_index(idx, g, mesh, push_backend=backend)
+    sh = shard_query.sharded_single_source(si, us, backend=backend)
+    for i, u in enumerate(us.tolist()):
+        assert np.abs(sh[i] - S[u]).max() <= tol
+    mv, _ = shard_query.sharded_topk(si, us, k, backend=backend)
+    np.testing.assert_allclose(mv, sv, atol=oracle.BACKEND_ATOL)
+    # bulk join over the same sources
+    knn = run_join(idx, g, us, JoinConfig(k=k, tile=4,
+                                          push_backend=backend))
+    for i, u in enumerate(us.tolist()):
+        row = slice(int(knn.indptr[i]), int(knn.indptr[i + 1]))
+        np.testing.assert_allclose(knn.nbr_scores[row],
+                                   np.sort(S[u])[::-1][:k], atol=tol)
 
 
 def test_topk_host_reference_matches_oracle():

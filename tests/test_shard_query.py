@@ -98,8 +98,9 @@ def test_sling_index_specs_cover_the_state():
     assert s["keys"] == P(("data",), None)
     assert s["d"] == P(("data",))
     assert s["queries"] == P()
+    assert s["pblk"] == P(("data",), None, None)
     assert set(s) == {"keys", "vals", "d", "blk_src", "blk_dstl",
-                      "blk_w", "queries"}
+                      "blk_w", "pblk", "queries"}
 
 
 # ----------------------------------------------------------------------
