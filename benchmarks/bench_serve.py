@@ -1,23 +1,98 @@
-"""Serving-path smoke/latency benchmark: all three query types through
-the unified QueryEngine on one graph. This is the regression guard for
-engine latency (scripts/ci.sh runs it on n=500 via ``run.py --smoke``).
+"""Serving benchmarks: engine latency guard + the SLO-aware frontend
+under power-law load.
+
+Two layers (EXPERIMENTS.md "Serving under load"):
+
+  * **engine** -- all three query types through the synchronous
+    ``QueryEngine`` on one graph; the long-standing regression guard
+    for engine latency and the zero-recompile-after-warmup gate
+    (scripts/ci.sh runs it via ``run.py --smoke``).
+  * **frontend** -- a Zipf(s) closed-loop burst through
+    ``ServeFrontend`` (production clock, worker-thread dispatch):
+    reports p50/p99 admission-to-result latency, shed rate, mean batch
+    occupancy, and saturation throughput per skew exponent and replica
+    count. Smoke gates: zero recompiles across the whole frontend
+    (union of replica shapes) and zero shed at generous deadlines.
+
+Every row also lands as a structured row; the frontend/engine rows of
+this module are additionally snapshotted to a versioned
+``BENCH_serve.json`` so ``run.py --compare BENCH_serve.json`` diffs
+serving latency/throughput across PRs.
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks import common
+from benchmarks.common import emit, emit_row, timeit
 from repro.core import build
 from repro.graph import generators
-from repro.serve import EngineConfig, QueryEngine
+from repro.serve import (EngineConfig, FrontendConfig, QueryEngine,
+                         ServeFrontend, zipf_nodes)
+
+
+def _frontend_burst(idx, g, *, n: int, s: float, n_q: int,
+                    replicas: int, batch: int, timeout: float,
+                    kind: str = "source", k: int = 10):
+    """One closed-loop Zipf(s) burst; returns (new_shapes, shed)."""
+    fe = ServeFrontend(idx, g, FrontendConfig(
+        max_batch=batch, max_pair_batch=max(batch, 16),
+        max_wait=0.002, replicas=replicas, routing="least_loaded",
+        engine=EngineConfig(source_batch=batch,
+                            pair_batch=max(batch, 16))))
+    try:
+        fe.warmup()
+        shapes0 = len(fe.stats()["unique_shapes"])
+        us = zipf_nodes(g.n, n_q, s=s, seed=1)
+        vs = zipf_nodes(g.n, n_q, s=s, seed=2)
+        t0 = time.perf_counter()
+        if kind == "pair":
+            tickets = [fe.submit_pair(int(u), int(v), timeout=timeout)
+                       for u, v in zip(us, vs)]
+        elif kind == "topk":
+            tickets = [fe.submit_topk(int(u), k, timeout=timeout)
+                       for u in us]
+        else:
+            tickets = [fe.submit_source(int(u), timeout=timeout)
+                       for u in us]
+        fe.flush()
+        fe.drain(timeout=120.0)
+        wall = time.perf_counter() - t0
+        st = fe.stats()
+        grew = len(st["unique_shapes"]) - shapes0
+        lat = np.asarray([t.latency for t in tickets if not t.shed])
+        shed = st["shed"]
+        p50 = 1e6 * float(np.percentile(lat, 50)) if len(lat) else float("nan")
+        p99 = 1e6 * float(np.percentile(lat, 99)) if len(lat) else float("nan")
+        emit_row(
+            f"serve/frontend/{kind}/zipf={s:g}/r={replicas}", n=n,
+            backend=st["per_replica"][0]["push_backend"],
+            mesh=max(1, st["per_replica"][0]["mesh_shards"]),
+            wall_us=1e6 * wall / n_q, throughput=n_q / wall,
+            derived=f"p50 {p50:.0f}us p99 {p99:.0f}us "
+                    f"shed {shed}/{n_q}",
+            p50_us=p50, p99_us=p99,
+            shed_rate=shed / max(1, st["admitted"]),
+            occupancy=st["mean_occupancy"], replicas=replicas,
+            recompiles=grew)
+        return grew, shed
+    finally:
+        fe.close()
 
 
 def run(n: int = 500, eps: float = 0.1, n_q: int = 32,
-        batch: int = 8, k: int = 10):
+        batch: int = 8, k: int = 10, smoke: bool = False):
+    jstart = len(common.JROWS)
     g = generators.barabasi_albert(n, 4, seed=0, directed=False)
     t = timeit(lambda: build.build_index(g, eps=eps, seed=0), repeat=1)
     emit(f"serve/build_index/n={n}", t, "preprocess")
     idx = build.build_index(g, eps=eps, seed=0)
+
+    # ------------------------------------------------------------------
+    # engine layer: per-query latency + the zero-recompile guard
+    # ------------------------------------------------------------------
     eng = QueryEngine(idx, g, EngineConfig(
         pair_batch=max(batch, 16), source_batch=batch, cache_size=0))
     warm = eng.warmup()
@@ -40,3 +115,26 @@ def run(n: int = 500, eps: float = 0.1, n_q: int = 32,
     emit(f"serve/recompiles_after_warmup/n={n}", float(grew),
          "must be 0")
     assert grew == 0, "engine recompiled after warmup"
+
+    # ------------------------------------------------------------------
+    # frontend layer: Zipf bursts (the run.py --smoke frontend gate)
+    # ------------------------------------------------------------------
+    skews = (1.2,) if smoke else (0.0, 1.2)
+    replica_counts = (2,) if smoke else (1, 2)
+    for s in skews:
+        for r in replica_counts:
+            grew, shed = _frontend_burst(
+                idx, g, n=n, s=s, n_q=n_q, replicas=r, batch=batch,
+                timeout=60.0)
+            # generous deadlines: nothing may shed, nothing may compile
+            assert grew == 0, f"frontend recompiled (zipf={s}, r={r})"
+            assert shed == 0, f"shed {shed} at generous deadlines"
+    if not smoke:
+        # tight-deadline shed-rate row (reported, not asserted: the
+        # shed fraction depends on host speed)
+        _frontend_burst(idx, g, n=n, s=1.2, n_q=n_q, replicas=1,
+                        batch=batch, timeout=0.002)
+        _frontend_burst(idx, g, n=n, s=1.2, n_q=n_q, replicas=2,
+                        batch=batch, timeout=60.0, kind="topk", k=k)
+
+    common.write_json("serve", rows=common.JROWS[jstart:])

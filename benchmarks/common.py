@@ -1,8 +1,11 @@
-"""Shared benchmark helpers."""
+"""Shared benchmark helpers: timing, CSV rows, and the versioned
+structured-row store behind ``BENCH_<mode>.json`` + ``run.py
+--compare`` (EXPERIMENTS.md "Perf trajectory")."""
 from __future__ import annotations
 
 import json
 import os
+import re
 import time
 
 import numpy as np
@@ -22,19 +25,54 @@ def timeit(fn, repeat: int = 3, number: int = 1):
 ROWS: list[tuple[str, float, str]] = []
 
 
-def emit(name: str, us: float, derived: str = "") -> None:
-    ROWS.append((name, us, derived))
-    print(f"{name},{us:.1f},{derived}")
-
-
 # ----------------------------------------------------------------------
 # structured rows: the machine-readable twin of emit(), collected into
-# a versioned BENCH_<mode>.json by run.py so backend/mesh comparisons
-# (lax vs pallas rows) survive as data, not just CSV stdout
+# a versioned BENCH_<mode>.json by run.py so results survive as data,
+# not just CSV stdout. EVERY emit() records one -- benches that only
+# print CSV still land in the JSON (their n/backend/mesh fields are
+# parsed out of the row name) -- so --compare covers every bench mode,
+# not just the backend-comparison benches that call emit_row directly.
 # ----------------------------------------------------------------------
-BENCH_SCHEMA_VERSION = 1
+BENCH_SCHEMA_VERSION = 2
 
 JROWS: list[dict] = []
+
+_NAME_FIELDS = (("n", re.compile(r"/n=(\d+)(?=/|$)"), int, 0),
+                ("backend", re.compile(r"/backend=(\w+)(?=/|$)"), str,
+                 "host"),
+                ("mesh", re.compile(r"/mesh=(\d+)(?=/|$)"), int, 1))
+
+
+def _row_from_name(name: str, us: float, derived: str) -> dict:
+    """Best-effort structured row parsed from a CSV row name: the
+    ``/n=300``-style segments become fields and are stripped from the
+    bench id so keys line up across runs and graph sizes stay a field,
+    not part of the identity string."""
+    bench = name
+    fields = {}
+    for key, rx, typ, default in _NAME_FIELDS:
+        m = rx.search(bench)
+        if m:
+            fields[key] = typ(m.group(1))
+            bench = rx.sub("", bench, count=1)
+        else:
+            fields[key] = default
+    return {
+        "schema": BENCH_SCHEMA_VERSION,
+        "bench": bench,
+        **fields,
+        "wall": None if us != us else float(us),
+        "throughput": None,
+        "derived": derived,
+    }
+
+
+def emit(name: str, us: float, derived: str = "", *,
+         structured: bool = True) -> None:
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}")
+    if structured:
+        JROWS.append(_row_from_name(name, us, derived))
 
 
 def emit_row(bench: str, *, n: int, backend: str, mesh: int,
@@ -43,10 +81,11 @@ def emit_row(bench: str, *, n: int, backend: str, mesh: int,
     """Record one structured benchmark row and print its CSV twin.
 
     Schema (BENCH_SCHEMA_VERSION): ``bench`` (measurement id), ``n``
-    (graph size), ``backend`` ("lax" | "pallas"), ``mesh`` (shard
-    count, 1 = single device), ``wall`` (microseconds, NaN for
+    (graph size), ``backend`` ("lax" | "pallas" | "host"), ``mesh``
+    (shard count, 1 = single device), ``wall`` (microseconds, NaN for
     trace-only rows), ``throughput`` (per-second rate, None when the
-    row has no natural rate). Extra keys ride along unvalidated.
+    row has no natural rate). Extra keys ride along unvalidated
+    (bench_serve uses them for p50/p99/shed_rate/occupancy).
     """
     row = {
         "schema": BENCH_SCHEMA_VERSION,
@@ -62,16 +101,93 @@ def emit_row(bench: str, *, n: int, backend: str, mesh: int,
     JROWS.append(row)
     if not derived and throughput is not None:
         derived = f"{throughput:.0f}/s"
-    emit(f"{bench}/backend={backend}/mesh={mesh}/n={n}", wall_us, derived)
+    emit(f"{bench}/backend={backend}/mesh={mesh}/n={n}", wall_us,
+         derived, structured=False)
 
 
-def write_json(mode: str, path: str | None = None) -> str:
-    """Write accumulated structured rows to ``BENCH_<mode>.json``."""
+def write_json(mode: str, path: str | None = None,
+               rows: list[dict] | None = None) -> str:
+    """Write structured rows (default: all accumulated) to
+    ``BENCH_<mode>.json``."""
     if path is None:
         repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
         path = os.path.join(repo, f"BENCH_{mode}.json")
-    doc = {"schema": BENCH_SCHEMA_VERSION, "mode": mode, "rows": JROWS}
+    rows = JROWS if rows is None else rows
+    doc = {"schema": BENCH_SCHEMA_VERSION, "mode": mode, "rows": rows}
     with open(path, "w") as f:
         json.dump(doc, f, indent=1)
-    print(f"# wrote {len(JROWS)} structured rows -> {path}")
+    print(f"# wrote {len(rows)} structured rows -> {path}")
     return path
+
+
+# ----------------------------------------------------------------------
+# cross-PR regression compare (run.py --compare OLD.json)
+# ----------------------------------------------------------------------
+def _row_key(row: dict) -> tuple:
+    return (row.get("bench"), row.get("n"), row.get("backend"),
+            row.get("mesh"))
+
+
+def compare_rows(old_rows: list[dict], new_rows: list[dict],
+                 slow_ratio: float = 1.5) -> list[dict]:
+    """Diff two row sets on the (bench, n, backend, mesh) identity.
+
+    For every identity present in both, compares ``wall`` (lower is
+    better) and ``throughput`` (higher is better); a ``wall`` ratio
+    above ``slow_ratio`` -- or a throughput ratio below its inverse --
+    marks the row REGRESSED. Returns the regressed comparison records;
+    prints the full diff table as ``# compare`` CSV lines (identity,
+    old, new, ratio, status) plus a summary with new/vanished
+    identities. Micro-benchmark walls jitter, hence the generous
+    default ratio -- this is a trajectory guard, not a 5% gate.
+    """
+    old = {_row_key(r): r for r in old_rows}
+    new = {_row_key(r): r for r in new_rows}
+    regressed: list[dict] = []
+    compared = 0
+    for key in new:
+        if key not in old:
+            continue
+        o, nrow = old[key], new[key]
+        for field, higher_is_better in (("wall", False),
+                                        ("throughput", True)):
+            ov, nv = o.get(field), nrow.get(field)
+            if ov is None or nv is None or ov <= 0 or nv <= 0:
+                continue
+            compared += 1
+            ratio = nv / ov
+            bad = (ratio < 1.0 / slow_ratio if higher_is_better
+                   else ratio > slow_ratio)
+            status = ("REGRESSED" if bad else
+                      ("improved" if (ratio > 1.0) == higher_is_better
+                       and abs(ratio - 1.0) > 0.05 else "ok"))
+            print(f"# compare,{key[0]},n={key[1]},backend={key[2]},"
+                  f"mesh={key[3]},{field},{ov:.1f},{nv:.1f},"
+                  f"x{ratio:.2f},{status}")
+            if bad:
+                regressed.append({"key": key, "field": field,
+                                  "old": ov, "new": nv, "ratio": ratio})
+    only_new = len(set(new) - set(old))
+    vanished = len(set(old) - set(new))
+    print(f"# compare summary: {compared} measurements diffed, "
+          f"{len(regressed)} regressed (> x{slow_ratio:g}), "
+          f"{only_new} new identities, {vanished} vanished")
+    return regressed
+
+
+def compare_json(old_path: str, new_rows: list[dict] | None = None,
+                 slow_ratio: float = 1.5) -> list[dict]:
+    """Load a prior ``BENCH_<mode>.json`` and diff against ``new_rows``
+    (default: this process's accumulated rows). Refuses rows written
+    by a *future* schema (same forward-compat rule as the index
+    artifacts); older schemas compare fine -- the identity fields have
+    existed since version 1."""
+    with open(old_path) as f:
+        doc = json.load(f)
+    if doc.get("schema", 0) > BENCH_SCHEMA_VERSION:
+        raise ValueError(
+            f"{old_path} was written by schema {doc['schema']}, this "
+            f"build understands <= {BENCH_SCHEMA_VERSION}")
+    return compare_rows(doc.get("rows", []),
+                        JROWS if new_rows is None else new_rows,
+                        slow_ratio=slow_ratio)

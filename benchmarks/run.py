@@ -11,15 +11,23 @@ lax-vs-pallas push equivalence + op-count fusion gates
 zero-recompile-across-tiles join gate (bench_join) -- finishes in ~a
 minute.
 
-Every mode also writes the structured rows to ``BENCH_<mode>.json``
-(schema: bench, n, backend, mesh, wall, throughput; see
-benchmarks.common.emit_row).
+Every mode writes ALL structured rows to ``BENCH_<mode>.json`` --
+every ``emit()`` records one (n/backend/mesh parsed from the row
+name), not just the benches that call ``emit_row`` directly (schema:
+bench, n, backend, mesh, wall, throughput; see benchmarks.common).
+``--compare OLD.json`` is the cross-PR regression mode: after the run
+it diffs this run's wall/throughput against a prior
+``BENCH_<mode>.json`` on the (bench, n, backend, mesh) identity and
+prints ``# compare`` rows; ``--compare-strict`` exits non-zero on any
+regression beyond ``--compare-ratio`` (default 1.5x).
 
     PYTHONPATH=src python -m benchmarks.run [--fast|--smoke] [--only ...]
+    PYTHONPATH=src python -m benchmarks.run --smoke --compare BENCH_smoke.json
 """
 from __future__ import annotations
 
 import argparse
+import sys
 
 
 def main() -> None:
@@ -30,6 +38,15 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: pair,source,preprocess,space,"
                          "accuracy,topk,serve,update,join,roofline")
+    ap.add_argument("--compare", default=None, metavar="OLD.json",
+                    help="diff this run's rows against a prior "
+                         "BENCH_<mode>.json (regression mode)")
+    ap.add_argument("--compare-ratio", type=float, default=1.5,
+                    help="wall ratio (or inverse throughput ratio) "
+                         "beyond which a row counts as REGRESSED")
+    ap.add_argument("--compare-strict", action="store_true",
+                    help="exit non-zero when --compare finds "
+                         "regressions")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -80,7 +97,8 @@ def main() -> None:
             bench_topk.run(n=300)
     if want("serve"):
         from benchmarks import bench_serve
-        bench_serve.run(n=500, n_q=16 if args.smoke else 32)
+        bench_serve.run(n=500, n_q=16 if args.smoke else 32,
+                        smoke=args.smoke)
     if want("update"):
         from benchmarks import bench_update
         if args.smoke:
@@ -108,7 +126,17 @@ def main() -> None:
 
     from benchmarks import common
     mode = "smoke" if args.smoke else ("fast" if args.fast else "full")
+    # compare BEFORE writing: --compare BENCH_<mode>.json (the usual
+    # previous-run path) must diff against the OLD rows, not the file
+    # this run is about to overwrite
+    regressed = []
+    if args.compare:
+        regressed = common.compare_json(args.compare,
+                                        slow_ratio=args.compare_ratio)
     common.write_json(mode)
+    if regressed and args.compare_strict:
+        sys.exit(f"{len(regressed)} benchmark rows regressed "
+                 f"beyond x{args.compare_ratio:g}")
 
 
 if __name__ == "__main__":

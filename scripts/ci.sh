@@ -11,6 +11,12 @@
 # build equivalence plus the diagonal walk-path recompile gate. The
 # mesh pytest suite below covers the sharded-build differential tests
 # (tests/test_build_shard.py) at real shard counts.
+#
+# The serve suite runs the SLO-aware frontend's virtual-clock harness
+# (tests/test_frontend.py) plus the frontend oracle-differential wall
+# under a per-test deadline (the in-tree SIGALRM guard in
+# tests/conftest.py -- a hung scheduler fails fast instead of wedging
+# CI); the forced 2 host devices make the sharded frontend case run.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -31,6 +37,11 @@ echo "== pallas kernel suite (interpret mode, forced 4 host devices) =="
 # composition (mesh-marked cases in the pallas module) execute too
 XLA_FLAGS=--xla_force_host_platform_device_count=4 \
     python -m pytest -x -q -m pallas
+
+echo "== serve suite: frontend virtual-clock harness (2 host devices) =="
+SLING_TEST_DEADLINE=120 \
+XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+    python -m pytest -x -q -m serve
 
 echo "== examples smoke (API drift gate) =="
 # the examples are the public face of the API: run them end to end so

@@ -19,6 +19,17 @@ incremental ``update_index`` and hot-swapped into the live engine
 between query batches, reporting repair time, swap latency, recompile
 count (must stay 0), and the accumulated staleness vs the plan's
 reserve -- including the full-rebuild trigger firing.
+
+``--frontend R`` serves through the async SLO-aware admission layer
+(repro.serve.ServeFrontend, DESIGN.md section 12) instead of calling
+the engine directly: R engine replicas over the one index artifact,
+deadline-aware batch formation (``--max-wait-ms``), per-request
+deadlines with shed-on-expiry (``--deadline-ms``), least-loaded or
+round-robin routing (``--routing``), and a Zipf(``--zipf``) power-law
+query stream -- the realistic millions-of-users shape. Reports
+p50/p99 admission-to-result latency, shed rate, mean batch occupancy,
+and throughput; ``--mutate`` swaps go through the frontend's epoch
+barrier so no dispatched batch mixes epochs.
 """
 from __future__ import annotations
 
@@ -66,6 +77,18 @@ def main() -> None:
                          "theta, the sound operating point)")
     ap.add_argument("--stale-frac", type=float, default=0.2,
                     help="fraction of eps reserved for update staleness")
+    ap.add_argument("--frontend", type=int, default=0, metavar="R",
+                    help="serve through the async SLO-aware frontend "
+                         "with R engine replicas (0 = direct engine)")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="frontend batch-close wait bound")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request deadline; expired requests are "
+                         "shed, not served (0 = no deadline)")
+    ap.add_argument("--zipf", type=float, default=1.1,
+                    help="frontend query-skew exponent (0 = uniform)")
+    ap.add_argument("--routing", default="least_loaded",
+                    choices=("least_loaded", "round_robin"))
     args = ap.parse_args()
     if args.queries < 1 or args.batch < 1:
         ap.error("--queries and --batch must be >= 1")
@@ -90,6 +113,10 @@ def main() -> None:
                             else 0.0)
     print(f"index built in {time.perf_counter() - t0:.1f}s "
           f"({idx.nbytes() / 1e6:.1f} MB)")
+
+    if args.frontend > 0:
+        _frontend_serve(args, g, idx, mesh)
+        return
 
     eng = QueryEngine(idx, g, EngineConfig(
         source_batch=args.batch, pair_batch=max(args.batch, 16),
@@ -133,6 +160,89 @@ def main() -> None:
 
     if args.mutate:
         _mutate_replay(args, g, idx, eng, qs)
+
+
+def _frontend_serve(args, g, idx, mesh) -> None:
+    """Zipf traffic through the SLO-aware frontend (DESIGN.md §12)."""
+    from repro.serve import FrontendConfig, ServeFrontend, zipf_nodes
+    fe = ServeFrontend(idx, g, FrontendConfig(
+        max_batch=args.batch, max_pair_batch=max(args.batch, 16),
+        max_wait=args.max_wait_ms / 1e3,
+        default_timeout=(args.deadline_ms / 1e3
+                         if args.deadline_ms > 0 else None),
+        replicas=args.frontend, routing=args.routing,
+        engine=EngineConfig(source_batch=args.batch,
+                            pair_batch=max(args.batch, 16),
+                            pair_backend=args.pair_backend, mesh=mesh)))
+    warm = fe.warmup()
+    deadline = (f"{args.deadline_ms:g}ms" if args.deadline_ms > 0
+                else "none")
+    print(f"frontend: {args.frontend} replicas, {args.routing} routing, "
+          f"max_wait {args.max_wait_ms}ms, deadline {deadline}, "
+          f"zipf s={args.zipf}")
+    print("warmup (compile priming, max over replicas): "
+          + "  ".join(f"{k}={v:.2f}s" for k, v in warm.items()))
+    us = zipf_nodes(g.n, args.queries, s=args.zipf, seed=args.seed)
+    vs = zipf_nodes(g.n, args.queries, s=args.zipf, seed=args.seed + 1)
+    modes = {"source": ["source"], "pair": ["pair"], "topk": ["topk"],
+             "mixed": ["source", "pair", "topk"]}[args.mode]
+    shapes_before = len(fe.stats()["unique_shapes"])
+    for mode in modes:
+        t0 = time.perf_counter()
+        if mode == "source":
+            tickets = [fe.submit_source(int(u)) for u in us]
+        elif mode == "pair":
+            tickets = [fe.submit_pair(int(u), int(v))
+                       for u, v in zip(us, vs)]
+        else:
+            tickets = [fe.submit_topk(int(u), args.k) for u in us]
+        fe.flush()
+        fe.drain(timeout=120.0)
+        wall = time.perf_counter() - t0
+        lat = [t.latency for t in tickets if not t.shed]
+        shed = sum(t.shed for t in tickets)
+        pct = (_percentiles(lat) if lat else "all shed")
+        print(f"[frontend {mode}] {args.queries} requests: {pct}  "
+              f"shed {shed}/{args.queries}  "
+              f"{args.queries / wall:.0f} req/s")
+    if args.mutate:
+        _frontend_mutate(args, g, idx, fe, us)
+    st = fe.stats()
+    grew = len(st["unique_shapes"]) - shapes_before
+    print(f"frontend: {st['batches']} batches, occupancy "
+          f"{st['mean_occupancy']:.2f}, cache "
+          f"{st['cache_hits']}/{st['cache_hits'] + st['cache_misses']} "
+          f"hits over {st['replicas']} replicas")
+    print(f"compiled shapes: {len(st['unique_shapes'])} total, "
+          f"{grew} new after warmup "
+          f"({'compile-once OK' if grew == 0 else 'RECOMPILED'})")
+    fe.close()
+
+
+def _frontend_mutate(args, g, idx, fe, us) -> None:
+    """Edge-churn replay through the frontend's epoch swap barrier."""
+    m_batch = max(1, int(g.m * args.churn))
+    print(f"\n[mutate] {args.mutate} batches x {m_batch} edges through "
+          f"the frontend swap barrier")
+    for i in range(args.mutate):
+        delta = update.random_delta(g, n_add=m_batch // 2,
+                                    n_del=m_batch - m_batch // 2,
+                                    seed=args.seed + 100 + i)
+        t0 = time.perf_counter()
+        rep = build.update_index(idx, g, delta, seed=args.seed + i,
+                                 theta_r=args.theta_r)
+        t_repair = time.perf_counter() - t0
+        sw = fe.swap_index(idx, rep.graph, affected=rep.affected)
+        g = rep.graph
+        tickets = [fe.submit_source(int(u)) for u in us[:args.batch]]
+        fe.flush()
+        fe.drain(timeout=120.0)
+        sample = tickets[0].result(timeout=10.0)[:3]
+        print(f"[mutate {i}] repair={t_repair * 1e3:.0f}ms "
+              f"swap={sw['swap_ms']:.1f}ms barrier_batches="
+              f"{sw['barrier_batches']} recompiles={sw['recompiles']} "
+              f"epoch={sw['epoch']} "
+              f"sample={np.round(np.asarray(sample), 4)}")
 
 
 def _mutate_replay(args, g, idx, eng, qs) -> None:

@@ -1,4 +1,11 @@
-"""Serving subsystem: the unified SimRank query engine."""
+"""Serving subsystem: the unified SimRank query engine + the async
+SLO-aware admission frontend over it (DESIGN.md sections 6 and 12)."""
+from repro.serve.clock import MonotonicClock, VirtualClock
 from repro.serve.engine import EngineConfig, QueryEngine
+from repro.serve.frontend import (FrontendConfig, ServeFrontend,
+                                  ShedError, Ticket)
+from repro.serve.load import zipf_nodes, zipf_weights
 
-__all__ = ["EngineConfig", "QueryEngine"]
+__all__ = ["EngineConfig", "QueryEngine", "FrontendConfig",
+           "ServeFrontend", "ShedError", "Ticket", "MonotonicClock",
+           "VirtualClock", "zipf_nodes", "zipf_weights"]

@@ -1,5 +1,7 @@
 import os
+import signal
 import sys
+import threading
 
 # tests see ONE device (the dry-run's 512 placeholder devices are set
 # only inside launch/dryrun.py, per the assignment contract)
@@ -26,3 +28,53 @@ def ground_truth(small_graph):
 def sling_index(small_graph):
     from repro.core import build
     return build.build_index(small_graph, eps=0.1, exact_d=True, seed=0)
+
+
+# ----------------------------------------------------------------------
+# per-test deadline guard (pytest-timeout is not in the image, so this
+# is the in-tree equivalent): a SIGALRM-based wall-clock cap so a hung
+# async scheduler -- a timer that never fires, a drain() that never
+# returns -- fails the test with a traceback instead of hanging CI.
+#
+# Sources of a deadline, most specific wins:
+#   * @pytest.mark.deadline(seconds) on the test/module
+#   * SLING_TEST_DEADLINE env var (seconds; scripts/ci.sh sets it for
+#     the serve suite)
+#   * tests carrying the "serve" marker default to 120 s
+# Only active on the main thread of platforms with SIGALRM (pytest
+# runs tests on the main thread; the guard is a no-op elsewhere).
+# ----------------------------------------------------------------------
+SERVE_DEADLINE_DEFAULT_S = 120.0
+
+
+def _test_deadline_s(item) -> float | None:
+    m = item.get_closest_marker("deadline")
+    if m is not None and m.args:
+        return float(m.args[0])
+    env = os.environ.get("SLING_TEST_DEADLINE")
+    if env:
+        return float(env)
+    if item.get_closest_marker("serve") is not None:
+        return SERVE_DEADLINE_DEFAULT_S
+    return None
+
+
+@pytest.hookimpl(wrapper=True)
+def pytest_runtest_call(item):
+    secs = _test_deadline_s(item)
+    if (not secs or not hasattr(signal, "SIGALRM")
+            or threading.current_thread() is not threading.main_thread()):
+        return (yield)
+
+    def _on_alarm(signum, frame):
+        raise TimeoutError(
+            f"test exceeded its {secs:g}s deadline (hung async "
+            "scheduler? see tests/conftest.py deadline guard)")
+
+    old = signal.signal(signal.SIGALRM, _on_alarm)
+    signal.setitimer(signal.ITIMER_REAL, secs)
+    try:
+        return (yield)
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0.0)
+        signal.signal(signal.SIGALRM, old)

@@ -1,0 +1,86 @@
+"""Versioned BENCH_<mode>.json rows + the run.py --compare mode.
+
+The serving acceptance bar: bench_serve's p50/p99/shed rows must
+round-trip through write_json -> compare_json with stable identities,
+and regressions must actually flag.
+"""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import common
+
+
+@pytest.fixture(autouse=True)
+def isolated_rows(monkeypatch):
+    monkeypatch.setattr(common, "JROWS", [])
+    monkeypatch.setattr(common, "ROWS", [])
+
+
+def test_plain_emit_records_structured_row():
+    """Every emit() lands in the JSON store -- benches that never call
+    emit_row still join the --compare trajectory. The n=/backend=/
+    mesh= segments are parsed into fields and stripped from the
+    identity, so the same measurement lines up across runs."""
+    common.emit("fig2/thing/n=300/extra", 12.5, "note")
+    common.emit("serve/warmup/pair/n=500", 7.0)
+    (r1, r2) = common.JROWS
+    assert r1["bench"] == "fig2/thing/extra"
+    assert r1["n"] == 300 and r1["backend"] == "host" and r1["mesh"] == 1
+    assert r1["wall"] == 12.5 and r1["throughput"] is None
+    assert r2["bench"] == "serve/warmup/pair" and r2["n"] == 500
+
+
+def test_emit_row_and_name_parse_share_identity():
+    common.emit_row("join/sweep", n=300, backend="pallas", mesh=2,
+                    wall_us=100.0, throughput=10.0)
+    common.emit("join/sweep/backend=pallas/mesh=2/n=300", 100.0,
+                structured=True)
+    k1, k2 = (common._row_key(r) for r in common.JROWS)
+    assert k1 == k2 == ("join/sweep", 300, "pallas", 2)
+
+
+def test_nan_wall_is_null():
+    common.emit("trace/only/n=10", float("nan"))
+    assert common.JROWS[0]["wall"] is None
+
+
+def test_compare_round_trip_flags_only_real_regressions(tmp_path):
+    common.emit_row("serve/frontend/source/zipf=1.2/r=2", n=500,
+                    backend="lax", mesh=1, wall_us=100.0,
+                    throughput=1000.0, p50_us=90.0, shed_rate=0.0)
+    common.emit("serve/pair/engine/n=500", 55.0)
+    path = common.write_json("unittest", path=str(tmp_path / "old.json"))
+
+    # identical rows: clean diff
+    assert common.compare_json(path) == []
+
+    # 2x slower wall AND halved throughput: both measurements flag
+    slow = [dict(r) for r in common.JROWS]
+    slow[0]["wall"] *= 2.0
+    slow[0]["throughput"] /= 2.0
+    slow[1]["wall"] *= 2.0
+    regressed = common.compare_rows(
+        common.JROWS, slow, slow_ratio=1.5)
+    assert {(r["key"][0], r["field"]) for r in regressed} == {
+        ("serve/frontend/source/zipf=1.2/r=2", "wall"),
+        ("serve/frontend/source/zipf=1.2/r=2", "throughput"),
+        ("serve/pair/engine", "wall")}
+
+    # within the ratio: jitter is not a regression
+    jitter = [dict(r) for r in common.JROWS]
+    jitter[1]["wall"] *= 1.3
+    assert common.compare_rows(common.JROWS, jitter,
+                               slow_ratio=1.5) == []
+
+
+def test_compare_refuses_future_schema(tmp_path):
+    import json
+    p = tmp_path / "future.json"
+    p.write_text(json.dumps(
+        {"schema": common.BENCH_SCHEMA_VERSION + 1, "rows": []}))
+    with pytest.raises(ValueError, match="future|understands"):
+        common.compare_json(str(p))

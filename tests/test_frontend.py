@@ -1,0 +1,421 @@
+"""Deterministic scheduler tests for the SLO-aware serving frontend.
+
+Everything in here runs on the :class:`~repro.serve.VirtualClock` seam
+(except one explicitly-bounded thread-dispatch end-to-end check):
+batch-close timeouts, deadline expiry, and the swap barrier are driven
+by ``clock.advance``, with ZERO ``time.sleep`` anywhere -- the suite
+cannot flake on machine load, and every interleaving replays
+bit-identically. The conftest deadline guard (SIGALRM) converts any
+hung-async regression into a test failure instead of a hung CI job.
+"""
+import numpy as np
+import pytest
+
+from repro.core import build, update
+from repro.serve import (EngineConfig, FrontendConfig, QueryEngine,
+                         ServeFrontend, ShedError, VirtualClock,
+                         zipf_nodes)
+
+pytestmark = pytest.mark.serve
+
+ECFG = EngineConfig(pair_batch=8, source_batch=4, cache_size=64,
+                    k_buckets=(4, 16))
+MAX_WAIT = 0.005
+
+
+def make_frontend(index, g, clock, **over):
+    cfg = dict(max_batch=3, max_pair_batch=4, max_wait=MAX_WAIT,
+               engine=over.pop("engine", ECFG))
+    cfg.update(over)
+    return ServeFrontend(index, g, FrontendConfig(**cfg), clock=clock)
+
+
+# ----------------------------------------------------------------------
+# the clock seam itself
+# ----------------------------------------------------------------------
+def test_virtual_clock_fires_in_order_at_exact_deadlines():
+    clk = VirtualClock()
+    seen = []
+    clk.schedule(0.5, lambda: seen.append(("b", clk.now())))
+    clk.schedule(0.2, lambda: seen.append(("a", clk.now())))
+    h = clk.schedule(0.3, lambda: seen.append(("cancelled", clk.now())))
+    clk.cancel(h)
+    # a callback scheduling inside the advance window fires in the
+    # same advance, at its own deadline
+    clk.schedule(
+        0.1, lambda: clk.schedule(
+            0.25, lambda: seen.append(("nested", clk.now()))))
+    clk.advance(1.0)
+    assert seen == [("a", 0.2), ("nested", 0.35), ("b", 0.5)]
+    assert clk.now() == 1.0
+    assert clk.pending() == 0
+
+
+def test_scheduler_has_no_wall_clock_sleeps():
+    """The determinism claim, enforced: neither the frontend nor the
+    clock seam may ever call time.sleep (blocking waits go through
+    condition variables / events, never polling)."""
+    import inspect
+
+    from repro.serve import clock as clock_mod
+    from repro.serve import frontend as frontend_mod
+    for mod in (frontend_mod, clock_mod):
+        assert "time.sleep(" not in inspect.getsource(mod), mod.__name__
+
+
+# ----------------------------------------------------------------------
+# batch formation: close at size OR wait, whichever first
+# ----------------------------------------------------------------------
+def test_wait_close_fires_at_exactly_max_wait(small_graph, sling_index):
+    clk = VirtualClock()
+    fe = make_frontend(sling_index, small_graph, clk)
+    t = fe.submit_source(3)
+    clk.advance(MAX_WAIT * 0.99)
+    assert not t.done()                      # still inside the window
+    clk.advance(MAX_WAIT * 0.01)
+    assert t.done()
+    rec = fe.batch_log[-1]
+    assert rec.reason == "wait" and rec.closed == pytest.approx(MAX_WAIT)
+    assert t.latency == pytest.approx(MAX_WAIT)
+    fe.close()
+
+
+def test_size_close_fires_immediately_without_advancing(small_graph,
+                                                        sling_index):
+    clk = VirtualClock()
+    fe = make_frontend(sling_index, small_graph, clk)
+    tickets = [fe.submit_source(i) for i in range(3)]   # max_batch = 3
+    assert all(t.done() for t in tickets)    # no clock advance needed
+    assert fe.batch_log[-1].reason == "size"
+    assert fe.batch_log[-1].size == 3
+    # the timer armed by the first admission was cancelled with the
+    # close: advancing past the window must not double-dispatch
+    before = len(fe.batch_log)
+    clk.advance(10 * MAX_WAIT)
+    assert len(fe.batch_log) == before
+    fe.close()
+
+
+def test_batches_never_exceed_size_or_wait(small_graph, sling_index):
+    """The two formation bounds, asserted over every dispatched batch
+    of a bursty mixed-kind stream."""
+    clk = VirtualClock()
+    fe = make_frontend(sling_index, small_graph, clk)
+    rng = np.random.default_rng(7)
+    n = small_graph.n
+    for _ in range(120):
+        r = rng.random()
+        if r < 0.4:
+            fe.submit_source(int(rng.integers(n)))
+        elif r < 0.7:
+            fe.submit_pair(int(rng.integers(n)), int(rng.integers(n)))
+        else:
+            fe.submit_topk(int(rng.integers(n)), int(rng.choice([3, 9])))
+        if rng.random() < 0.5:
+            clk.advance(float(rng.uniform(0, 1.5 * MAX_WAIT)))
+    clk.advance(MAX_WAIT)
+    fe.flush()
+    assert fe.stats()["pending"] == 0
+    assert len(fe.batch_log) > 10
+    for rec in fe.batch_log:
+        assert rec.size <= rec.cap
+        assert rec.closed - rec.opened <= MAX_WAIT + 1e-12
+        if rec.reason == "size":
+            assert rec.size == rec.cap
+        if rec.reason == "wait":
+            assert rec.closed - rec.opened == pytest.approx(MAX_WAIT)
+    fe.close()
+
+
+# ----------------------------------------------------------------------
+# equivalence: any admission interleaving == direct QueryEngine calls
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_any_interleaving_bit_identical_to_direct_engine(
+        seed, small_graph, sling_index):
+    """Property test: a random interleaving of admissions, clock
+    advances, and flushes yields results *bit-identical* to direct
+    (unbatched-by-us) QueryEngine calls -- batching policy must be
+    invisible in the answers."""
+    clk = VirtualClock()
+    fe = make_frontend(sling_index, small_graph, clk)
+    ref = QueryEngine(sling_index, small_graph, ECFG)
+    rng = np.random.default_rng(seed)
+    n = small_graph.n
+    expectations = []           # (ticket, expected value lambda result)
+    for _ in range(60):
+        r = rng.random()
+        if r < 0.35:
+            u = int(rng.integers(n))
+            expectations.append(("source", fe.submit_source(u), u, None))
+        elif r < 0.6:
+            u, v = int(rng.integers(n)), int(rng.integers(n))
+            expectations.append(("pair", fe.submit_pair(u, v), u, v))
+        elif r < 0.8:
+            u = int(rng.integers(n))
+            k = int(rng.choice([3, 9]))
+            expectations.append(("topk", fe.submit_topk(u, k), u, k))
+        elif r < 0.95:
+            clk.advance(float(rng.uniform(0, 2 * MAX_WAIT)))
+        else:
+            fe.flush()
+    clk.advance(MAX_WAIT)
+    fe.flush()
+    assert fe.stats()["shed"] == 0           # no deadlines in this test
+    for kind, ticket, a, b in expectations:
+        assert ticket.done()
+        got = ticket.result()
+        if kind == "source":
+            assert np.array_equal(got, ref.single_source([a])[0])
+        elif kind == "pair":
+            assert got == ref.pair(a, b)
+        else:
+            sv, si = got
+            rv, ri = ref.topk([a], b)
+            assert np.array_equal(sv, rv[0]) and np.array_equal(si, ri[0])
+    fe.close()
+
+
+def test_zero_recompiles_after_warmup(small_graph, sling_index):
+    """The engine's compile-once contract survives the frontend: no
+    traffic pattern through admission/batching may grow the union of
+    compiled shapes after warmup."""
+    clk = VirtualClock()
+    fe = make_frontend(sling_index, small_graph, clk)
+    fe.warmup()
+    before = set(map(tuple, fe.stats()["unique_shapes"]))
+    rng = np.random.default_rng(3)
+    for _ in range(40):
+        fe.submit_source(int(rng.integers(small_graph.n)))
+        fe.submit_pair(int(rng.integers(small_graph.n)), 0)
+        fe.submit_topk(int(rng.integers(small_graph.n)), 9)
+        clk.advance(float(rng.uniform(0, MAX_WAIT)))
+    clk.advance(MAX_WAIT)
+    fe.flush()
+    after = set(map(tuple, fe.stats()["unique_shapes"]))
+    assert after == before, after - before
+    fe.close()
+
+
+# ----------------------------------------------------------------------
+# deadlines: shed, not served
+# ----------------------------------------------------------------------
+def test_expired_request_is_shed_at_its_exact_deadline(small_graph,
+                                                       sling_index):
+    clk = VirtualClock()
+    fe = make_frontend(sling_index, small_graph, clk)
+    t = fe.submit_source(5, timeout=MAX_WAIT / 4)    # expires pre-close
+    clk.advance(MAX_WAIT)
+    assert t.shed
+    assert t.fulfil_t == pytest.approx(MAX_WAIT / 4)  # at the deadline,
+    with pytest.raises(ShedError):                    # not window close
+        t.result()
+    # it never reached a device: nothing was dispatched
+    assert len(fe.batch_log) == 0
+    assert fe.stats()["served"] == 0
+    assert fe.stats()["shed"] == 1
+    fe.close()
+
+
+def test_expired_member_shed_without_poisoning_batchmates(
+        small_graph, sling_index):
+    """One expiring request sheds alone; the survivors dispatch
+    normally at window close."""
+    clk = VirtualClock()
+    fe = make_frontend(sling_index, small_graph, clk)
+    ref = QueryEngine(sling_index, small_graph, ECFG)
+    t_live = fe.submit_source(1)
+    t_dead = fe.submit_source(2, timeout=MAX_WAIT / 2)
+    clk.advance(MAX_WAIT)
+    assert t_dead.shed and not t_live.shed
+    assert np.array_equal(t_live.result(), ref.single_source([1])[0])
+    assert fe.batch_log[-1].size == 1
+    fe.close()
+
+
+def test_nonpositive_timeout_sheds_at_admission(small_graph,
+                                                sling_index):
+    clk = VirtualClock()
+    fe = make_frontend(sling_index, small_graph, clk)
+    t = fe.submit_source(1, timeout=0.0)
+    assert t.shed and t.done()
+    st = fe.stats()
+    assert st["admitted"] == 1 and st["shed"] == 1 and st["pending"] == 0
+    fe.close()
+
+
+def test_default_timeout_applies_when_request_has_none(small_graph,
+                                                       sling_index):
+    clk = VirtualClock()
+    fe = make_frontend(sling_index, small_graph, clk,
+                       default_timeout=MAX_WAIT / 2)
+    t = fe.submit_source(4)
+    clk.advance(MAX_WAIT)
+    assert t.shed
+    fe.close()
+
+
+# ----------------------------------------------------------------------
+# hot-swap: the epoch barrier
+# ----------------------------------------------------------------------
+def test_swap_never_produces_a_mixed_epoch_batch(small_graph):
+    """Mid-traffic swap_index: requests admitted before the barrier
+    serve bit-identically from the OLD index, requests after from the
+    NEW one, and the batch log shows monotone, pure epochs."""
+    g = small_graph
+    idx = build.build_index(g, eps=0.1, seed=0, stale_frac=0.3)
+    clk = VirtualClock()
+    fe = make_frontend(idx, g, clk, replicas=2, routing="round_robin")
+    ref = QueryEngine(idx, g, ECFG)
+    e0 = fe.stats()["epoch"]
+
+    pre_us = [3, 8, 11]
+    pre = [fe.submit_source(u) for u in pre_us]
+    clk.advance(MAX_WAIT)                    # first batch serves now
+    open_t = fe.submit_source(42)            # left OPEN at swap time
+    # reference answers captured BEFORE the index object mutates
+    # (update_index repairs in place)
+    expect_pre = {u: ref.single_source([u])[0].copy()
+                  for u in pre_us + [42]}
+
+    delta = update.random_delta(g, n_add=6, n_del=6, seed=5)
+    rep = build.update_index(idx, g, delta, seed=1)
+    res = fe.swap_index(idx, rep.graph, affected=rep.affected)
+    e1 = res["epoch"]
+    assert e1 == e0 + 1
+    assert res["recompiles"] == 0            # capacity buckets held
+
+    # the open batch was flushed through the barrier at the OLD epoch
+    assert open_t.done()
+    assert np.array_equal(open_t.result(), expect_pre[42])
+    for u, t in zip(pre_us, pre):
+        assert np.array_equal(t.result(), expect_pre[u])
+
+    ref.swap_index(idx, rep.graph, affected=rep.affected)
+    post = [fe.submit_source(u) for u in pre_us]
+    clk.advance(MAX_WAIT)
+    for u, t in zip(pre_us, post):
+        assert np.array_equal(t.result(),
+                              ref.single_source([u])[0])
+
+    epochs = [r.epoch for r in fe.batch_log]
+    assert set(epochs) <= {e0, e1}
+    assert epochs == sorted(epochs), f"mixed/reordered epochs: {epochs}"
+    swap_recs = [r for r in fe.batch_log if r.reason == "swap"]
+    assert swap_recs and all(r.epoch == e0 for r in swap_recs)
+    fe.close()
+
+
+def test_requests_admitted_during_barrier_wait_for_new_epoch(
+        small_graph):
+    """A request that arrives while the frontend is swapping must not
+    close into an old-epoch batch; it dispatches after the barrier at
+    the new epoch. (Single-threaded seam: we emulate 'during the
+    barrier' by admitting between barrier flush and resume via the
+    engine-level swap hook being slow -- here we simply assert the
+    post-swap re-arm path by queueing before the swap with a window
+    that only elapses after it.)"""
+    g = small_graph
+    idx = build.build_index(g, eps=0.1, seed=0, stale_frac=0.3)
+    clk = VirtualClock()
+    fe = make_frontend(idx, g, clk)
+    e0 = fe.stats()["epoch"]
+    t = fe.submit_source(9)                  # open batch, window armed
+    delta = update.random_delta(g, n_add=4, n_del=4, seed=2)
+    rep = build.update_index(idx, g, delta, seed=1)
+    fe.swap_index(idx, rep.graph, affected=rep.affected)
+    # barrier flushed the open batch at e0; nothing pending
+    assert t.done()
+    assert fe.batch_log[-1].epoch == e0
+    t2 = fe.submit_source(9)
+    clk.advance(MAX_WAIT)
+    assert fe.batch_log[-1].epoch == e0 + 1
+    ref = QueryEngine(idx, rep.graph, ECFG)
+    assert np.array_equal(t2.result(), ref.single_source([9])[0])
+    fe.close()
+
+
+# ----------------------------------------------------------------------
+# skewed traffic: PR 5 cache counters through the frontend
+# ----------------------------------------------------------------------
+def _src_hit_rate(index, g, s: float) -> float:
+    clk = VirtualClock()
+    fe = make_frontend(index, g, clk, replicas=1,
+                       engine=EngineConfig(pair_batch=8, source_batch=4,
+                                           cache_size=16))
+    for u in zipf_nodes(g.n, 300, s=s, seed=11):
+        fe.submit_source(int(u))
+        clk.advance(MAX_WAIT / 8)
+    clk.advance(MAX_WAIT)
+    fe.flush()
+    st = fe.stats()
+    hits = st["cache_hits_by_kind"].get("src", 0)
+    misses = st["cache_misses_by_kind"].get("src", 0)
+    assert hits + misses == 300              # every request consulted it
+    fe.close()
+    return hits / (hits + misses)
+
+
+def test_cache_hit_rate_rises_with_zipf_skew(small_graph, sling_index):
+    """The LRU hit-rate counters are only meaningful under the
+    power-law skew real query streams have (PRSim): with the cache an
+    order smaller than the node set, hotter streams must hit more."""
+    rates = [_src_hit_rate(sling_index, small_graph, s)
+             for s in (0.0, 0.8, 1.6)]
+    assert rates[1] >= rates[0]
+    assert rates[2] > rates[0] + 0.15, rates
+
+
+def test_per_replica_stats_aggregate_through_frontend(small_graph,
+                                                      sling_index):
+    clk = VirtualClock()
+    fe = make_frontend(sling_index, small_graph, clk, replicas=3,
+                       routing="round_robin")
+    rng = np.random.default_rng(0)
+    for u in rng.integers(0, small_graph.n, 48):
+        fe.submit_source(int(u))
+    clk.advance(MAX_WAIT)
+    fe.flush()
+    st = fe.stats()
+    reps = st["per_replica"]
+    assert len(reps) == 3
+    # round-robin actually spread the batches
+    assert all(r["batches"] > 0 for r in reps)
+    # aggregation is exactly the per-replica sum, totals and per kind
+    assert st["cache_hits"] == sum(r["cache_hits"] for r in reps)
+    assert st["cache_misses"] == sum(r["cache_misses"] for r in reps)
+    for kind in set().union(*(r["cache_hits_by_kind"] for r in reps)):
+        assert st["cache_hits_by_kind"][kind] == sum(
+            r["cache_hits_by_kind"].get(kind, 0) for r in reps)
+    assert st["served"] == sum(r["source"] for r in reps) == 48
+    fe.close()
+
+
+# ----------------------------------------------------------------------
+# production dispatch mode (real clock, worker threads) -- bounded by
+# the conftest deadline guard; blocking waits only, still no sleeps
+# ----------------------------------------------------------------------
+@pytest.mark.deadline(90)
+def test_thread_dispatch_end_to_end(small_graph, sling_index):
+    fe = ServeFrontend(sling_index, small_graph,
+                       FrontendConfig(max_batch=4, max_wait=0.002,
+                                      replicas=2, engine=ECFG))
+    assert fe.stats()["dispatch"] == "thread"
+    ref = QueryEngine(sling_index, small_graph, ECFG)
+    us = zipf_nodes(small_graph.n, 24, s=1.1, seed=0)
+    tickets = [fe.submit_source(int(u), timeout=60.0) for u in us]
+    fe.flush()
+    fe.drain(timeout=60.0)
+    for u, t in zip(us, tickets):
+        assert np.array_equal(t.result(timeout=10.0),
+                              ref.single_source([int(u)])[0])
+    assert fe.stats()["shed"] == 0
+    fe.close()
+
+
+def test_virtual_clock_refuses_thread_dispatch(small_graph,
+                                               sling_index):
+    with pytest.raises(ValueError, match="inline-only"):
+        ServeFrontend(sling_index, small_graph,
+                      FrontendConfig(dispatch="thread", engine=ECFG),
+                      clock=VirtualClock())

@@ -184,6 +184,88 @@ def test_sharded_paths_against_oracle(n_shards):
 
 
 # ----------------------------------------------------------------------
+# serving frontend: admission/batching must be invisible in the answers
+# ----------------------------------------------------------------------
+def _drive_frontend_vs_engine(backend: str, mesh_shards: int | None):
+    """Push a mixed stream through the async frontend (virtual clock)
+    and assert every answer is bit-identical to a direct QueryEngine
+    call under the same backend/mesh AND within planned eps of the
+    oracle."""
+    from repro.serve import (EngineConfig, FrontendConfig, QueryEngine,
+                             ServeFrontend, VirtualClock)
+    g, idx, S = _cell("powerlaw", 0.6, 0.1)
+    tol = oracle.tolerance(idx.plan)
+    mesh = (shard_query.serving_mesh(mesh_shards)
+            if mesh_shards else None)
+    ecfg = EngineConfig(pair_batch=8, source_batch=4, cache_size=32,
+                        k_buckets=(4, 16), push_backend=backend,
+                        mesh=mesh)
+    clk = VirtualClock()
+    fe = ServeFrontend(idx, g, FrontendConfig(
+        max_batch=3, max_pair_batch=4, max_wait=0.004, engine=ecfg),
+        clock=clk)
+    ref = QueryEngine(idx, g, ecfg)
+    rng = np.random.default_rng(4)
+    todo = []
+    for _ in range(24):
+        r = rng.random()
+        u = int(rng.integers(g.n))
+        if r < 0.4:
+            todo.append(("source", fe.submit_source(u), u, None))
+        elif r < 0.7:
+            v = int(rng.integers(g.n))
+            todo.append(("pair", fe.submit_pair(u, v), u, v))
+        else:
+            todo.append(("topk", fe.submit_topk(u, 9), u, 9))
+        if rng.random() < 0.5:
+            clk.advance(float(rng.uniform(0, 0.006)))
+    clk.advance(0.004)
+    fe.flush()
+    for kind, t, a, b in todo:
+        got = t.result()
+        if kind == "source":
+            assert np.array_equal(got, ref.single_source([a])[0])
+            assert np.abs(got - S[a]).max() <= tol
+        elif kind == "pair":
+            assert got == ref.pair(a, b)
+            assert abs(got - S[a, b]) <= tol
+        else:
+            sv, si = got
+            rv, ri = ref.topk([a], b)
+            assert np.array_equal(sv, rv[0])
+            assert np.array_equal(si, ri[0])
+            np.testing.assert_allclose(sv, np.sort(S[a])[::-1][:b],
+                                       atol=tol)
+    fe.close()
+
+
+@pytest.mark.serve
+@pytest.mark.parametrize("backend", oracle.BACKENDS)
+def test_frontend_bit_identical_per_push_backend(backend):
+    """The frontend joins the oracle wall: under BOTH push backends,
+    frontend answers == direct engine answers bit-for-bit and sit
+    within the planned eps envelope."""
+    _drive_frontend_vs_engine(backend, mesh_shards=None)
+
+
+@pytest.mark.serve
+def test_frontend_bit_identical_sharded_mesh1():
+    """Mesh-1 sharded serving through the frontend (the single-device
+    run of the fan-out programs; real shard counts below)."""
+    _drive_frontend_vs_engine("lax", mesh_shards=1)
+
+
+@pytest.mark.serve
+@pytest.mark.mesh
+def test_frontend_bit_identical_sharded_mesh2():
+    import jax
+    if jax.device_count() < 2:
+        pytest.skip("needs 2 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count)")
+    _drive_frontend_vs_engine("lax", mesh_shards=2)
+
+
+# ----------------------------------------------------------------------
 # regression: duplicate (l, k) keys in a packed row
 # ----------------------------------------------------------------------
 def test_seed_matrix_accumulates_duplicate_keys():
