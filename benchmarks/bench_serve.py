@@ -35,8 +35,13 @@ from repro.serve import (EngineConfig, FrontendConfig, QueryEngine,
 
 def _frontend_burst(idx, g, *, n: int, s: float, n_q: int,
                     replicas: int, batch: int, timeout: float,
-                    kind: str = "source", k: int = 10):
-    """One closed-loop Zipf(s) burst; returns (new_shapes, shed)."""
+                    kind: str = "source", k: int = 10,
+                    slo: str = "generous"):
+    """One closed-loop Zipf(s) burst; returns (new_shapes, shed).
+
+    ``slo`` names the deadline regime in the bench identity so the
+    generous- and tight-deadline runs of the same (kind, zipf, r)
+    stay distinct rows for ``run.py --compare``."""
     fe = ServeFrontend(idx, g, FrontendConfig(
         max_batch=batch, max_pair_batch=max(batch, 16),
         max_wait=0.002, replicas=replicas, routing="least_loaded",
@@ -67,7 +72,8 @@ def _frontend_burst(idx, g, *, n: int, s: float, n_q: int,
         p50 = 1e6 * float(np.percentile(lat, 50)) if len(lat) else float("nan")
         p99 = 1e6 * float(np.percentile(lat, 99)) if len(lat) else float("nan")
         emit_row(
-            f"serve/frontend/{kind}/zipf={s:g}/r={replicas}", n=n,
+            f"serve/frontend/{kind}/zipf={s:g}/r={replicas}/slo={slo}",
+            n=n,
             backend=st["per_replica"][0]["push_backend"],
             mesh=max(1, st["per_replica"][0]["mesh_shards"]),
             wall_us=1e6 * wall / n_q, throughput=n_q / wall,
@@ -133,7 +139,7 @@ def run(n: int = 500, eps: float = 0.1, n_q: int = 32,
         # tight-deadline shed-rate row (reported, not asserted: the
         # shed fraction depends on host speed)
         _frontend_burst(idx, g, n=n, s=1.2, n_q=n_q, replicas=1,
-                        batch=batch, timeout=0.002)
+                        batch=batch, timeout=0.002, slo="tight")
         _frontend_burst(idx, g, n=n, s=1.2, n_q=n_q, replicas=2,
                         batch=batch, timeout=60.0, kind="topk", k=k)
 

@@ -128,6 +128,21 @@ def _row_key(row: dict) -> tuple:
             row.get("mesh"))
 
 
+def _index_rows(rows: list[dict], label: str) -> dict:
+    """Key rows by identity, warning on collapse: a bench that emits
+    two rows with the same (bench, n, backend, mesh) would otherwise
+    silently hide all but the last from the regression gate."""
+    out: dict[tuple, dict] = {}
+    for r in rows:
+        key = _row_key(r)
+        if key in out:
+            print(f"# compare WARNING: duplicate identity {key} in "
+                  f"{label} rows; keeping the last -- earlier rows "
+                  f"are invisible to the regression gate")
+        out[key] = r
+    return out
+
+
 def compare_rows(old_rows: list[dict], new_rows: list[dict],
                  slow_ratio: float = 1.5) -> list[dict]:
     """Diff two row sets on the (bench, n, backend, mesh) identity.
@@ -141,8 +156,8 @@ def compare_rows(old_rows: list[dict], new_rows: list[dict],
     identities. Micro-benchmark walls jitter, hence the generous
     default ratio -- this is a trajectory guard, not a 5% gate.
     """
-    old = {_row_key(r): r for r in old_rows}
-    new = {_row_key(r): r for r in new_rows}
+    old = _index_rows(old_rows, "old")
+    new = _index_rows(new_rows, "new")
     regressed: list[dict] = []
     compared = 0
     for key in new:

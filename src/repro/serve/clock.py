@@ -28,6 +28,7 @@ import heapq
 import itertools
 import threading
 import time
+import traceback
 
 
 class TimerHandle:
@@ -139,12 +140,21 @@ class MonotonicClock:
                     self._cv.wait(delay)
                     continue
                 t = heapq.heappop(self._heap)
-                if t.cancelled:
+                # snapshot fn while holding the lock: cancel() may race
+                # the pop and null out t.fn between our check and call
+                fn = t.fn
+                if t.cancelled or fn is None:
                     continue
-                # run the callback off the lock: it may schedule()
+                # run the callback off the lock: it may schedule().
+                # Swallow callback errors -- one bad (or racing-cancel)
+                # callback must not kill the shared timer thread, or
+                # every later max_wait/deadline timer silently never
+                # fires.
                 self._cv.release()
                 try:
-                    t.fn()
+                    fn()
+                except Exception:
+                    traceback.print_exc()
                 finally:
                     self._cv.acquire()
         finally:

@@ -108,6 +108,12 @@ class Ticket:
                 "request not complete -- advance the clock, flush(), "
                 "or pass a longer timeout")
         if self.shed:
+            # deadline is None when the ticket was shed for a reason
+            # other than expiry (e.g. its batch's worker failed)
+            if self.deadline is None:
+                raise ShedError(
+                    f"{self.kind} request shed before dispatch "
+                    f"(batch failed or frontend shut down)")
             raise ShedError(
                 f"{self.kind} request shed: deadline {self.deadline:.6f} "
                 f"expired before dispatch")
@@ -561,10 +567,15 @@ class ServeFrontend:
             }
 
     def close(self) -> None:
-        """Flush, stop workers, release the clock (if owned)."""
+        """Flush, stop workers, release the clock (if owned).
+
+        ``_closed`` flips *before* the final flush so a racing
+        ``submit`` cannot enqueue a batch behind the worker shutdown
+        sentinel (a ticket admitted there would never be fulfilled)."""
         with self._lock:
             if self._closed:
                 return
+            self._closed = True
         self.flush()
         if self._mode == "thread":
             self.drain(timeout=60.0)
@@ -573,7 +584,6 @@ class ServeFrontend:
             for th in self._workers:
                 th.join(timeout=5.0)
         with self._lock:
-            self._closed = True
             for q in self._queues.values():
                 self._clear_timer_locked(q)
         if self._own_clock:

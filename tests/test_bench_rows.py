@@ -77,6 +77,16 @@ def test_compare_round_trip_flags_only_real_regressions(tmp_path):
                                slow_ratio=1.5) == []
 
 
+def test_compare_warns_when_duplicate_identities_collapse(capsys):
+    """Two rows sharing (bench, n, backend, mesh) would silently hide
+    all but the last from the gate -- compare must say so."""
+    for wall in (100.0, 50.0):
+        common.emit_row("serve/frontend/source/zipf=1.2/r=1", n=500,
+                        backend="lax", mesh=1, wall_us=wall)
+    common.compare_rows(common.JROWS, [dict(r) for r in common.JROWS])
+    assert "duplicate identity" in capsys.readouterr().out
+
+
 def test_compare_refuses_future_schema(tmp_path):
     import json
     p = tmp_path / "future.json"

@@ -63,6 +63,42 @@ def test_scheduler_has_no_wall_clock_sleeps():
         assert "time.sleep(" not in inspect.getsource(mod), mod.__name__
 
 
+def test_monotonic_clock_timer_thread_survives_bad_callbacks():
+    """A raising callback -- or a cancel() racing the fire so the
+    handle's fn is already nulled -- must not kill the single shared
+    timer thread: later timers still fire. (Regression: a dead clock
+    thread silently stops every max_wait/deadline timer.)"""
+    import threading
+
+    from repro.serve.clock import MonotonicClock
+
+    clk = MonotonicClock()
+    try:
+        def boom():
+            raise RuntimeError("buggy callback")
+
+        clk.schedule(0.0, boom)
+        racing = clk.schedule(0.0, boom)
+        racing.fn = None        # cancel() won the race mid-pop
+        fired = threading.Event()
+        clk.schedule(0.01, fired.set)
+        assert fired.wait(5.0), "timer thread died"
+    finally:
+        clk.close()
+
+
+def test_shed_ticket_without_deadline_raises_shed_error():
+    """A deadline-less ticket can still be shed (its batch's worker
+    failed, _fail_unit); result() must raise ShedError, not TypeError
+    from formatting a None deadline."""
+    from repro.serve.frontend import Ticket
+
+    t = Ticket("source", 0.0, None)
+    t._shed(1.0)
+    with pytest.raises(ShedError, match="shed"):
+        t.result(timeout=0)
+
+
 # ----------------------------------------------------------------------
 # batch formation: close at size OR wait, whichever first
 # ----------------------------------------------------------------------
