@@ -38,6 +38,10 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: pair,source,preprocess,space,"
                          "accuracy,topk,serve,update,join,roofline")
+    ap.add_argument("--scale", action="store_true",
+                    help="run the 10^6-node out-of-core space bench "
+                         "(bench_space.run_scale); minutes of wall "
+                         "time, never part of --smoke CI")
     ap.add_argument("--compare", default=None, metavar="OLD.json",
                     help="diff this run's rows against a prior "
                          "BENCH_<mode>.json (regression mode)")
@@ -85,7 +89,14 @@ def main() -> None:
             bench_preprocess.mesh_subprocess(mesh=2, n=240)
     if want("space"):
         from benchmarks import bench_space
-        bench_space.run(sizes=sizes)
+        bench_space.run(sizes=sizes, smoke=args.smoke)
+        if args.scale:
+            # 10^6-node out-of-core build + mmap serving row; also
+            # runs in full mode at 10^5 so the scale path stays
+            # benchmarked without the full-minute 10^6 build
+            bench_space.run_scale(n=1_000_000)
+        elif not (args.smoke or args.fast):
+            bench_space.run_scale(n=100_000)
     if want("accuracy") and not args.smoke:
         from benchmarks import bench_accuracy
         bench_accuracy.run(n=300, n_runs=2 if args.fast else 3)

@@ -43,6 +43,12 @@ SLING_TEST_DEADLINE=120 \
 XLA_FLAGS=--xla_force_host_platform_device_count=2 \
     python -m pytest -x -q -m serve
 
+echo "== scale smoke: 10^5-node out-of-core build under the RSS gate =="
+# subprocess child with an address-space rlimit; asserts the format-v3
+# streaming build + mmap serving stays out-of-core (tests/test_scale.py;
+# the 10^6 variant is benchmarks/run.py --scale, not per-commit)
+python -m pytest -x -q -m scale
+
 echo "== examples smoke (API drift gate) =="
 # the examples are the public face of the API: run them end to end so
 # churn in e.g. EngineConfig/JoinConfig signatures fails CI instead of

@@ -32,10 +32,11 @@ def build_index(g: csr.Graph, eps: float = 0.025, delta: float | None = None,
                 block: int = 256, spill_dir: str | None = None,
                 space_reduce: bool = False, enhance: bool = False,
                 exact_d: bool = False, stale_frac: float = 0.0,
+                quant_frac: float = 0.0,
                 mesh=None, mesh_axis: str = "data",
                 verbose: bool = False) -> SlingIndex:
     p = theory.plan(eps=eps, delta=delta, c=c, n=g.n,
-                    stale_frac=stale_frac)
+                    stale_frac=stale_frac, eps_quant_frac=quant_frac)
     if mesh is not None and not exact_d:
         from repro.core import walks
         walks.check_walk_mesh(mesh, mesh_axis, walks.DEFAULT_CHUNK)
@@ -67,6 +68,76 @@ def build_index(g: csr.Graph, eps: float = 0.025, delta: float | None = None,
         print(f"build_index: d={t1 - t0:.2f}s hp={t2 - t1:.2f}s "
               f"entries={int(hp.counts.sum())} bytes={idx.nbytes()}")
     return idx
+
+
+def approx_diagonal_degree(g: csr.Graph, c: float) -> np.ndarray:
+    """O(n) degree-based diagonal approximation for the scale path.
+
+    Eq. 15: d_k = 1 - c/|I(k)| - c * mu_k with mu_k the mean pair
+    SimRank of k's in-neighbors; dropping the mu_k term gives
+    d_k ~= 1 - c/|I(k)| (1.0 for in-degree 0). This is NOT certified
+    by Theorem 1 -- the walk estimator's eps_d bound does not apply --
+    so it is reserved for the million-node mechanics benches and the
+    scale smoke test, where the gate is memory/latency, not the eps
+    certificate (``build_index_scale(d_mode="exact"/"estimate")``
+    keeps the certified paths).
+    """
+    deg = np.maximum(g.in_deg, 1).astype(np.float64)
+    d = np.where(g.in_deg > 0, 1.0 - c / deg, 1.0)
+    return d.astype(np.float32)
+
+
+def build_index_scale(g: csr.Graph, path: str, eps: float = 0.1,
+                      delta: float | None = None, c: float = 0.6,
+                      seed: int = 0, quant_frac: float = 0.2,
+                      quantize: str | None = "int16",
+                      d_mode: str = "degree", block: int = 4096,
+                      spill_dir: str | None = None,
+                      row_chunk: int = 1 << 16,
+                      verbose: bool = False) -> dict:
+    """Out-of-core build straight to a format-v3 file (DESIGN.md
+    section 13): sparse pure-NumPy HP propagation
+    (:func:`~repro.core.hp_index.build_hp_table_sparse`'s driver)
+    feeding ``pack_coo_to_v3`` -- the packed (n, width) arrays never
+    materialize in RAM, so a 10^6-node power-law index builds and
+    saves inside the scale smoke test's peak-RSS gate, then serves
+    via ``SlingIndex.load(path, mmap=True)``.
+
+    ``d_mode``: "degree" (O(n) uncertified approximation, the scale
+    default -- see :func:`approx_diagonal_degree`), "estimate" (Alg 4
+    walks, certified, O(n * walks)), or "exact" (O(n^3)-ish, tiny
+    graphs only). Returns the ``pack_coo_to_v3`` stats dict plus
+    build wall times.
+    """
+    from repro.core.index import pack_coo_to_v3
+
+    p = theory.plan(eps=eps, delta=delta, c=c, n=g.n,
+                    eps_quant_frac=quant_frac)
+    t0 = time.perf_counter()
+    if d_mode == "exact":
+        d = diagonal.exact_diagonal(g, c).astype(np.float32)
+    elif d_mode == "estimate":
+        d = diagonal.estimate_diagonal(g, p, seed=seed)
+    elif d_mode == "degree":
+        d = approx_diagonal_degree(g, c)
+    else:
+        raise ValueError(f"unknown d_mode {d_mode!r}")
+    t1 = time.perf_counter()
+    sink = hp_index._CooSink(spill_dir, tag="hp_scale")
+    hp_index.sparse_hp_coo(g, p.theta, p.sqrt_c, p.l_max, block, sink,
+                           progress=verbose)
+    src, key, val = sink.collect()
+    t2 = time.perf_counter()
+    stats = pack_coo_to_v3(path, p, d, src, key, val, g.n,
+                           quantize=quantize, row_chunk=row_chunk)
+    t3 = time.perf_counter()
+    stats.update(d_mode=d_mode, d_wall_s=t1 - t0, hp_wall_s=t2 - t1,
+                 pack_wall_s=t3 - t2)
+    if verbose:
+        print(f"build_index_scale: d={t1 - t0:.2f}s hp={t2 - t1:.2f}s "
+              f"pack={t3 - t2:.2f}s entries={stats['entries']} "
+              f"bytes={stats['bytes']}")
+    return stats
 
 
 def update_index(idx: SlingIndex, g: csr.Graph, delta,

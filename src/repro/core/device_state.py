@@ -82,9 +82,12 @@ def _get(key: tuple, fingerprint: tuple, build, owners) -> object:
 def index_arrays(idx) -> IndexArrays:
     """Cached upload of the packed index (keys/vals/d)."""
     def build():
+        # vals_f32: quantized indexes dequantize at upload, so every
+        # compiled consumer sees fp32 regardless of storage scheme
         return IndexArrays(
-            keys=jnp.asarray(idx.hp.keys), vals=jnp.asarray(idx.hp.vals),
-            d=jnp.asarray(idx.d.astype(np.float32)))
+            keys=jnp.asarray(np.asarray(idx.hp.keys)),
+            vals=jnp.asarray(idx.vals_f32()),
+            d=jnp.asarray(np.asarray(idx.d, np.float32)))
 
     return _get(("index", id(idx)), _index_fingerprint(idx), build, (idx,))
 

@@ -483,6 +483,100 @@ def build_hp_table(g: csr.Graph, theta: float, sqrt_c: float,
     return _pack_coo(src, key, val, n, width, theta, sqrt_c, l_max)
 
 
+# ----------------------------------------------------------------------
+# sparse pure-NumPy build (million-node scale, DESIGN.md section 13)
+# ----------------------------------------------------------------------
+def _sparse_block_coo(g: csr.Graph, b0: int, b1: int, theta: float,
+                      sqrt_c: float, l_max: int):
+    """Alg 2 for seed block [b0, b1) with the frontier kept *sparse*.
+
+    Same prune-then-push recurrence as :func:`_propagate_block_coo`
+    (strict ``> theta`` prune, pull weight sqrt_c / in_deg(dst)), but
+    the frontier is (node, col, val) triples instead of a dense
+    (n, B) slab -- the dense build's per-block footprint is O(n * B)
+    regardless of sparsity, which is exactly what stops it at ~10^5
+    nodes. Values accumulate in float64 and are pruned as float32 so
+    entries match the dense build away from the theta boundary (float
+    summation order differs, so entries with value == theta +/- 1 ulp
+    may differ; tests/test_scale.py bounds the discrepancy).
+    """
+    B = b1 - b0
+    out_ptr = g.out_ptr.astype(np.int64)
+    out_idx = g.out_idx
+    inv_in = sqrt_c / np.maximum(g.in_deg, 1).astype(np.float64)
+    node = np.arange(b0, b1, dtype=np.int64)
+    col = np.arange(B, dtype=np.int64)
+    val = np.ones(B, np.float64)
+    srcs, keys, vals = [], [], []
+    for l in range(l_max + 1):
+        v32 = val.astype(np.float32)
+        keep = v32 > theta
+        node, col, v32 = node[keep], col[keep], v32[keep]
+        if not len(node):
+            break
+        srcs.append(node.astype(np.int32))
+        keys.append((np.int64(l) * g.n + b0 + col).astype(np.int32))
+        vals.append(v32)
+        if l == l_max:
+            break
+        # push the *pruned* frontier one step: ragged gather of each
+        # node's out-edges, then a sorted-key segment sum on (dst, col)
+        starts = out_ptr[node]
+        lens = out_ptr[node + 1] - starts
+        total = int(lens.sum())
+        if total == 0:
+            break
+        flat = (np.arange(total, dtype=np.int64)
+                - np.repeat(np.cumsum(lens) - lens, lens)
+                + np.repeat(starts, lens))
+        dst = out_idx[flat].astype(np.int64)
+        contrib = np.repeat(v32.astype(np.float64), lens) * inv_in[dst]
+        group = dst * B + np.repeat(col, lens)
+        order = np.argsort(group, kind="stable")
+        group = group[order]
+        cuts = np.flatnonzero(np.diff(group)) + 1
+        g_starts = np.concatenate([[0], cuts])
+        val = np.add.reduceat(contrib[order], g_starts)
+        heads = group[g_starts]
+        node, col = heads // B, heads % B
+    return (np.concatenate(srcs) if srcs else np.zeros(0, np.int32),
+            np.concatenate(keys) if keys else np.zeros(0, np.int32),
+            np.concatenate(vals) if vals else np.zeros(0, np.float32))
+
+
+def sparse_hp_coo(g: csr.Graph, theta: float, sqrt_c: float,
+                  l_max: int, block: int, sink: "_CooSink",
+                  progress: bool = False) -> None:
+    """Drive :func:`_sparse_block_coo` over all seed blocks into a
+    ``_CooSink`` -- the shared front half of the in-RAM sparse build
+    and the streaming v3 scale path (``build.build_index_scale``)."""
+    n = g.n
+    assert (l_max + 1) * n < 2**31 - 1, "int32 key space exceeded"
+    for b0 in range(0, n, block):
+        b1 = min(b0 + block, n)
+        sink.add(b0, *_sparse_block_coo(g, b0, b1, theta, sqrt_c,
+                                        l_max))
+        if progress and (b0 // block) % 8 == 0:
+            print(f"  sparse hp block {b0}/{n}")
+
+
+def build_hp_table_sparse(g: csr.Graph, theta: float, sqrt_c: float,
+                          l_max: int, block: int = 2048,
+                          width: int | None = None,
+                          spill_dir: str | None = None,
+                          progress: bool = False) -> HPTable:
+    """Sparse-frontier twin of :func:`build_hp_table` (pure NumPy, no
+    device work): entries match the dense build except at the theta
+    prune boundary (see :func:`_sparse_block_coo`). This is the build
+    that scales past ~10^5 nodes -- footprint is O(live entries), not
+    O(n * block)."""
+    sink = _CooSink(spill_dir, tag="hp_sparse")
+    sparse_hp_coo(g, theta, sqrt_c, l_max, block, sink,
+                  progress=progress)
+    src, key, val = sink.collect()
+    return _pack_coo(src, key, val, g.n, width, theta, sqrt_c, l_max)
+
+
 def shard_build_hp(g: csr.Graph, theta: float, sqrt_c: float,
                    l_max: int, mesh, axis: str = "data",
                    block: int = 256, width: int | None = None,

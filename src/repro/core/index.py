@@ -1,4 +1,5 @@
-"""The SLING index object and single-pair queries (Algorithm 3).
+"""The SLING index object, single-pair queries (Alg 3), and the
+on-disk artifact formats.
 
 Index = { d~_k for all k }  +  packed HP table { H(v) for all v }.
 
@@ -11,11 +12,26 @@ join, O(|H(u)| + |H(v)|) = O(1/eps):
   * ``query_pairs``      -- batched device path: vmapped searchsorted
     join, the TPU-idiomatic realization (DESIGN.md section 2); also
     available as a Pallas kernel in repro.kernels.hp_join.
+
+On disk (INDEX_FORMAT.md): **format v3** is a raw-array container --
+magic + version + JSON header + 64-byte-aligned fixed-width arrays --
+so ``load(mmap=True)`` is O(1) zero-copy (np.memmap views; replicas
+and frontend engines share the page cache) and ``pack_coo_to_v3``
+can stream a million-node build to disk chunk-by-chunk without ever
+materializing the packed (n, width) fp32 arrays. v1/v2 ``.npz``
+archives still load (sniffed by magic); both versions enforce the
+same compat rules: refuse files from a *future* version, refuse
+unknown plan/array fields rather than silently dropping them.
+Quantized artifacts (core/quantize.py) carry their ``QuantInfo`` in
+the header; vals stay codes in memory and serving dequantizes at
+install/upload time (``vals_f32``).
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import os
+import struct
 from functools import partial
 
 import jax
@@ -23,10 +39,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hp_index, theory
+from repro.core import quantize as quantization
 from repro.core.hp_index import INT32_PAD_KEY, HPTable
+from repro.core.quantize import QuantInfo
 
 
-FORMAT_VERSION = 2  # on-disk layout version; rules in INDEX_FORMAT.md
+FORMAT_VERSION = 3  # on-disk layout version; rules in INDEX_FORMAT.md
+V3_MAGIC = b"SLINGIDX"
+_V3_ALIGN = 64
+# every array member a v3 file may carry; anything else is refused
+_V3_MEMBERS = ("d", "keys", "vals", "counts", "reduced", "marks")
+_V3_HEADER_KEYS = {"plan", "stale", "epoch", "quant", "arrays"}
 
 
 @dataclasses.dataclass
@@ -41,10 +64,35 @@ class SlingIndex:
     # incremental-maintenance state (core/update.py, DESIGN.md section 7)
     stale: float = 0.0     # staleness charged against plan.eps_stale
     epoch: int = 0         # bumped by every applied update batch
+    # quantization recipe when hp.vals are int16/bf16 codes
+    # (core/quantize.py); None = fp32 index
+    quant: QuantInfo | None = None
 
     @property
     def n(self) -> int:
         return self.hp.n
+
+    # ------------------------------------------------------------------
+    # fp32 views over possibly-quantized storage
+    # ------------------------------------------------------------------
+    def vals_f32(self, row: int | None = None) -> np.ndarray:
+        """HP vals as fp32 -- the one dequantization seam every serving
+        consumer goes through (engine install, device upload, shard
+        padding, host queries). No-copy for fp32 indexes."""
+        v = self.hp.vals if row is None else self.hp.vals[row]
+        if self.quant is None:
+            return np.asarray(v, np.float32)
+        return quantization.dequantize_vals(np.asarray(v), self.quant)
+
+    def dequantized_hp(self) -> HPTable:
+        """An fp32-vals HPTable view (self.hp itself when not
+        quantized); keys/counts are shared either way."""
+        if self.quant is None:
+            return self.hp
+        return HPTable(n=self.hp.n, width=self.hp.width,
+                       keys=self.hp.keys, vals=self.vals_f32(),
+                       counts=self.hp.counts, theta=self.hp.theta,
+                       sqrt_c=self.hp.sqrt_c, l_max=self.hp.l_max)
 
     # ------------------------------------------------------------------
     # host single-pair query (Alg 3, merge join)
@@ -54,7 +102,7 @@ class SlingIndex:
         (section 5.2) and on-the-fly enhancement (section 5.3)."""
         cnt = int(self.hp.counts[v])
         keys = self.hp.keys[v, :cnt].astype(np.int64)
-        vals = self.hp.vals[v, :cnt].astype(np.float64)
+        vals = self.vals_f32(v)[:cnt].astype(np.float64)
         if self.reduced is not None and self.reduced[v]:
             assert g is not None, "reduced index needs the graph at query time"
             from repro.core import optimizations
@@ -110,80 +158,469 @@ class SlingIndex:
     def nbytes(self) -> int:
         return self.hp.nbytes() + self.d.nbytes
 
-    def save(self, path: str) -> None:
-        """Persist in the versioned layout specified by INDEX_FORMAT.md."""
-        meta = dataclasses.asdict(self.plan)
-        meta["_format_version"] = FORMAT_VERSION
-        meta["_stale"] = float(self.stale)
-        meta["_epoch"] = int(self.epoch)
-        np.savez_compressed(
-            path, d=self.d, keys=self.hp.keys, vals=self.hp.vals,
-            counts=self.hp.counts,
-            reduced=(self.reduced if self.reduced is not None
-                     else np.zeros(0, bool)),
-            marks=(self.marks if self.marks is not None
-                   else np.zeros((0, 0), np.int32)),
-            meta=json.dumps(meta))
+    def save(self, path: str, version: int = FORMAT_VERSION) -> None:
+        """Persist in the versioned layout specified by INDEX_FORMAT.md.
+
+        ``version=3`` (default) writes the raw-array container;
+        ``version=2`` writes the legacy ``.npz`` archive (fp32 indexes
+        only -- the v2 layout has no quantization slots). Both writers
+        are atomic: tmp file + ``os.replace``, so a crash mid-save
+        never leaves a torn artifact at ``path``.
+        """
+        if version == 3:
+            _save_v3(self, path)
+        elif version == 2:
+            if self.quant is not None:
+                raise ValueError("format v2 cannot carry a quantized "
+                                 "index; save as v3 (INDEX_FORMAT.md)")
+            _save_v2(self, path)
+        else:
+            raise ValueError(f"cannot write format v{version}; this "
+                             f"build writes v2 and v3")
 
     @staticmethod
-    def load(path: str) -> "SlingIndex":
+    def load(path: str, mmap: bool = False,
+             validate: bool | None = None) -> "SlingIndex":
         """Inverse of :meth:`save`, enforcing INDEX_FORMAT.md's compat
         rules: files from version <= FORMAT_VERSION load (missing plan
         fields take their dataclass defaults -- additive evolution
         only); files from a *newer* version are refused rather than
-        silently misread."""
-        z = np.load(path, allow_pickle=False)
-        meta = json.loads(str(z["meta"]))
-        version = meta.pop("_format_version", 1)
+        silently misread, as are unknown plan fields and unknown v3
+        array members.
+
+        ``mmap=True`` (v3 only) returns read-only np.memmap views --
+        O(1) regardless of index size, replicas share pages. Packed-row
+        invariant validation is O(n * width), so ``validate`` defaults
+        to ``not mmap``: eager loads keep the full check, mmap loads
+        stay O(1) (pass ``validate=True`` to force the scan; header
+        shape/truncation checks run always).
+        """
+        with open(path, "rb") as f:
+            magic = f.read(8)
+        if magic[:8] == V3_MAGIC:
+            return _load_v3(path, mmap=mmap, validate=validate)
+        if magic[:2] == b"PK":  # zip archive: the v1/v2 .npz layout
+            if mmap:
+                raise ValueError(
+                    "v1/v2 .npz archives cannot be memory-mapped; "
+                    "re-save as format v3 first (INDEX_FORMAT.md)")
+            return _load_v2(path,
+                            validate=True if validate is None else validate)
+        raise ValueError(f"{path} is not a SLING index artifact "
+                         "(bad magic; see INDEX_FORMAT.md)")
+
+
+# ----------------------------------------------------------------------
+# shared validation
+# ----------------------------------------------------------------------
+def _check_shapes(n, width, d, vals, counts):
+    if d.shape != (n,) or vals.shape != (n, width) \
+            or counts.shape != (n,):
+        raise ValueError("index arrays are inconsistent: "
+                         f"keys {(n, width)} d {d.shape} "
+                         f"vals {vals.shape} counts {counts.shape}")
+
+
+def _validate_packed(plan: theory.SlingPlan, n: int, width: int,
+                     keys: np.ndarray, counts: np.ndarray) -> None:
+    """The packed-row invariants INDEX_FORMAT.md tells readers they
+    may rely on: live prefix within width, strictly increasing live
+    keys, every live key decoding to l <= l_max, k < n."""
+    if counts.size and (counts.min() < 0 or counts.max() > width):
+        raise ValueError("counts outside [0, width] "
+                         "(INDEX_FORMAT.md invariants)")
+    live = np.arange(width)[None, :] < counts[:, None]
+    key_cap = np.int64(plan.l_max + 1) * np.int64(n)
+    if np.any(live & ((keys < 0) | (keys.astype(np.int64) >= key_cap))):
+        raise ValueError("live key outside [0, (l_max+1)*n) "
+                         "(INDEX_FORMAT.md invariants)")
+    if width > 1 and np.any(
+            (np.arange(1, width)[None, :] < counts[:, None])
+            & (np.diff(keys.astype(np.int64), axis=1) <= 0)):
+        raise ValueError("row keys not strictly increasing over "
+                         "the live prefix (INDEX_FORMAT.md "
+                         "invariants)")
+
+
+def _parse_plan(meta: dict) -> theory.SlingPlan:
+    known = {f.name for f in dataclasses.fields(theory.SlingPlan)}
+    # INDEX_FORMAT.md rules 3/4: unknown *plan* fields are refused
+    # (a silently dropped knob would misreport the error budget),
+    # but underscore-prefixed metadata is additive -- a same-major
+    # newer writer may add e.g. `_created_at` and the file must
+    # still load.
+    unknown = {k for k in meta if not k.startswith("_")} - known
+    if unknown:
+        raise ValueError(f"index plan has unknown fields {unknown}; "
+                         "refusing to drop them (INDEX_FORMAT.md)")
+    return theory.SlingPlan(**{k: v for k, v in meta.items()
+                               if k in known})
+
+
+# ----------------------------------------------------------------------
+# legacy v2 .npz reader/writer
+# ----------------------------------------------------------------------
+def _save_v2(idx: SlingIndex, path: str) -> None:
+    path = os.fspath(path)
+    meta = dataclasses.asdict(idx.plan)
+    meta["_format_version"] = 2
+    meta["_stale"] = float(idx.stale)
+    meta["_epoch"] = int(idx.epoch)
+    tmp = path + ".tmp.npz"
+    np.savez_compressed(
+        tmp, d=idx.d, keys=idx.hp.keys, vals=idx.hp.vals,
+        counts=idx.hp.counts,
+        reduced=(idx.reduced if idx.reduced is not None
+                 else np.zeros(0, bool)),
+        marks=(idx.marks if idx.marks is not None
+               else np.zeros((0, 0), np.int32)),
+        meta=json.dumps(meta))
+    os.replace(tmp, path)
+
+
+def _load_v2(path: str, validate: bool = True) -> SlingIndex:
+    z = np.load(path, allow_pickle=False)
+    meta = json.loads(str(z["meta"]))
+    version = meta.pop("_format_version", 1)
+    if version > FORMAT_VERSION:
+        raise ValueError(
+            f"index file is format v{version}, this build reads "
+            f"<= v{FORMAT_VERSION} (see INDEX_FORMAT.md)")
+    stale = meta.pop("_stale", 0.0)
+    epoch = meta.pop("_epoch", 0)
+    plan = _parse_plan(meta)
+    n, width = z["keys"].shape
+    _check_shapes(n, width, z["d"], z["vals"], z["counts"])
+    if validate:
+        _validate_packed(plan, n, width, z["keys"], z["counts"])
+    hp = HPTable(n=n, width=width, keys=z["keys"], vals=z["vals"],
+                 counts=z["counts"], theta=plan.theta,
+                 sqrt_c=plan.sqrt_c, l_max=plan.l_max)
+    reduced = z["reduced"] if z["reduced"].size else None
+    marks = z["marks"] if z["marks"].size else None
+    return SlingIndex(plan=plan, d=z["d"], hp=hp, reduced=reduced,
+                      marks=marks, stale=stale, epoch=epoch)
+
+
+# ----------------------------------------------------------------------
+# format v3: magic + version + JSON header + aligned raw arrays
+#
+#   bytes [0, 8)    : b"SLINGIDX"
+#   bytes [8, 12)   : uint32 LE format version
+#   bytes [12, 16)  : uint32 LE header JSON length H
+#   bytes [16, 16+H): header JSON (utf-8)
+#   data section    : starts at align64(16 + H); each array begins at
+#                     data_start + arrays[name]["offset"] (offsets are
+#                     relative to the data section and 64-byte aligned,
+#                     so memmap views are cacheline/SIMD aligned)
+# ----------------------------------------------------------------------
+def _align64(x: int) -> int:
+    return (x + _V3_ALIGN - 1) & ~(_V3_ALIGN - 1)
+
+
+def _dtype_str(dt) -> str:
+    dt = np.dtype(dt)
+    if dt.kind == "V" or dt.name == "bfloat16":
+        return "bfloat16"
+    return dt.str
+
+
+def _dtype_from_str(s: str):
+    if s == "bfloat16":
+        info = QuantInfo(scheme="bf16", scale=1.0, bound=0.0)
+        return quantization.vals_dtype(info)
+    return np.dtype(s)
+
+
+class V3Writer:
+    """Incremental format-v3 writer: declare the array table up front,
+    fill members (whole or chunk-by-chunk through ``array()`` memmap
+    views), then ``finalize()`` -- which fsyncs and atomically renames
+    the tmp file into place. ``abort()`` (or a crash) leaves no torn
+    artifact at the destination path."""
+
+    def __init__(self, path: str, plan: theory.SlingPlan,
+                 specs: dict[str, tuple], stale: float = 0.0,
+                 epoch: int = 0, quant: QuantInfo | None = None):
+        self.path = path = os.fspath(path)
+        self.tmp = path + ".tmp"
+        arrays = {}
+        off = 0
+        for name, (dt, shape) in specs.items():
+            if name not in _V3_MEMBERS:
+                raise ValueError(f"unknown v3 array member {name!r}")
+            nbytes = int(np.prod(shape, dtype=np.int64)
+                         * np.dtype(dt).itemsize)
+            arrays[name] = {"dtype": _dtype_str(dt),
+                            "shape": [int(s) for s in shape],
+                            "offset": off}
+            off = _align64(off + nbytes)
+        header = {
+            "plan": dataclasses.asdict(plan),
+            "stale": float(stale),
+            "epoch": int(epoch),
+            "quant": None if quant is None else quant.to_meta(),
+            "arrays": arrays,
+        }
+        blob = json.dumps(header).encode()
+        self._data_start = _align64(16 + len(blob))
+        self._specs = {k: (np.dtype(_dtype_from_str(v["dtype"])),
+                           tuple(v["shape"]), v["offset"])
+                       for k, v in arrays.items()}
+        total = self._data_start + off
+        with open(self.tmp, "wb") as f:
+            f.write(struct.pack("<8sII", V3_MAGIC, FORMAT_VERSION,
+                                len(blob)))
+            f.write(blob)
+            f.truncate(max(total, self._data_start))
+        self._mm: dict[str, np.memmap] = {}
+
+    def array(self, name: str) -> np.memmap:
+        """Writable view of one member (created lazily; every element
+        must be written before finalize -- the file is zero-filled, not
+        PAD-filled, underneath)."""
+        if name not in self._mm:
+            dt, shape, off = self._specs[name]
+            self._mm[name] = np.memmap(
+                self.tmp, dtype=dt, mode="r+",
+                offset=self._data_start + off, shape=shape)
+        return self._mm[name]
+
+    def finalize(self) -> None:
+        for mm in self._mm.values():
+            mm.flush()
+        self._mm.clear()
+        fd = os.open(self.tmp, os.O_RDWR)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+        os.replace(self.tmp, self.path)
+
+    def abort(self) -> None:
+        self._mm.clear()
+        if os.path.exists(self.tmp):
+            os.remove(self.tmp)
+
+
+def _save_v3(idx: SlingIndex, path: str) -> None:
+    hp = idx.hp
+    specs = {
+        "d": (np.int16 if (idx.quant is not None
+                           and idx.quant.d_scale > 0) else np.float32,
+              (hp.n,)),
+        "keys": (np.int32, (hp.n, hp.width)),
+        "vals": (np.asarray(hp.vals).dtype, (hp.n, hp.width)),
+        "counts": (np.asarray(hp.counts).dtype, (hp.n,)),
+    }
+    if idx.reduced is not None:
+        specs["reduced"] = (np.bool_, idx.reduced.shape)
+    if idx.marks is not None:
+        specs["marks"] = (np.int32, idx.marks.shape)
+    w = V3Writer(path, idx.plan, specs, stale=idx.stale,
+                 epoch=idx.epoch, quant=idx.quant)
+    try:
+        if idx.quant is not None and idx.quant.d_scale > 0:
+            w.array("d")[:] = quantization.quantize_d_codes(
+                idx.d, idx.quant)
+        else:
+            w.array("d")[:] = np.asarray(idx.d, np.float32)
+        w.array("keys")[:] = hp.keys
+        w.array("vals")[:] = hp.vals
+        w.array("counts")[:] = hp.counts
+        if idx.reduced is not None:
+            w.array("reduced")[:] = idx.reduced
+        if idx.marks is not None:
+            w.array("marks")[:] = idx.marks
+        w.finalize()
+    except BaseException:
+        w.abort()
+        raise
+
+
+def _read_v3_header(path: str):
+    size = os.path.getsize(path)
+    with open(path, "rb") as f:
+        pre = f.read(16)
+        if len(pre) < 16:
+            raise ValueError(f"{path}: truncated v3 preamble")
+        magic, version, hlen = struct.unpack("<8sII", pre)
+        if magic != V3_MAGIC:
+            raise ValueError(f"{path}: bad v3 magic")
         if version > FORMAT_VERSION:
             raise ValueError(
                 f"index file is format v{version}, this build reads "
                 f"<= v{FORMAT_VERSION} (see INDEX_FORMAT.md)")
-        stale = meta.pop("_stale", 0.0)
-        epoch = meta.pop("_epoch", 0)
-        known = {f.name for f in dataclasses.fields(theory.SlingPlan)}
-        # INDEX_FORMAT.md rules 3/4: unknown *plan* fields are refused
-        # (a silently dropped knob would misreport the error budget),
-        # but underscore-prefixed metadata is additive -- a same-major
-        # newer writer may add e.g. `_created_at` and the file must
-        # still load.
-        unknown = {k for k in meta if not k.startswith("_")} - known
-        if unknown:
-            raise ValueError(f"index plan has unknown fields {unknown}; "
-                             "refusing to drop them (INDEX_FORMAT.md)")
-        plan = theory.SlingPlan(**{k: v for k, v in meta.items()
-                                   if k in known})
-        n, width = z["keys"].shape
-        if z["d"].shape != (n,) or z["vals"].shape != (n, width) \
-                or z["counts"].shape != (n,):
-            raise ValueError("index arrays are inconsistent: "
-                             f"keys {z['keys'].shape} d {z['d'].shape} "
-                             f"vals {z['vals'].shape} counts {z['counts'].shape}")
-        # the packed-row invariants INDEX_FORMAT.md tells readers they
-        # may rely on: live prefix within width, strictly increasing
-        # live keys, every live key decoding to l <= l_max, k < n
-        counts, keys = z["counts"], z["keys"]
-        if counts.min() < 0 or counts.max() > width:
-            raise ValueError("counts outside [0, width] "
-                             "(INDEX_FORMAT.md invariants)")
-        live = np.arange(width)[None, :] < counts[:, None]
-        key_cap = np.int64(plan.l_max + 1) * np.int64(n)
-        if np.any(live & ((keys < 0) | (keys.astype(np.int64) >= key_cap))):
-            raise ValueError("live key outside [0, (l_max+1)*n) "
-                             "(INDEX_FORMAT.md invariants)")
-        if width > 1 and np.any(
-                (np.arange(1, width)[None, :] < counts[:, None])
-                & (np.diff(keys.astype(np.int64), axis=1) <= 0)):
-            raise ValueError("row keys not strictly increasing over "
-                             "the live prefix (INDEX_FORMAT.md "
-                             "invariants)")
-        hp = HPTable(n=n, width=width, keys=z["keys"], vals=z["vals"],
-                     counts=z["counts"], theta=plan.theta,
-                     sqrt_c=plan.sqrt_c, l_max=plan.l_max)
-        reduced = z["reduced"] if z["reduced"].size else None
-        marks = z["marks"] if z["marks"].size else None
-        return SlingIndex(plan=plan, d=z["d"], hp=hp, reduced=reduced,
-                          marks=marks, stale=stale, epoch=epoch)
+        if 16 + hlen > size:
+            raise ValueError(f"{path}: truncated v3 header")
+        try:
+            header = json.loads(f.read(hlen).decode())
+        except (UnicodeDecodeError, json.JSONDecodeError) as e:
+            raise ValueError(f"{path}: corrupt v3 header ({e})") from e
+    unknown = {k for k in header
+               if not k.startswith("_")} - _V3_HEADER_KEYS
+    if unknown:
+        raise ValueError(f"{path}: unknown v3 header fields "
+                         f"{sorted(unknown)}; refusing to drop them "
+                         "(INDEX_FORMAT.md)")
+    return header, _align64(16 + hlen), size
+
+
+def _load_v3(path: str, mmap: bool,
+             validate: bool | None) -> SlingIndex:
+    header, data_start, size = _read_v3_header(path)
+    plan = _parse_plan(dict(header.get("plan", {})))
+    quant = (None if header.get("quant") is None
+             else QuantInfo.from_meta(header["quant"]))
+    arrays_meta = header.get("arrays", {})
+    unknown = set(arrays_meta) - set(_V3_MEMBERS)
+    if unknown:
+        raise ValueError(f"{path}: unknown v3 array members "
+                         f"{sorted(unknown)}; refusing to drop them "
+                         "(INDEX_FORMAT.md)")
+    for req in ("d", "keys", "vals", "counts"):
+        if req not in arrays_meta:
+            raise ValueError(f"{path}: v3 file is missing required "
+                             f"array {req!r}")
+    arrays: dict[str, np.ndarray] = {}
+    for name, spec in arrays_meta.items():
+        dt = _dtype_from_str(spec["dtype"])
+        shape = tuple(int(s) for s in spec["shape"])
+        nbytes = int(np.prod(shape, dtype=np.int64)) * np.dtype(dt).itemsize
+        off = data_start + int(spec["offset"])
+        if off + nbytes > size:
+            raise ValueError(f"{path}: array {name!r} extends past "
+                             "end of file (truncated artifact)")
+        if nbytes == 0:
+            arrays[name] = np.zeros(shape, dt)
+        elif mmap:
+            arrays[name] = np.memmap(path, dtype=dt, mode="r",
+                                     offset=off, shape=shape)
+        else:
+            with open(path, "rb") as f:
+                f.seek(off)
+                arrays[name] = np.fromfile(
+                    f, dtype=dt,
+                    count=int(np.prod(shape, dtype=np.int64))
+                ).reshape(shape)
+    n, width = arrays["keys"].shape
+    d = arrays["d"]
+    if quant is not None:
+        if np.asarray(arrays["vals"]).dtype != quantization.vals_dtype(quant):
+            raise ValueError(f"{path}: quantized vals dtype "
+                             f"{arrays['vals'].dtype} does not match "
+                             f"scheme {quant.scheme!r}")
+        if quant.d_scale > 0:
+            # diagonal codes dequantize at load: n * 4 bytes, and every
+            # d consumer (device upload, host joins) stays fp32
+            d = quantization.dequantize_array(np.asarray(d), "int16",
+                                              quant.d_scale)
+    _check_shapes(n, width, d, arrays["vals"], arrays["counts"])
+    if validate is None:
+        validate = not mmap
+    if validate:
+        _validate_packed(plan, n, width, np.asarray(arrays["keys"]),
+                         np.asarray(arrays["counts"]))
+    hp = HPTable(n=n, width=width, keys=arrays["keys"],
+                 vals=arrays["vals"], counts=arrays["counts"],
+                 theta=plan.theta, sqrt_c=plan.sqrt_c, l_max=plan.l_max)
+    reduced = arrays.get("reduced")
+    if reduced is not None and reduced.size == 0:
+        reduced = None
+    marks = arrays.get("marks")
+    if marks is not None and marks.size == 0:
+        marks = None
+    return SlingIndex(plan=plan, d=np.asarray(d, np.float32), hp=hp,
+                      reduced=reduced, marks=marks,
+                      stale=float(header.get("stale", 0.0)),
+                      epoch=int(header.get("epoch", 0)), quant=quant)
+
+
+# ----------------------------------------------------------------------
+# out-of-core packed assembly: COO triples -> v3 file, chunk-by-chunk
+# ----------------------------------------------------------------------
+def pack_coo_to_v3(path: str, plan: theory.SlingPlan, d: np.ndarray,
+                   src: np.ndarray, key: np.ndarray, val: np.ndarray,
+                   n: int, quantize: str | None = None,
+                   quantize_d: bool = True,
+                   row_chunk: int = 1 << 16) -> dict:
+    """Assemble packed HP rows straight into a format-v3 file.
+
+    The scale-path twin of ``hp_index._pack_coo`` + ``save``: the COO
+    triples (the only O(entries) state) are sorted once, then rows are
+    packed and written through the ``V3Writer`` memmap ``row_chunk``
+    rows at a time -- the (n, width) keys/vals arrays never exist in
+    RAM, which is what keeps a 10^6-node build inside the peak-RSS
+    gate. ``quantize`` ("int16" | "bf16") writes val codes under the
+    plan's eps_quant budget (same certification as
+    ``quantize.quantize_index``). Returns build stats.
+    """
+    src = np.ascontiguousarray(src, np.int64)
+    key = np.ascontiguousarray(key, np.int32)
+    val = np.ascontiguousarray(val, np.float32)
+    order = np.lexsort((key, src))
+    src, key, val = src[order], key[order], val[order]
+    counts = np.bincount(src, minlength=n).astype(np.int32)
+    width = max(1, int(counts.max())) if counts.size else 1
+    row_start = np.zeros(n + 1, np.int64)
+    np.cumsum(counts, out=row_start[1:])
+
+    quant = None
+    vals_dt: np.dtype = np.dtype(np.float32)
+    d = np.ascontiguousarray(d, np.float32)
+    d_codes = None
+    if quantize is not None:
+        b_vals = theory.quant_vals_bound(plan, d_channel=quantize_d)
+        vmax = np.array([val.max() if val.size else 0.0], np.float32)
+        _, scale = quantization.quantize_array(vmax, quantize, b_vals)
+        d_scale = 0.0
+        b_d = 0.0
+        if quantize_d:
+            b_d = theory.quant_d_bound(plan)
+            d_codes, d_scale = quantization.quantize_array(
+                d, "int16", b_d)
+        quant = QuantInfo(scheme=quantize, scale=scale, bound=b_vals,
+                          d_scale=d_scale, d_bound=b_d)
+        vals_dt = quantization.vals_dtype(quant)
+
+    specs = {
+        "d": (np.int16 if d_codes is not None else np.float32, (n,)),
+        "keys": (np.int32, (n, width)),
+        "vals": (vals_dt, (n, width)),
+        "counts": (np.int32, (n,)),
+    }
+    w = V3Writer(path, plan, specs, quant=quant)
+    try:
+        w.array("d")[:] = d_codes if d_codes is not None else d
+        w.array("counts")[:] = counts
+        keys_mm = w.array("keys")
+        vals_mm = w.array("vals")
+        for r0 in range(0, n, row_chunk):
+            r1 = min(n, r0 + row_chunk)
+            e0, e1 = int(row_start[r0]), int(row_start[r1])
+            kk = np.full((r1 - r0, width), INT32_PAD_KEY, np.int32)
+            vv = np.zeros((r1 - r0, width), np.float32)
+            rows = (src[e0:e1] - r0).astype(np.int64)
+            rank = np.arange(e0, e1, dtype=np.int64) \
+                - row_start[src[e0:e1]]
+            kk[rows, rank] = key[e0:e1]
+            vv[rows, rank] = val[e0:e1]
+            keys_mm[r0:r1] = kk
+            if quant is None:
+                vals_mm[r0:r1] = vv
+            elif quant.scheme == "int16":
+                vals_mm[r0:r1] = np.round(
+                    vv / np.float32(quant.scale)).astype(np.int16)
+            else:
+                vals_mm[r0:r1] = vv.astype(vals_dt)
+        w.finalize()
+    except BaseException:
+        w.abort()
+        raise
+    return {"path": path, "n": int(n), "width": int(width),
+            "entries": int(len(src)),
+            "bytes": int(os.path.getsize(path)),
+            "quant": None if quant is None else quant.scheme}
 
 
 @partial(jax.jit, static_argnames=("n",))

@@ -63,6 +63,9 @@ def apply_space_reduction(idx, g: csr.Graph, gamma: float = 10.0):
     table (repacking rows) and sets ``idx.reduced``. Returns bytes saved.
     """
     from repro.core.hp_index import INT32_PAD_KEY
+    if idx.quant is not None:
+        raise ValueError("cannot space-reduce a quantized index: "
+                         "repacking writes fp32 into codes")
     n = idx.n
     lim = gamma / idx.plan.theta
     e = eta(g)

@@ -1,0 +1,204 @@
+"""eps-charged index quantization (DESIGN.md section 13).
+
+Shrinks the float payload of a packed SLING index -- the HP row ``vals``
+and optionally the diagonal ``d`` -- to int16 codes or bfloat16, with
+the realized per-entry error *certified* against the plan's
+``eps_quant`` reserve (``theory.quant_vals_bound`` /
+``theory.quant_d_bound``). Quantization is a storage/distribution
+format: disk, host RAM, and mmap'd pages between replicas all shrink
+2x, while serving dequantizes to fp32 at install/upload time so every
+compiled program keeps its shapes and dtypes -- both push backends and
+the zero-recompile hot-swap contract are untouched.
+
+Schemes:
+
+  * ``int16`` -- linear codes ``round(v / scale)`` with one global
+    ``scale = max(v) / 32767``; per-entry error <= scale/2, certified
+    a priori (refuses when scale/2 exceeds the planned bound, so the
+    guarantee never depends on which values happened to land near a
+    rounding midpoint). Code 0 <-> 0.0 exactly: pad slots round-trip
+    untouched.
+  * ``bf16`` -- ml_dtypes.bfloat16 truncation of fp32; relative error
+    <= 2^-8 per entry (7 stored significand bits), certified a priori
+    via 2^-8 * max|v| and double-checked against the realized max
+    error. 0.0 is exact.
+
+Quantized indexes are read-only: ``update.update_index`` refuses them
+(in-place row repair would write fp32 into codes), as does
+``quantize_index`` for indexes carrying space-reduction sidecars
+(``reduced``/``marks`` rewrite vals at query time in fp32).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import theory
+
+try:  # bf16 needs ml_dtypes (bundled with jax); int16 works without
+    import ml_dtypes
+    _BF16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:  # pragma: no cover - ml_dtypes ships with jax
+    ml_dtypes = None
+    _BF16 = None
+
+SCHEMES = ("int16", "bf16")
+_INT16_MAX = 32767
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantInfo:
+    """Dequantization recipe + the certified per-entry error bounds.
+
+    ``scale`` is the int16 step for vals (1.0 for bf16); ``d_scale``
+    is the int16 step for the diagonal codes, or 0.0 when d stayed
+    fp32. ``bound``/``d_bound`` are the planned per-entry error caps
+    the realized quantization was certified against -- they travel
+    with the artifact so a loader can re-verify the charge against
+    the embedded plan without access to the original fp32 data.
+    """
+    scheme: str
+    scale: float
+    bound: float
+    d_scale: float = 0.0
+    d_bound: float = 0.0
+
+    def to_meta(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_meta(cls, meta: dict) -> "QuantInfo":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(meta) - known
+        if unknown:
+            raise ValueError(
+                f"unknown quantization metadata fields {sorted(unknown)}; "
+                "refusing to load an artifact this build cannot dequantize"
+            )
+        return cls(**meta)
+
+
+def _require_scheme(scheme: str) -> None:
+    if scheme not in SCHEMES:
+        raise ValueError(f"unknown quantization scheme {scheme!r}; "
+                         f"expected one of {SCHEMES}")
+    if scheme == "bf16" and _BF16 is None:
+        raise RuntimeError("bf16 quantization needs ml_dtypes")
+
+
+def quantize_array(vals: np.ndarray, scheme: str,
+                   bound: float) -> tuple[np.ndarray, float]:
+    """Quantize fp32 ``vals`` under a certified per-entry error bound.
+
+    Returns ``(stored, scale)``; refuses (ValueError) when the scheme
+    cannot guarantee ``|dequant(stored) - vals| <= bound`` for every
+    entry. The certificate is a priori (worst case over the value
+    range), so the same data always quantizes or always refuses.
+    """
+    _require_scheme(scheme)
+    v = np.ascontiguousarray(vals, np.float32)
+    vmax = float(np.max(np.abs(v))) if v.size else 0.0
+    if scheme == "int16":
+        # vmax == 0: every code is 0, realized error exactly 0 -- the
+        # unit scale is a convention, not an error source
+        scale = vmax / _INT16_MAX if vmax > 0 else 1.0
+        # certified realized error: step/2, plus fp32 slack -- the
+        # v/scale quotient (<= 32767) carries ~32767 * 2^-24 code
+        # units of rounding that can flip a near-midpoint code, and
+        # the dequant product codes * scale rounds once more; both
+        # are < 0.004 code units, covered by the 2^-6 factor
+        if vmax > 0 and scale / 2.0 * (1 + 2.0 ** -6) > bound:
+            raise ValueError(
+                f"int16 step {scale:.3e} cannot meet the per-entry "
+                f"bound {bound:.3e} (max |val| = {vmax:.3e}); raise "
+                "eps_quant_frac or use bf16")
+        codes = np.round(v / np.float32(scale)).astype(np.int16)
+        return codes, float(scale)
+    # bf16: unit roundoff 2^-8 for round-to-nearest with 7 stored bits
+    if vmax * 2.0 ** -8 > bound:
+        raise ValueError(
+            f"bf16 relative step cannot meet the per-entry bound "
+            f"{bound:.3e} at max |val| = {vmax:.3e}; raise "
+            "eps_quant_frac")
+    stored = v.astype(_BF16)
+    err = float(np.max(np.abs(stored.astype(np.float32) - v))) \
+        if v.size else 0.0
+    if err > bound:  # belt over braces: certify the realized error too
+        raise ValueError(f"bf16 realized error {err:.3e} exceeds the "
+                         f"per-entry bound {bound:.3e}")
+    return stored, 1.0
+
+
+def dequantize_array(stored: np.ndarray, scheme: str,
+                     scale: float) -> np.ndarray:
+    """Inverse of :func:`quantize_array`; always returns fp32."""
+    _require_scheme(scheme)
+    if scheme == "int16":
+        return stored.astype(np.float32) * np.float32(scale)
+    return np.asarray(stored).astype(np.float32)
+
+
+def dequantize_vals(stored: np.ndarray, info: QuantInfo) -> np.ndarray:
+    return dequantize_array(stored, info.scheme, info.scale)
+
+
+def vals_dtype(info: QuantInfo) -> np.dtype:
+    """On-disk/in-memory dtype of quantized HP vals."""
+    _require_scheme(info.scheme)
+    return np.dtype(np.int16) if info.scheme == "int16" else _BF16
+
+
+def quantize_index(idx, scheme: str = "int16", quantize_d: bool = True):
+    """Return a new quantized ``SlingIndex`` sharing keys/counts with
+    ``idx``; vals (and d when ``quantize_d``) become codes.
+
+    The plan must have reserved ``eps_quant`` (``plan(eps_quant_frac=
+    ...)``) -- the per-entry bounds come from it, and serving stays
+    within the *full* planned eps because the static index was built
+    against the shrunken eps_static share. When ``quantize_d``, the
+    in-memory d is replaced by its dequantized round-trip so serving
+    realizes exactly the charged error (and matches what a save/load
+    cycle through codes would produce bit-for-bit).
+    """
+    from repro.core.hp_index import HPTable
+    from repro.core.index import SlingIndex
+
+    _require_scheme(scheme)
+    if idx.quant is not None:
+        raise ValueError("index is already quantized")
+    if idx.reduced is not None or idx.marks is not None:
+        raise ValueError(
+            "cannot quantize an index carrying space-reduction "
+            "sidecars (reduced/marks rewrite vals in fp32 at query "
+            "time); quantize the unreduced index instead")
+    p = idx.plan
+    b_vals = theory.quant_vals_bound(p, d_channel=quantize_d)
+    stored, scale = quantize_array(idx.hp.vals, scheme, b_vals)
+    d = np.ascontiguousarray(idx.d, np.float32)
+    d_scale = 0.0
+    b_d = 0.0
+    if quantize_d:
+        b_d = theory.quant_d_bound(p)
+        d_codes, d_scale = quantize_array(d, "int16", b_d)
+        d = dequantize_array(d_codes, "int16", d_scale)
+    info = QuantInfo(scheme=scheme, scale=scale, bound=b_vals,
+                     d_scale=d_scale, d_bound=b_d)
+    hp = HPTable(n=idx.hp.n, width=idx.hp.width, keys=idx.hp.keys,
+                 vals=stored, counts=idx.hp.counts, theta=idx.hp.theta,
+                 sqrt_c=idx.hp.sqrt_c, l_max=idx.hp.l_max)
+    return SlingIndex(plan=p, d=d, hp=hp, stale=idx.stale,
+                      epoch=idx.epoch, quant=info)
+
+
+def quantize_d_codes(d: np.ndarray, info: QuantInfo) -> np.ndarray:
+    """Re-derive the int16 d codes from a (round-tripped) fp32 d.
+
+    Exact because the in-memory d of a quantized index is already
+    ``codes * d_scale`` (see :func:`quantize_index`), so the division
+    recovers integers.
+    """
+    if info.d_scale <= 0:
+        raise ValueError("diagonal was not quantized (d_scale == 0)")
+    return np.round(np.asarray(d, np.float32)
+                    / np.float32(info.d_scale)).astype(np.int16)

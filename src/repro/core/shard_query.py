@@ -220,9 +220,11 @@ def shard_index(idx, g: csr.Graph, mesh, axis: str = "data",
     if ec < e_req:
         ec = hp_index.capacity_bucket(e_req, cap_quantum, headroom)
 
-    keys, vals = hp_index.pad_packed_rows(idx.hp, n_pad, wc)
+    # dequantized_hp: shard slabs are built fp32 (quantization is a
+    # storage format; device arrays stay fp32 on every backend)
+    keys, vals = hp_index.pad_packed_rows(idx.dequantized_hp(), n_pad, wc)
     d = np.zeros(n_pad, np.float32)
-    d[:idx.n] = idx.d.astype(np.float32)
+    d[:idx.n] = np.asarray(idx.d, np.float32)
     bs, bdl, bw = partition_edges(g, idx.plan.sqrt_c, S, n_loc, ec)
 
     specs = sling_index_specs(axis)

@@ -38,6 +38,10 @@ class SlingPlan:
     # full-rebuild trigger. Appended with a default so plans serialized
     # before this field existed load unchanged (INDEX_FORMAT.md).
     eps_stale: float = 0.0
+    # quantization reserve (DESIGN.md section 13). 0.0 = fp32-only
+    # plan: quantize_index refuses. Appended with a default for the
+    # same serialization-compat reason as eps_stale.
+    eps_quant: float = 0.0
 
     @property
     def sqrt_c(self) -> float:
@@ -56,7 +60,8 @@ class SlingPlan:
 
 def plan(eps: float = 0.025, delta: float | None = None, c: float = 0.6,
          n: int = 1 << 20, eps_d_frac: float = 0.5,
-         walk_tail: float = 1e-4, stale_frac: float = 0.0) -> SlingPlan:
+         walk_tail: float = 1e-4, stale_frac: float = 0.0,
+         eps_quant_frac: float = 0.0) -> SlingPlan:
     """Choose (eps_d, theta, delta_d, t_max, l_max, n_r1) for a target eps.
 
     eps_d_frac controls the split of the Theorem-1 budget between the
@@ -68,14 +73,28 @@ def plan(eps: float = 0.025, delta: float | None = None, c: float = 0.6,
     planned against eps * (1 - stale_frac), and `update_index` spends
     the reserved eps_stale = stale_frac * eps across update batches
     (``stale_increment``); once spent, the rebuild trigger fires.
+
+    eps_quant_frac reserves a fraction of eps as the *quantization*
+    budget (DESIGN.md section 13): ``quantize_index`` stores HP vals
+    (and optionally d) in int16/bf16 provided the realized per-entry
+    error stays within the bounds ``quant_vals_bound`` /
+    ``quant_d_bound`` derived from eps_quant = eps_quant_frac * eps.
+    Both reserves shrink the static share of the Theorem-1 budget:
+    eps_static = eps * (1 - stale_frac - eps_quant_frac).
     """
     if not (0 < eps < 1):
         raise ValueError("eps must be in (0,1)")
     if not (0 <= stale_frac < 1):
         raise ValueError("stale_frac must be in [0,1)")
+    if not (0 <= eps_quant_frac < 1):
+        raise ValueError("eps_quant_frac must be in [0,1)")
+    if stale_frac + eps_quant_frac >= 1:
+        raise ValueError(
+            "stale_frac + eps_quant_frac reserve the whole eps budget; "
+            "nothing is left for the static index")
     sc = math.sqrt(c)
     delta = delta if delta is not None else 1.0 / n
-    eps_static = eps * (1 - stale_frac)
+    eps_static = eps * (1 - stale_frac - eps_quant_frac)
     # budget split: eps_static = eps_d/(1-c) + 2 sc theta /((1-sc)(1-c))
     eps_d_raw = eps_d_frac * eps_static * (1 - c)
     theta = (1 - eps_d_frac) * eps_static * (1 - c) * (1 - sc) / (2 * sc)
@@ -93,7 +112,8 @@ def plan(eps: float = 0.025, delta: float | None = None, c: float = 0.6,
     n_r1 = int(math.ceil(14.0 / (3.0 * eps_star) * math.log(4.0 / delta_d)))
     p = SlingPlan(c=c, eps=eps, delta=delta, eps_d=eps_d, theta=theta,
                   delta_d=delta_d, t_max=t_max, l_max=l_max, n_r1=n_r1,
-                  walk_tail=tail, eps_stale=stale_frac * eps)
+                  walk_tail=tail, eps_stale=stale_frac * eps,
+                  eps_quant=eps_quant_frac * eps)
     # sanity: Theorem-1 condition holds with the *raw* eps_d budget,
     # inside the static share of eps (the rest is the staleness reserve)
     assert (eps_d_raw / (1 - c)
@@ -179,6 +199,62 @@ def phase2_pairs(mu_hat: float, eps_d: float, delta_d: float,
     """Alg 4 lines 12-13: total pair budget n_r* for phase 2 (scalar
     facade over :func:`phase2_pairs_vec` so the two can never drift)."""
     return int(phase2_pairs_vec(mu_hat, eps_d, delta_d, c))
+
+
+# ----------------------------------------------------------------------
+# quantization accounting (DESIGN.md section 13)
+#
+# A pair score is s~(u,v) = sum over matched HP entries of
+# H_l(u,k) * H_l(v,k) / d~_k, and every source/top-k path is a batch of
+# the same bilinear form. Perturb each stored val by at most b and each
+# d~ by at most b_d:
+#
+#   * first order in b: the cross terms |H(u)|_1 * b + |H(v)|_1 * b
+#     with |H(.)|_1 <= sum_l (sqrt c)^l = 1/(1 - sqrt c)  (each column
+#     of the l-step hitting distribution sums to <= (sqrt c)^l), so
+#     <= 2 b / (1 - sqrt c). The 1/d~_k >= 1 factor is already part of
+#     Theorem 1's slack: the paper's Lemma-7 HP charge uses the same
+#     row-l1 bound without it, so we stay consistent with that
+#     convention.
+#   * second order: b^2 per matched entry, and Lemma 7 caps the match
+#     count by |H(v)| <= 1/((1 - sqrt c) theta), so
+#     <= b^2 / ((1 - sqrt c) theta).
+#   * d channel: d~ enters scores through Theorem 1's d-term, so a
+#     per-entry |dequant(d) - d| <= b_d costs b_d / (1 - c).
+# ----------------------------------------------------------------------
+def quant_charge(p: SlingPlan, b_vals: float, b_d: float = 0.0) -> float:
+    """Worst-case additive score error from per-entry quantization
+    bounds ``b_vals`` (HP vals) and ``b_d`` (diagonal)."""
+    sc = p.sqrt_c
+    return (2.0 * b_vals / (1.0 - sc)
+            + b_vals * b_vals / ((1.0 - sc) * p.theta)
+            + b_d / (1.0 - p.c))
+
+
+def quant_vals_bound(p: SlingPlan, d_channel: bool = False) -> float:
+    """Largest per-entry HP-val error whose ``quant_charge`` fits the
+    plan's eps_quant reserve (half the reserve when ``d_channel``
+    leaves room for the diagonal's share).
+
+    Inverts 2b/(1-sc) + b^2/((1-sc) theta) = budget for b:
+    b = theta * (sqrt(1 + budget*(1-sc)/theta) - 1).
+    """
+    if p.eps_quant <= 0:
+        raise ValueError("plan reserved no quantization budget; "
+                         "re-plan with eps_quant_frac > 0")
+    budget = p.eps_quant * (0.5 if d_channel else 1.0)
+    sc = p.sqrt_c
+    return p.theta * (math.sqrt(1.0 + budget * (1.0 - sc) / p.theta)
+                      - 1.0)
+
+
+def quant_d_bound(p: SlingPlan) -> float:
+    """Largest per-entry d~ error for the diagonal's half of the
+    eps_quant reserve (only meaningful when vals use the other half)."""
+    if p.eps_quant <= 0:
+        raise ValueError("plan reserved no quantization budget; "
+                         "re-plan with eps_quant_frac > 0")
+    return 0.5 * p.eps_quant * (1.0 - p.c)
 
 
 def alg1_pairs(eps_d: float, delta_d: float, c: float) -> int:

@@ -154,6 +154,12 @@ def update_index(idx, g: csr.Graph, delta: csr.GraphDelta,
     gracefully, they do not explode), but the eps certificate is gone
     until ``build_index`` runs again.
     """
+    if idx.quant is not None or not np.asarray(idx.hp.vals).flags.writeable:
+        raise ValueError(
+            "quantized/mmap'd indexes are read-only: in-place row "
+            "repair would write fp32 values into quantization codes "
+            "or into a read-only mapping. Rebuild, or update the "
+            "fp32 index and re-quantize/re-save.")
     plan = idx.plan
     theta_r = plan.theta if theta_r is None else theta_r
     secs: dict[str, float] = {}

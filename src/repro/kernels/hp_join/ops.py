@@ -14,8 +14,8 @@ def fold_sqrt_d(index):
 
     Returns (keys, folded_vals) ready for the kernel; see ref.py."""
     n = index.n
-    keys = index.hp.keys
-    vals = index.hp.vals.astype(np.float64)
+    keys = np.asarray(index.hp.keys)
+    vals = index.vals_f32().astype(np.float64)
     ks = (keys.astype(np.int64) % n).clip(0, n - 1)
     sd = np.sqrt(np.maximum(index.d.astype(np.float64), 0.0))
     folded = (vals * sd[ks]).astype(np.float32)

@@ -20,6 +20,12 @@ between query batches, reporting repair time, swap latency, recompile
 count (must stay 0), and the accumulated staleness vs the plan's
 reserve -- including the full-rebuild trigger firing.
 
+``--save-index P`` persists the built index as a format-v3 artifact;
+``--index P [--mmap]`` serves a persisted artifact instead of
+building (mmap: O(1) zero-copy load); ``--quantize int16|bf16
+--quant-frac F`` serves an eps-charged quantized index (DESIGN.md
+section 13).
+
 ``--frontend R`` serves through the async SLO-aware admission layer
 (repro.serve.ServeFrontend, DESIGN.md section 12) instead of calling
 the engine directly: R engine replicas over the one index artifact,
@@ -89,9 +95,31 @@ def main() -> None:
                     help="frontend query-skew exponent (0 = uniform)")
     ap.add_argument("--routing", default="least_loaded",
                     choices=("least_loaded", "round_robin"))
+    ap.add_argument("--index", default=None, metavar="PATH",
+                    help="serve a persisted index artifact instead of "
+                         "building one (graph is regenerated from "
+                         "--n/--deg/--seed and must match)")
+    ap.add_argument("--mmap", action="store_true",
+                    help="with --index: map the artifact read-only "
+                         "(format v3; O(1) load, replicas share pages)")
+    ap.add_argument("--save-index", default=None, metavar="PATH",
+                    help="persist the index (format v3) after building")
+    ap.add_argument("--quantize", default="none",
+                    choices=("none", "int16", "bf16"),
+                    help="serve a quantized index (needs --quant-frac "
+                         "> 0; DESIGN.md section 13)")
+    ap.add_argument("--quant-frac", type=float, default=0.0,
+                    help="fraction of eps reserved for quantization "
+                         "error (plan eps_quant_frac)")
     args = ap.parse_args()
     if args.queries < 1 or args.batch < 1:
         ap.error("--queries and --batch must be >= 1")
+    if args.quantize != "none" and args.quant_frac <= 0:
+        ap.error("--quantize needs --quant-frac > 0 (the plan must "
+                 "reserve the quantization budget)")
+    if args.mutate and (args.quantize != "none" or args.mmap):
+        ap.error("--mutate needs a writable fp32 index; quantized/"
+                 "mmap'd artifacts are read-only")
 
     mesh = None
     if args.mesh > 0:
@@ -108,11 +136,31 @@ def main() -> None:
                                    directed=False)
     print(f"graph: n={g.n} m={g.m}")
     t0 = time.perf_counter()
-    idx = build.build_index(g, eps=args.eps, verbose=True,
-                            stale_frac=args.stale_frac if args.mutate
-                            else 0.0)
-    print(f"index built in {time.perf_counter() - t0:.1f}s "
-          f"({idx.nbytes() / 1e6:.1f} MB)")
+    if args.index:
+        from repro.core.index import SlingIndex
+        idx = SlingIndex.load(args.index, mmap=args.mmap)
+        if idx.n != g.n:
+            raise SystemExit(f"--index has n={idx.n}, graph has "
+                             f"n={g.n}; pass matching --n/--deg/--seed")
+        print(f"index loaded in {time.perf_counter() - t0:.3f}s "
+              f"({idx.nbytes() / 1e6:.1f} MB"
+              f"{', mmap' if args.mmap else ''}"
+              f"{', ' + idx.quant.scheme if idx.quant else ''})")
+    else:
+        idx = build.build_index(g, eps=args.eps, verbose=True,
+                                stale_frac=args.stale_frac if args.mutate
+                                else 0.0,
+                                quant_frac=args.quant_frac)
+        if args.quantize != "none":
+            from repro.core import quantize
+            idx = quantize.quantize_index(idx, scheme=args.quantize)
+            print(f"index quantized ({args.quantize}): "
+                  f"{idx.nbytes() / 1e6:.1f} MB")
+        print(f"index built in {time.perf_counter() - t0:.1f}s "
+              f"({idx.nbytes() / 1e6:.1f} MB)")
+    if args.save_index:
+        idx.save(args.save_index)
+        print(f"index saved -> {args.save_index}")
 
     if args.frontend > 0:
         _frontend_serve(args, g, idx, mesh)

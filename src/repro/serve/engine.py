@@ -189,10 +189,14 @@ class QueryEngine:
         keys = np.full((n, wc), INT32_PAD_KEY, np.int32)
         vals = np.zeros((n, wc), np.float32)
         keys[:, :index.hp.width] = index.hp.keys
-        vals[:, :index.hp.width] = index.hp.vals
+        # vals_f32: quantized indexes (core/quantize.py) dequantize
+        # here, host-side -- compiled programs keep fp32 shapes/dtypes
+        # for every storage scheme, so hot-swapping a quantized index
+        # stays zero-recompile
+        vals[:, :index.hp.width] = index.vals_f32()
         self._keys = jnp.asarray(keys)
         self._vals = jnp.asarray(vals)
-        self._d = jnp.asarray(index.d.astype(np.float32))
+        self._d = jnp.asarray(np.asarray(index.d, np.float32))
         if self.cfg.mesh is None:
             e_src = np.zeros(ec, np.int32)
             e_dst = np.zeros(ec, np.int32)
@@ -667,6 +671,8 @@ class QueryEngine:
             "unique_shapes": sorted(self._shapes),
             "pair_backend": self._pair_backend,
             "push_backend": self._push_backend,
+            "quantized": (self.index.quant.scheme
+                          if self.index.quant is not None else None),
             "mesh_shards": (self._sharded.n_shards
                             if self._sharded is not None else 0),
         }
@@ -674,6 +680,13 @@ class QueryEngine:
     # ------------------------------------------------------------------
     @classmethod
     def from_index_file(cls, path: str, g: csr.Graph,
-                        config: EngineConfig | None = None) -> "QueryEngine":
-        """Serve from an index persisted with SlingIndex.save."""
-        return cls(SlingIndex.load(path), g, config)
+                        config: EngineConfig | None = None,
+                        mmap: bool = False) -> "QueryEngine":
+        """Serve from an index persisted with SlingIndex.save.
+
+        ``mmap=True`` (format v3 only) keeps the artifact on disk and
+        maps it read-only: load is O(1), engines/replicas in other
+        processes share the page cache, and install dequantizes/pads
+        into device arrays as usual.
+        """
+        return cls(SlingIndex.load(path, mmap=mmap), g, config)

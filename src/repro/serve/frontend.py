@@ -221,6 +221,22 @@ class ServeFrontend:
                 self._workers.append(th)
 
     # ------------------------------------------------------------------
+    @classmethod
+    def from_index_file(cls, path: str, g,
+                        config: "FrontendConfig | None" = None,
+                        clock=None, mmap: bool = False) -> "ServeFrontend":
+        """Serve a persisted index artifact (``SlingIndex.save``).
+
+        ``mmap=True`` (format v3) maps the artifact read-only ONCE and
+        every replica engine installs from the same pages -- the N
+        replicas share one on-disk copy instead of N host-RAM copies,
+        which is the point of the mmap'd format at million-node scale.
+        """
+        from repro.core.index import SlingIndex
+        return cls(SlingIndex.load(path, mmap=mmap), g, config,
+                   clock=clock)
+
+    # ------------------------------------------------------------------
     # admission
     # ------------------------------------------------------------------
     def submit_pair(self, u: int, v: int,

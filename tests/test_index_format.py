@@ -1,0 +1,308 @@
+"""Format v3 artifact contract (INDEX_FORMAT.md): round-trips, compat
+refusals, crash-safety, and the streaming scale-path equivalences.
+
+Mirrors tests/test_join.py's artifact suite: every refusal is exercised
+by *rewriting* a genuine file, so the tests pin the byte layout (magic,
+version word, header JSON) and not just the Python API.
+"""
+import json
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from repro.core import build, hp_index, optimizations, quantize
+from repro.core.index import (FORMAT_VERSION, V3_MAGIC, SlingIndex,
+                              pack_coo_to_v3)
+from repro.graph import generators
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return generators.barabasi_albert(80, 3, seed=4, directed=False)
+
+
+@pytest.fixture(scope="module")
+def index(graph):
+    return build.build_index(graph, eps=0.1, exact_d=True, seed=0,
+                             quant_frac=0.2)
+
+
+def _assert_same_index(a: SlingIndex, b: SlingIndex) -> None:
+    assert a.plan == b.plan
+    assert a.stale == b.stale and a.epoch == b.epoch
+    assert a.quant == b.quant
+    np.testing.assert_array_equal(np.asarray(a.d), np.asarray(b.d))
+    np.testing.assert_array_equal(np.asarray(a.hp.keys),
+                                  np.asarray(b.hp.keys))
+    np.testing.assert_array_equal(np.asarray(a.hp.vals),
+                                  np.asarray(b.hp.vals))
+    np.testing.assert_array_equal(np.asarray(a.hp.counts),
+                                  np.asarray(b.hp.counts))
+    for side in ("reduced", "marks"):
+        x, y = getattr(a, side), getattr(b, side)
+        assert (x is None) == (y is None)
+        if x is not None:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _rewrite_header(path, mutate):
+    """Re-encode the header JSON of a v3 file after ``mutate(header)``,
+    space-padding the new JSON to a 64-byte boundary so the data
+    section keeps its alignment and non-refused loads stay valid."""
+    raw = open(path, "rb").read()
+    magic, version, hlen = struct.unpack("<8sII", raw[:16])
+    header = json.loads(raw[16:16 + hlen].decode())
+    mutate(header)
+    old_ds = (16 + hlen + 63) & ~63
+    blob = json.dumps(header).encode()
+    blob += b" " * (((16 + len(blob) + 63) & ~63) - 16 - len(blob))
+    with open(path, "wb") as f:
+        f.write(struct.pack("<8sII", magic, version, len(blob)))
+        f.write(blob)
+        f.write(raw[old_ds:])
+
+
+# ----------------------------------------------------------------------
+# round-trips
+# ----------------------------------------------------------------------
+def test_v3_roundtrip_eager_and_mmap_bit_identical(tmp_path, index):
+    p = str(tmp_path / "idx.sling")
+    index.save(p)
+    eager = SlingIndex.load(p)
+    mm = SlingIndex.load(p, mmap=True)
+    _assert_same_index(index, eager)
+    _assert_same_index(eager, mm)
+    # mmap views are read-only file-backed pages, not copies
+    assert isinstance(mm.hp.vals, np.memmap)
+    assert not mm.hp.vals.flags.writeable
+    # and serving answers are the same object graph either way
+    u, v = 3, 11
+    assert eager.query_pair_host(u, v) == mm.query_pair_host(u, v)
+
+
+def test_v3_roundtrip_quantized(tmp_path, index):
+    iq = quantize.quantize_index(index, scheme="int16")
+    p = str(tmp_path / "q.sling")
+    iq.save(p)
+    mm = SlingIndex.load(p, mmap=True)
+    _assert_same_index(iq, mm)
+    assert np.asarray(mm.hp.vals).dtype == np.int16
+    # the diagonal was stored as int16 codes yet loads as fp32 equal to
+    # the in-memory (round-tripped) d
+    assert np.asarray(mm.d).dtype == np.float32
+    np.testing.assert_array_equal(np.asarray(mm.d), np.asarray(iq.d))
+    np.testing.assert_allclose(mm.vals_f32(), iq.vals_f32())
+
+
+def test_v3_roundtrip_sidecars(tmp_path, graph):
+    idx = build.build_index(graph, eps=0.1, exact_d=True, seed=0)
+    optimizations.apply_space_reduction(idx, graph)
+    optimizations.mark_for_enhancement(idx, graph)
+    assert idx.reduced is not None and idx.marks is not None
+    p = str(tmp_path / "side.sling")
+    idx.save(p)
+    for mmap in (False, True):
+        _assert_same_index(idx, SlingIndex.load(p, mmap=mmap))
+
+
+def test_v2_npz_backcompat(tmp_path, graph):
+    idx = build.build_index(graph, eps=0.1, exact_d=True, seed=0)
+    p = str(tmp_path / "idx.npz")
+    idx.save(p, version=2)
+    assert open(p, "rb").read(2) == b"PK"
+    _assert_same_index(idx, SlingIndex.load(p))
+    with pytest.raises(ValueError, match="memory-mapped"):
+        SlingIndex.load(p, mmap=True)
+
+
+def test_v2_refuses_quantized(tmp_path, index):
+    iq = quantize.quantize_index(index)
+    with pytest.raises(ValueError, match="v2 cannot carry"):
+        iq.save(str(tmp_path / "q.npz"), version=2)
+
+
+# ----------------------------------------------------------------------
+# compat refusals (INDEX_FORMAT.md rules, byte-level)
+# ----------------------------------------------------------------------
+def test_refuses_future_version(tmp_path, index):
+    p = str(tmp_path / "future.sling")
+    index.save(p)
+    raw = bytearray(open(p, "rb").read())
+    raw[8:12] = struct.pack("<I", FORMAT_VERSION + 1)
+    open(p, "wb").write(bytes(raw))
+    with pytest.raises(ValueError, match=f"format v{FORMAT_VERSION + 1}"):
+        SlingIndex.load(p)
+
+
+def test_refuses_unknown_header_field(tmp_path, index):
+    p = str(tmp_path / "hdr.sling")
+    index.save(p)
+    _rewrite_header(p, lambda h: h.update(compression="zstd"))
+    with pytest.raises(ValueError, match="unknown v3 header fields"):
+        SlingIndex.load(p)
+    # underscore-prefixed metadata is additive and must NOT refuse
+    index.save(p)
+    _rewrite_header(p, lambda h: h.update(_created_at="2026-08-08"))
+    SlingIndex.load(p, validate=False)
+
+
+def test_refuses_unknown_plan_field(tmp_path, index):
+    p = str(tmp_path / "plan.sling")
+    index.save(p)
+    _rewrite_header(p, lambda h: h["plan"].update(gamma=2.0))
+    with pytest.raises(ValueError, match="unknown fields"):
+        SlingIndex.load(p)
+
+
+def test_refuses_unknown_array_member(tmp_path, index):
+    p = str(tmp_path / "member.sling")
+    index.save(p)
+    _rewrite_header(p, lambda h: h["arrays"].update(
+        huffman={"dtype": "<u1", "shape": [8], "offset": 0}))
+    with pytest.raises(ValueError, match="unknown v3 array members"):
+        SlingIndex.load(p)
+
+
+def test_refuses_unknown_quant_field(tmp_path, index):
+    iq = quantize.quantize_index(index)
+    p = str(tmp_path / "quant.sling")
+    iq.save(p)
+    _rewrite_header(p, lambda h: h["quant"].update(dither="tpdf"))
+    with pytest.raises(ValueError, match="unknown quantization metadata"):
+        SlingIndex.load(p)
+
+
+def test_refuses_truncated_artifacts(tmp_path, index):
+    p = str(tmp_path / "trunc.sling")
+    index.save(p)
+    raw = open(p, "rb").read()
+    # mid-preamble
+    open(p, "wb").write(raw[:8])
+    with pytest.raises(ValueError, match="truncated v3 preamble"):
+        SlingIndex.load(p)
+    # mid-header
+    open(p, "wb").write(raw[:20])
+    with pytest.raises(ValueError, match="truncated v3 header"):
+        SlingIndex.load(p)
+    # mid-data: header intact, arrays cut short
+    open(p, "wb").write(raw[: len(raw) - 97])
+    with pytest.raises(ValueError, match="truncated artifact"):
+        SlingIndex.load(p)
+
+
+def test_refuses_corrupt_header_json(tmp_path, index):
+    p = str(tmp_path / "corrupt.sling")
+    index.save(p)
+    raw = bytearray(open(p, "rb").read())
+    _, _, hlen = struct.unpack("<8sII", raw[:16])
+    raw[16:16 + hlen] = b"\xff" * hlen        # same length, not JSON
+    open(p, "wb").write(bytes(raw))
+    with pytest.raises(ValueError, match="corrupt v3 header"):
+        SlingIndex.load(p)
+
+
+def test_refuses_bad_magic(tmp_path):
+    p = str(tmp_path / "junk.bin")
+    open(p, "wb").write(b"GARBAGE!" + b"\x00" * 64)
+    with pytest.raises(ValueError, match="not a SLING index artifact"):
+        SlingIndex.load(p)
+
+
+def test_refuses_corrupt_packed_rows(tmp_path, index):
+    """Eager loads run the packed-row invariant scan by default; a
+    count pointing past the row width is caught."""
+    p = str(tmp_path / "rows.sling")
+    index.save(p)
+    im = SlingIndex.load(p, mmap=True)           # O(1): no scan
+    raw = bytearray(open(p, "rb").read())
+    # corrupt counts[0] in place: find its offset from the header
+    _, _, hlen = struct.unpack("<8sII", raw[:16])
+    header = json.loads(raw[16:16 + hlen].decode())
+    data_start = (16 + hlen + 63) & ~63
+    off = data_start + header["arrays"]["counts"]["offset"]
+    raw[off:off + 4] = struct.pack("<i", index.hp.width + 5)
+    open(p, "wb").write(bytes(raw))
+    with pytest.raises(ValueError, match="INDEX_FORMAT.md invariants"):
+        SlingIndex.load(p)
+    # mmap skips the scan unless asked...
+    SlingIndex.load(p, mmap=True)
+    with pytest.raises(ValueError, match="INDEX_FORMAT.md invariants"):
+        SlingIndex.load(p, mmap=True, validate=True)
+    del im
+
+
+# ----------------------------------------------------------------------
+# atomicity
+# ----------------------------------------------------------------------
+def test_save_is_atomic_under_crash(tmp_path, index, monkeypatch):
+    p = str(tmp_path / "atomic.sling")
+    index.save(p)
+    before = open(p, "rb").read()
+
+    def boom(src, dst):
+        raise OSError("simulated crash before rename")
+
+    monkeypatch.setattr(os, "replace", boom)
+    with pytest.raises(OSError, match="simulated crash"):
+        index.save(p)
+    monkeypatch.undo()
+    # destination untouched, no torn tmp file left behind
+    assert open(p, "rb").read() == before
+    assert [f for f in os.listdir(tmp_path) if ".tmp" in f] == []
+    _assert_same_index(index, SlingIndex.load(p))
+
+
+def test_save_leaves_no_tmp_on_success(tmp_path, index):
+    index.save(str(tmp_path / "ok.sling"))
+    assert sorted(os.listdir(tmp_path)) == ["ok.sling"]
+
+
+# ----------------------------------------------------------------------
+# scale path equivalences: the streaming writer produces the same
+# artifact the in-RAM build + save would
+# ----------------------------------------------------------------------
+def test_sparse_build_matches_dense(graph):
+    p = build.build_index(graph, eps=0.1, exact_d=True, seed=0).plan
+    dense = hp_index.build_hp_table(graph, p.theta, p.sqrt_c, p.l_max)
+    sparse = hp_index.build_hp_table_sparse(graph, p.theta, p.sqrt_c,
+                                            p.l_max, block=32)
+    assert sparse.width == dense.width
+    np.testing.assert_array_equal(sparse.counts, dense.counts)
+    np.testing.assert_array_equal(sparse.keys, dense.keys)
+    np.testing.assert_allclose(sparse.vals, dense.vals, atol=1e-6)
+
+
+@pytest.mark.parametrize("quantized", [None, "int16"])
+def test_pack_coo_to_v3_matches_build_and_save(tmp_path, graph, index,
+                                               quantized):
+    sink = hp_index._CooSink(None, tag="fmt")
+    plan = index.plan
+    hp_index.sparse_hp_coo(graph, plan.theta, plan.sqrt_c, plan.l_max,
+                           block=32, sink=sink)
+    src, key, val = sink.collect()
+    p = str(tmp_path / "packed.sling")
+    stats = pack_coo_to_v3(p, plan, np.asarray(index.d), src, key, val,
+                           graph.n, quantize=quantized)
+    got = SlingIndex.load(p, mmap=True, validate=True)
+    ref = index if quantized is None \
+        else quantize.quantize_index(index, scheme=quantized)
+    assert stats["n"] == graph.n
+    assert stats["entries"] == int(np.asarray(index.hp.counts).sum())
+    assert got.plan == ref.plan
+    np.testing.assert_array_equal(np.asarray(got.hp.keys),
+                                  np.asarray(ref.hp.keys))
+    np.testing.assert_array_equal(np.asarray(got.hp.counts),
+                                  np.asarray(ref.hp.counts))
+    # values: the sparse frontier accumulates in a different order than
+    # the dense pull (float32 roundoff), and a roundoff straddling an
+    # int16 rounding midpoint shifts that code by one step
+    atol = 2e-6 + (got.quant.scale if quantized else 0.0)
+    np.testing.assert_allclose(got.vals_f32(), ref.vals_f32(),
+                               atol=atol)
+    np.testing.assert_allclose(np.asarray(got.d), np.asarray(ref.d),
+                               atol=1e-7)
+    if quantized:
+        assert got.quant.scheme == "int16"
+        assert got.quant.bound == pytest.approx(ref.quant.bound)

@@ -12,12 +12,18 @@ The c sweep is the regression net for threshold-resolution bugs: the
 device kernels once hardcoded sqrt(0.6) in the Horner prune threshold,
 which over-pruned every c < 0.6 index.
 """
+import atexit
+import os
+import shutil
+import tempfile
+
 import numpy as np
 import pytest
 
 import oracle
 
-from repro.core import build, shard_query, single_source
+from repro.core import build, quantize, shard_query, single_source
+from repro.core.index import SlingIndex
 from repro.core.single_source import (single_source_batch,
                                       single_source_device,
                                       single_source_horner,
@@ -28,6 +34,7 @@ from repro.graph import generators
 CASES = sorted(oracle.cases())
 SETTINGS = [(0.4, 0.15), (0.6, 0.1), (0.8, 0.2)]
 _cache: dict = {}
+_qdir: list = []
 
 
 def _cell(name: str, c: float, eps: float):
@@ -36,6 +43,34 @@ def _cell(name: str, c: float, eps: float):
         g = oracle.cases()[name]
         idx = build.build_index(g, eps=eps, c=c, exact_d=True, seed=0)
         _cache[key] = (g, idx, oracle.exact_simrank(g, c))
+    return _cache[key]
+
+
+def _qcell(name: str, c: float, eps: float):
+    """Quantized + mmap'd cell: the SAME eps target as the fp32 wall,
+    but the plan reserves eps_quant_frac of it -- the static index is
+    built tighter and the reserve absorbs the int16 rounding, so the
+    oracle tolerance is the *unchanged* planned eps. The index is
+    round-tripped through a format-v3 artifact and memory-mapped:
+    this wall covers storage scheme + disk format + serving in one
+    differential."""
+    key = ("quant", name, c, eps)
+    if key not in _cache:
+        g = oracle.cases()[name]
+        idx = build.build_index(g, eps=eps, c=c, exact_d=True, seed=0,
+                                quant_frac=0.25)
+        iq = quantize.quantize_index(idx, scheme="int16")
+        if not _qdir:
+            _qdir.append(tempfile.mkdtemp(prefix="sling_qwall_"))
+            atexit.register(shutil.rmtree, _qdir[0],
+                            ignore_errors=True)
+        path = os.path.join(_qdir[0], f"{name}_{c}_{eps}.sling")
+        iq.save(path)
+        im = SlingIndex.load(path, mmap=True)
+        assert im.quant is not None
+        assert isinstance(np.asarray(im.hp.vals), np.memmap) \
+            or isinstance(im.hp.vals, np.memmap)
+        _cache[key] = (g, im, oracle.exact_simrank(g, c))
     return _cache[key]
 
 
@@ -263,6 +298,125 @@ def test_frontend_bit_identical_sharded_mesh2():
         pytest.skip("needs 2 devices "
                     "(XLA_FLAGS=--xla_force_host_platform_device_count)")
     _drive_frontend_vs_engine("lax", mesh_shards=2)
+
+
+# ----------------------------------------------------------------------
+# quantized + mmap'd wall (DESIGN.md section 13): the same zoo x c
+# grid served from int16 codes in a memory-mapped v3 artifact, judged
+# against the SAME planned-eps tolerance -- the eps_quant reserve must
+# absorb every bit of rounding, on every public path, on both push
+# backends.
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("c,eps", SETTINGS)
+@pytest.mark.parametrize("name", CASES)
+def test_quantized_mmap_pair_within_planned_eps(name, c, eps):
+    g, idx, S = _qcell(name, c, eps)
+    tol = oracle.tolerance(idx.plan)
+    n = g.n
+    vs, us = np.meshgrid(np.arange(n, dtype=np.int32),
+                         np.arange(n, dtype=np.int32))
+    got = idx.query_pairs(us.ravel(), vs.ravel()).reshape(n, n)
+    assert np.abs(got - S).max() <= tol
+    rng = np.random.default_rng(1)
+    for _ in range(4):
+        u, v = (int(x) for x in rng.integers(0, n, 2))
+        assert abs(idx.query_pair_host(u, v, g) - S[u, v]) <= tol
+
+
+@pytest.mark.parametrize("backend", oracle.BACKENDS)
+@pytest.mark.parametrize("c,eps", SETTINGS)
+@pytest.mark.parametrize("name", CASES)
+def test_quantized_mmap_source_topk_within_planned_eps(name, c, eps,
+                                                       backend):
+    g, idx, S = _qcell(name, c, eps)
+    tol = oracle.tolerance(idx.plan)
+    us = np.unique(np.array([0, 1, g.n // 2, g.n - 1], np.int32))
+    got = single_source_device(idx, g, us, backend=backend)
+    for i, u in enumerate(us.tolist()):
+        assert np.abs(got[i] - S[u]).max() <= tol
+    sv, si = topk_device(idx, g, us, 7, backend=backend)
+    for i, u in enumerate(us.tolist()):
+        truth = np.sort(S[u])[::-1][:7]
+        np.testing.assert_allclose(sv[i], truth, atol=tol)
+        np.testing.assert_allclose(sv[i], S[u][si[i]], atol=tol)
+
+
+@pytest.mark.parametrize("backend", oracle.BACKENDS)
+def test_quantized_mmap_sharded_and_join(backend):
+    """Sharded fan-out (mesh 1) and the bulk join serve the quantized
+    mmap'd index within planned eps -- the dequantize-at-install seam
+    covers the shard slab builder and the sweep working set too."""
+    from repro.join import JoinConfig, run_join
+    g, idx, S = _qcell("powerlaw", 0.6, 0.1)
+    tol = oracle.tolerance(idx.plan)
+    us = np.array([0, 3, g.n - 1], np.int32)
+    mesh = shard_query.serving_mesh(1)
+    si = shard_query.shard_index(idx, g, mesh, push_backend=backend)
+    sh = shard_query.sharded_single_source(si, us, backend=backend)
+    for i, u in enumerate(us.tolist()):
+        assert np.abs(sh[i] - S[u]).max() <= tol
+    mv, mi = shard_query.sharded_topk(si, us, 8, backend=backend)
+    for i, u in enumerate(us.tolist()):
+        truth = np.sort(S[u])[::-1][:8]
+        np.testing.assert_allclose(mv[i], truth, atol=tol)
+    knn = run_join(idx, g, us, JoinConfig(k=8, tile=4,
+                                          push_backend=backend))
+    for i, u in enumerate(us.tolist()):
+        row = slice(int(knn.indptr[i]), int(knn.indptr[i + 1]))
+        np.testing.assert_allclose(knn.nbr_scores[row],
+                                   np.sort(S[u])[::-1][:8], atol=tol)
+
+
+@pytest.mark.serve
+@pytest.mark.parametrize("backend", oracle.BACKENDS)
+def test_quantized_mmap_frontend_within_planned_eps(backend):
+    """The async frontend over a quantized mmap'd artifact: answers
+    bit-identical to a direct engine on the same index, and within
+    planned eps of the oracle."""
+    from repro.serve import (EngineConfig, FrontendConfig, QueryEngine,
+                             ServeFrontend, VirtualClock)
+    g, idx, S = _qcell("powerlaw", 0.6, 0.1)
+    tol = oracle.tolerance(idx.plan)
+    ecfg = EngineConfig(pair_batch=8, source_batch=4, cache_size=32,
+                        k_buckets=(4, 16), push_backend=backend)
+    clk = VirtualClock()
+    fe = ServeFrontend(idx, g, FrontendConfig(
+        max_batch=3, max_pair_batch=4, max_wait=0.004, engine=ecfg),
+        clock=clk)
+    ref = QueryEngine(idx, g, ecfg)
+    assert ref.stats()["quantized"] == "int16"
+    rng = np.random.default_rng(7)
+    todo = []
+    for _ in range(12):
+        r = rng.random()
+        u = int(rng.integers(g.n))
+        if r < 0.4:
+            todo.append(("source", fe.submit_source(u), u, None))
+        elif r < 0.7:
+            v = int(rng.integers(g.n))
+            todo.append(("pair", fe.submit_pair(u, v), u, v))
+        else:
+            todo.append(("topk", fe.submit_topk(u, 9), u, 9))
+        if rng.random() < 0.5:
+            clk.advance(float(rng.uniform(0, 0.006)))
+    clk.advance(0.004)
+    fe.flush()
+    for kind, t, a, b in todo:
+        got = t.result()
+        if kind == "source":
+            assert np.array_equal(got, ref.single_source([a])[0])
+            assert np.abs(got - S[a]).max() <= tol
+        elif kind == "pair":
+            assert got == ref.pair(a, b)
+            assert abs(got - S[a, b]) <= tol
+        else:
+            sv, si = got
+            rv, ri = ref.topk([a], b)
+            assert np.array_equal(sv, rv[0])
+            assert np.array_equal(si, ri[0])
+            np.testing.assert_allclose(sv, np.sort(S[a])[::-1][:b],
+                                       atol=tol)
+    fe.close()
 
 
 # ----------------------------------------------------------------------

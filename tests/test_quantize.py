@@ -1,0 +1,247 @@
+"""eps-charged quantization: budget split, round-trip bounds, refusals.
+
+The contract under test (DESIGN.md section 13): ``plan(eps_quant_frac=
+f)`` shrinks the static budget so that static error + quantization
+charge <= eps, ``quantize_array`` certifies its per-entry bound a
+priori (same data always quantizes or always refuses), and a quantized
+index serves through the engine with zero recompiles -- dequantization
+happens at install time, never inside a compiled program.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import build, quantize, theory, update
+from repro.graph import generators
+
+
+@pytest.fixture(scope="module")
+def qgraph():
+    return generators.barabasi_albert(60, 3, seed=2, directed=False)
+
+
+@pytest.fixture(scope="module")
+def qindex(qgraph):
+    return build.build_index(qgraph, eps=0.1, exact_d=True, seed=0,
+                             quant_frac=0.25)
+
+
+# ----------------------------------------------------------------------
+# budget split (theory.plan + quant_charge / quant_*_bound)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("c", [0.4, 0.6, 0.8])
+@pytest.mark.parametrize("frac", [0.1, 0.25, 0.5])
+def test_plan_budget_split_invariants(c, frac):
+    eps = 0.1
+    p = theory.plan(eps=eps, c=c, eps_quant_frac=frac)
+    assert p.eps_quant == pytest.approx(frac * eps)
+    # the static share shrank accordingly: Theorem-1 error of the
+    # static index plus the full quantization charge stays under eps
+    static = (p.eps_d / (1 - c)
+              + 2 * p.sqrt_c * p.theta / ((1 - p.sqrt_c) * (1 - c)))
+    charge = theory.quant_charge(
+        p, theory.quant_vals_bound(p, d_channel=True),
+        theory.quant_d_bound(p))
+    assert static + charge <= eps * (1 + 1e-9)
+    # bound inversion is exact: charging the derived bounds consumes
+    # exactly the reserve, no slack silently thrown away
+    assert charge == pytest.approx(p.eps_quant, rel=1e-9)
+    # vals-only split likewise
+    assert theory.quant_charge(
+        p, theory.quant_vals_bound(p, d_channel=False)
+    ) == pytest.approx(p.eps_quant, rel=1e-9)
+
+
+def test_plan_refuses_whole_budget_reserved():
+    with pytest.raises(ValueError, match="whole eps budget"):
+        theory.plan(eps=0.1, stale_frac=0.6, eps_quant_frac=0.4)
+    with pytest.raises(ValueError, match="eps_quant_frac"):
+        theory.plan(eps=0.1, eps_quant_frac=1.0)
+    with pytest.raises(ValueError, match="eps_quant_frac"):
+        theory.plan(eps=0.1, eps_quant_frac=-0.1)
+
+
+def test_bounds_refuse_without_reserve():
+    p = theory.plan(eps=0.1)
+    assert p.eps_quant == 0.0
+    with pytest.raises(ValueError, match="eps_quant_frac"):
+        theory.quant_vals_bound(p)
+    with pytest.raises(ValueError, match="eps_quant_frac"):
+        theory.quant_d_bound(p)
+
+
+# ----------------------------------------------------------------------
+# quantize_array round-trip properties
+# ----------------------------------------------------------------------
+def _roundtrip(vals, scheme, bound):
+    stored, scale = quantize.quantize_array(vals, scheme, bound)
+    return quantize.dequantize_array(stored, scheme, scale), scale
+
+
+@pytest.mark.parametrize("scheme", quantize.SCHEMES)
+def test_roundtrip_error_within_bound(scheme):
+    rng = np.random.default_rng(0)
+    theta = 0.011
+    vals = np.concatenate([
+        rng.uniform(0, 1, 500).astype(np.float32),
+        np.full(8, theta, np.float32),       # values exactly at theta
+        np.zeros(16, np.float32),            # pad-like zero slots
+        np.float32([1.0, 1e-6, theta * 1.0000001]),
+    ])
+    bound = 0.005 if scheme == "int16" else 0.005
+    back, _ = _roundtrip(vals, scheme, bound)
+    assert np.abs(back - vals).max() <= bound
+    # zeros round-trip EXACTLY (pad sentinels must stay 0.0)
+    assert np.all(back[vals == 0.0] == 0.0)
+
+
+def test_int16_all_zero_row_uses_unit_scale():
+    stored, scale = quantize.quantize_array(
+        np.zeros((4, 7), np.float32), "int16", 1e-9)
+    assert scale == 1.0
+    assert stored.dtype == np.int16 and not stored.any()
+
+
+def test_int16_full_width_2d_roundtrip():
+    rng = np.random.default_rng(3)
+    vals = rng.uniform(-1, 1, (32, 19)).astype(np.float32)  # no pads
+    back, scale = _roundtrip(vals, "int16", 1.0 / 32767)
+    assert back.shape == vals.shape
+    # step/2 plus the fp32 divide/multiply slack the certificate
+    # charges for
+    assert np.abs(back - vals).max() <= scale / 2 * (1 + 2.0 ** -6)
+
+
+def test_int16_refuses_bound_below_half_step():
+    vals = np.float32([1.0, 0.5, 0.0])
+    # step = 1/32767, refusal is a priori at bound < step/2
+    with pytest.raises(ValueError, match="int16 step"):
+        quantize.quantize_array(vals, "int16", 1.0 / (4 * 32767))
+    # ... and deterministic: the same call succeeds just above the
+    # certified step/2 * (1 + 2^-6) threshold
+    quantize.quantize_array(vals, "int16",
+                            0.5 / 32767 * (1 + 2.0 ** -6) * (1 + 1e-9))
+
+
+def test_bf16_refuses_tight_bound():
+    vals = np.float32([0.999, 0.25])
+    with pytest.raises(ValueError, match="bf16"):
+        quantize.quantize_array(vals, "bf16", 2.0 ** -9)
+    back, _ = _roundtrip(vals, "bf16", 2.0 ** -7)
+    assert np.abs(back - vals).max() <= 2.0 ** -7
+
+
+def test_unknown_scheme_refused():
+    with pytest.raises(ValueError, match="unknown quantization scheme"):
+        quantize.quantize_array(np.zeros(1, np.float32), "int8", 1.0)
+
+
+def test_quantinfo_meta_roundtrip_refuses_unknown_fields():
+    info = quantize.QuantInfo(scheme="int16", scale=0.5, bound=1e-3,
+                              d_scale=0.25, d_bound=1e-4)
+    assert quantize.QuantInfo.from_meta(info.to_meta()) == info
+    bad = dict(info.to_meta(), dither="tpdf")
+    with pytest.raises(ValueError, match="unknown quantization metadata"):
+        quantize.QuantInfo.from_meta(bad)
+
+
+# ----------------------------------------------------------------------
+# quantize_index: whole-index certification + refusals
+# ----------------------------------------------------------------------
+def test_quantize_index_realized_error_certified(qindex):
+    fp_vals = np.asarray(qindex.hp.vals)
+    fp_d = np.asarray(qindex.d)
+    iq = quantize.quantize_index(qindex, scheme="int16")
+    assert iq.quant is not None and iq.quant.scheme == "int16"
+    assert np.asarray(iq.hp.vals).dtype == np.int16
+    # realized per-entry errors sit under the *certified* bounds
+    assert np.abs(iq.vals_f32() - fp_vals).max() <= iq.quant.bound
+    assert np.abs(np.asarray(iq.d) - fp_d).max() <= iq.quant.d_bound
+    # pad slots (stored 0.0) survive as exact zeros
+    pad = fp_vals == 0.0
+    assert np.all(iq.vals_f32()[pad] == 0.0)
+    # keys/counts are shared, not copied -- quantization only touches
+    # the float channels
+    assert iq.hp.keys is qindex.hp.keys
+    assert iq.hp.counts is qindex.hp.counts
+    # the source index is untouched
+    assert np.asarray(qindex.hp.vals).dtype == np.float32
+    assert qindex.quant is None
+
+
+def test_quantize_index_vals_only_keeps_fp32_d(qindex):
+    iq = quantize.quantize_index(qindex, scheme="int16",
+                                 quantize_d=False)
+    assert iq.quant.d_scale == 0.0
+    np.testing.assert_array_equal(np.asarray(iq.d),
+                                  np.asarray(qindex.d))
+    # the vals-only bound is the full reserve -- strictly looser than
+    # the split bound
+    assert iq.quant.bound > quantize.quantize_index(qindex).quant.bound
+
+
+def test_quantize_index_refusals(qgraph, qindex):
+    iq = quantize.quantize_index(qindex)
+    with pytest.raises(ValueError, match="already quantized"):
+        quantize.quantize_index(iq)
+    # no reserve planned -> the bound derivation refuses
+    plain = build.build_index(qgraph, eps=0.1, exact_d=True, seed=0)
+    with pytest.raises(ValueError, match="eps_quant_frac"):
+        quantize.quantize_index(plain)
+    # space-reduction sidecars rewrite vals in fp32 at query time
+    from repro.core import optimizations
+    red = build.build_index(qgraph, eps=0.1, exact_d=True, seed=0,
+                            quant_frac=0.25)
+    optimizations.mark_for_enhancement(red, qgraph)
+    with pytest.raises(ValueError, match="space-reduction"):
+        quantize.quantize_index(red)
+    # ... and the reverse composition refuses too
+    with pytest.raises(ValueError, match="space-reduce a quantized"):
+        optimizations.apply_space_reduction(iq, qgraph)
+
+
+def test_update_refuses_quantized_and_readonly(qgraph, qindex, tmp_path):
+    from repro.core.index import SlingIndex
+    from repro.graph import csr
+    delta = csr.GraphDelta(add_src=np.array([0]), add_dst=np.array([5]),
+                           del_src=np.zeros(0, np.int64),
+                           del_dst=np.zeros(0, np.int64))
+    iq = quantize.quantize_index(qindex)
+    with pytest.raises(ValueError, match="read-only"):
+        update.update_index(iq, qgraph, delta)
+    # an mmap'd fp32 index is equally read-only
+    plain = build.build_index(qgraph, eps=0.1, exact_d=True, seed=0)
+    p = tmp_path / "plain.sling"
+    plain.save(p)
+    im = SlingIndex.load(p, mmap=True)
+    assert im.quant is None
+    with pytest.raises(ValueError, match="read-only"):
+        update.update_index(im, qgraph, delta)
+
+
+# ----------------------------------------------------------------------
+# serving composition: dequantize-at-install keeps the zero-recompile
+# hot-swap contract
+# ----------------------------------------------------------------------
+def test_quantized_swap_zero_recompiles(qgraph, qindex):
+    from repro.serve import EngineConfig, QueryEngine
+    eng = QueryEngine(qindex, qgraph,
+                      EngineConfig(pair_batch=8, source_batch=4))
+    eng.warmup()
+    before = set(eng.stats()["unique_shapes"])
+    us = np.arange(5, dtype=np.int32)
+    ref = eng.single_source(us)
+    iq = quantize.quantize_index(qindex)
+    out = eng.swap_index(iq, qgraph)
+    assert out["recompiles"] == 0
+    got = eng.single_source(us)
+    st = eng.stats()
+    assert set(st["unique_shapes"]) == before
+    assert st["swap_recompiles"] == 0
+    assert st["quantized"] == "int16"
+    # quantized answers track fp32 within the certified charge
+    tol = theory.quant_charge(qindex.plan, iq.quant.bound,
+                              iq.quant.d_bound)
+    assert np.abs(got - ref).max() <= tol

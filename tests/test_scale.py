@@ -1,0 +1,114 @@
+"""Scale smoke (``scale`` marker, run by scripts/ci.sh): an n = 10^5
+power-law index builds out-of-core, saves as format v3, mmap-loads in
+O(1), and serves through the QueryEngine -- all inside an enforced
+peak-RSS gate.
+
+The build runs in a subprocess so the gate is real: the child sets an
+address-space rlimit *before* any allocation and reports its own
+ru_maxrss; a regression that materializes the packed (n, width) fp32
+arrays (or eagerly copies the mmap) dies inside the child without
+taking the test session down. The 10^6-node variant of the same path
+lives in benchmarks (``python -m benchmarks.run --scale``), not in
+per-commit CI.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+N_SCALE = 100_000
+# peak-RSS gate for build + save + mmap-load + serve at n = 10^5.
+# Measured ~450-700 MB on the reference container (JAX CPU runtime is
+# the floor at ~400 MB); 1.5 GB trips on any regression that holds
+# the index densely (the historical failure mode -- a dense (n, n)
+# frontier -- is ~40 GB and dies on the AS_LIMIT rlimit first).
+# The child measures VmHWM, NOT ru_maxrss: ru_maxrss is kept in the
+# task struct and survives execve, so a child forked from a large
+# parent (a long tier-1 pytest session can sit at >10 GB) reports the
+# parent's fork-moment RSS as its own "peak". VmHWM lives in the mm
+# and resets at exec -- it is the child's true high-water mark.
+RSS_GATE_MB = 1500
+AS_LIMIT_MB = 16_000   # hard address-space ceiling (runaway guard)
+
+_CHILD = r"""
+import json, resource, sys, tempfile, os
+cap = int(sys.argv[1]) * (1 << 20)
+resource.setrlimit(resource.RLIMIT_AS, (cap, cap))
+n = int(sys.argv[2])
+
+import numpy as np
+from repro.graph import generators
+from repro.core import build
+from repro.core.index import SlingIndex
+from repro.serve import EngineConfig, QueryEngine
+
+g = generators.powerlaw_fast(n, k=6, seed=0)
+path = os.path.join(tempfile.mkdtemp(prefix="sling_scale_"), "idx.sling")
+stats = build.build_index_scale(g, path, eps=0.5, quant_frac=0.2,
+                                quantize="int16")
+idx = SlingIndex.load(path, mmap=True)
+assert idx.n == n and idx.quant is not None
+assert isinstance(idx.hp.vals, np.memmap)
+assert not idx.hp.vals.flags.writeable
+
+eng = QueryEngine(idx, g, EngineConfig(pair_batch=8, source_batch=2,
+                                       k_buckets=(8,)))
+us = np.array([0, 1, n // 2, n - 1], np.int32)
+src = eng.single_source(us[:2])
+sv, si = eng.topk(us[:2], 8)
+pair = eng.pair(0, int(us[2]))
+ok = (src.shape == (2, n) and bool((src[0] >= 0).all())
+      and sv.shape == (2, 8) and 0.0 <= pair <= 1.0
+      and bool((np.diff(sv, axis=1) <= 1e-6).all()))
+def peak_rss_mb():
+    # VmHWM: this process's own high-water mark (resets at exec).
+    # ru_maxrss would also count the fork-parent's resident pages.
+    with open("/proc/self/status") as f:
+        for line in f:
+            if line.startswith("VmHWM:"):
+                return int(line.split()[1]) / 1024.0
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+out = {
+    "ok": bool(ok),
+    "n": int(idx.n),
+    "width": int(idx.hp.width),
+    "entries": int(stats["entries"]),
+    "file_mb": stats["bytes"] / (1 << 20),
+    "maxrss_mb": peak_rss_mb(),
+}
+os.remove(path)
+print("SCALE_RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.scale
+@pytest.mark.slow
+def test_scale_build_mmap_serve_under_rss_gate():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    # pin glibc malloc arenas: under allocator contention (loaded
+    # host) arena proliferation inflates RSS independently of what
+    # the build actually holds, which is what the gate measures
+    env["MALLOC_ARENA_MAX"] = "4"
+    proc = subprocess.run(
+        [sys.executable, "-c", _CHILD, str(AS_LIMIT_MB), str(N_SCALE)],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert proc.returncode == 0, (
+        f"scale child failed (rc={proc.returncode}); an rlimit kill "
+        f"here means the build stopped being out-of-core.\n"
+        f"stdout:\n{proc.stdout[-2000:]}\nstderr:\n{proc.stderr[-2000:]}")
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("SCALE_RESULT ")]
+    assert line, proc.stdout[-2000:]
+    res = json.loads(line[-1][len("SCALE_RESULT "):])
+    assert res["ok"], res
+    assert res["n"] == N_SCALE
+    assert res["entries"] >= N_SCALE  # every node stores >= its l=0 HP
+    assert res["maxrss_mb"] < RSS_GATE_MB, (
+        f"peak RSS {res['maxrss_mb']:.0f} MB blew the {RSS_GATE_MB} MB "
+        f"scale gate: {res}")

@@ -244,7 +244,7 @@ def test_save_load_roundtrip_with_update_state(tmp_path, small_graph):
 def test_load_refuses_future_format(tmp_path, sling_index):
     import json
     path = os.path.join(tmp_path, "idx.npz")
-    sling_index.save(path)
+    sling_index.save(path, version=2)
     z = dict(np.load(path, allow_pickle=False))
     meta = json.loads(str(z["meta"]))
     meta["_format_version"] = 99
@@ -257,7 +257,7 @@ def test_load_refuses_future_format(tmp_path, sling_index):
 def test_load_refuses_unknown_plan_fields(tmp_path, sling_index):
     import json
     path = os.path.join(tmp_path, "idx.npz")
-    sling_index.save(path)
+    sling_index.save(path, version=2)
     z = dict(np.load(path, allow_pickle=False))
     meta = json.loads(str(z["meta"]))
     meta["mystery_knob"] = 1.0
@@ -273,7 +273,7 @@ def test_load_accepts_additive_underscore_metadata(tmp_path, sling_index):
     underscore keys from the unknown-plan-field refusal)."""
     import json
     path = os.path.join(tmp_path, "idx.npz")
-    sling_index.save(path)
+    sling_index.save(path, version=2)
     z = dict(np.load(path, allow_pickle=False))
     meta = json.loads(str(z["meta"]))
     meta["_created_at"] = "2026-07-28T00:00:00Z"
@@ -290,7 +290,7 @@ def test_load_enforces_packed_row_invariants(tmp_path, sling_index):
     path = os.path.join(tmp_path, "idx.npz")
 
     def corrupt(mutate):
-        sling_index.save(path)
+        sling_index.save(path, version=2)
         z = dict(np.load(path, allow_pickle=False))
         mutate(z)
         np.savez(path, **z)
