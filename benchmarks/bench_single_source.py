@@ -103,50 +103,42 @@ def run_backends(n: int = 300, eps: float = 0.15, n_q: int = 16,
     op_count_gate(n=op_count_n)
 
 
-def op_count_gate(n: int = 10_000, deg: int = 3, B: int = 16,
-                  W: int = 64, l_max: int = 10) -> None:
+def op_count_gate(n: int = 10_000) -> None:
     """Trace-only fusion gate at production-ish n (no graph is built --
     the programs are traced on ShapeDtypeStructs, so this is cheap even
-    at n = 10^4): count frontier-sized intermediates in each backend's
-    jaxpr and assert the fused kernel materializes fewer."""
-    import jax
-    import jax.numpy as jnp
-
-    from repro.core.single_source import (batched_single_source,
-                                          batched_single_source_pallas)
+    at n = 10^4). The measurement and the budgets live in the
+    ``hbm-budget`` analysis pass (repro.analysis.jaxpr_passes); this
+    hook only renders its rows and asserts them -- one budget
+    definition, two consumers (DESIGN.md section 14)."""
+    from repro.analysis import jaxpr_passes
     from repro.kernels.horner_push import ops as hp_ops
 
-    m = deg * n
+    rows = jaxpr_passes.hbm_budget_report(n=n)
+    by = {(r.program, r.backend): r for r in rows}
+    for r in rows:
+        if r.program != "source":
+            continue
+        emit_row("fig2/single_source/hbm_ops", n=n, backend=r.backend,
+                 mesh=1, wall_us=float("nan"), throughput=None,
+                 ops=r.measured, model_bytes=r.model_bytes,
+                 derived=f"{r.measured} frontier-sized ops "
+                         "(trace-only)")
+    for r in rows:
+        assert not r.over, (
+            f"{r.program}/{r.backend} materializes {r.measured} "
+            f"frontier-sized HBM intermediates, over budget {r.budget}")
+    for prog in ("source", "topk"):
+        c_pl, c_lax = by[(prog, "pallas")], by[(prog, "lax")]
+        assert c_pl.measured <= c_lax.measured, \
+            f"{prog}: pallas materializes more HBM intermediates: " \
+            f"{c_pl.measured} > {c_lax.measured}"
+    geo = jaxpr_passes.HBM_GEOMETRY
+    m = geo["deg"] * n
     bn, eb = hp_ops.DEFAULT_BN, hp_ops.DEFAULT_EB
     nb = -(-n // bn)
-    ep = -(-((m + nb - 1) // nb) // eb + 1) * eb  # plausible block width
-    f32 = jnp.float32
-    s = jax.ShapeDtypeStruct
-    lax_args = (s((n, W), jnp.int32), s((n, W), f32), s((n,), f32),
-                s((m,), jnp.int32), s((m,), jnp.int32), s((m,), f32),
-                s((B,), jnp.int32), s((), f32))
-    pl_args = (s((n, W), jnp.int32), s((n, W), f32), s((n,), f32),
-               s((nb, ep), jnp.int32), s((nb, ep), jnp.int32),
-               s((nb, ep), f32), s((B,), jnp.int32), s((), f32))
-    min_elems = B * n // 2   # anything frontier-sized
-    c_lax = hp_ops.count_hbm_intermediates(
-        lambda *a: batched_single_source(*a, n=n, l_max=l_max),
-        *lax_args, min_elems=min_elems)
-    c_pl = hp_ops.count_hbm_intermediates(
-        lambda *a: batched_single_source_pallas(
-            *a, n=n, l_max=l_max, bn=bn, eb=eb, interpret=True),
-        *pl_args, min_elems=min_elems)
-    cost = hp_ops.push_cost_model(n, m, B, ep, l_max, bn=bn, eb=eb)
-    emit_row("fig2/single_source/hbm_ops", n=n, backend="lax", mesh=1,
-             wall_us=float("nan"), throughput=None, ops=c_lax,
-             model_bytes=cost["lax_bytes"],
-             derived=f"{c_lax} frontier-sized ops (trace-only)")
-    emit_row("fig2/single_source/hbm_ops", n=n, backend="pallas", mesh=1,
-             wall_us=float("nan"), throughput=None, ops=c_pl,
-             model_bytes=cost["pallas_bytes"],
-             derived=f"{c_pl} frontier-sized ops (trace-only)")
-    assert c_pl <= c_lax, \
-        f"pallas materializes more HBM intermediates: {c_pl} > {c_lax}"
+    ep = max(eb, -(-((m + nb - 1) // nb) // eb) * eb)
+    cost = hp_ops.push_cost_model(n, m, geo["B"], ep, geo["l_max"],
+                                  bn=bn, eb=eb)
     from benchmarks import roofline
     roofline.push_sanity(cost, n=n)
 

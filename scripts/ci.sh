@@ -20,6 +20,14 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+echo "== slinglint: static invariant analyzer (AST + jaxpr + HLO) =="
+# repo-wide pass run gated on the checked-in baseline: any *new*
+# finding (lock-discipline, clock-seam, banned-api, jit-boundary,
+# hbm-budget, collective-contract) fails CI before a test runs. The
+# CLI forces 2 host devices itself so the HLO collective-contract
+# pass always executes (DESIGN.md section 14).
+PYTHONPATH=src python -m repro.analysis --baseline ANALYSIS_BASELINE.json
+
 echo "== tier-1 tests =="
 python -m pytest -x -q
 

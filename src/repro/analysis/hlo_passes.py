@@ -1,0 +1,101 @@
+"""HLO pass: collective-traffic contract of the sharded fan-out.
+
+DESIGN.md section 8's partition contract says the node-sharded query
+path pays exactly two collectives: a psum row fetch (the replicated
+query rows -- one all-reduce per packed array) and a per-push-step
+frontier all-gather (plus two small candidate-merge gathers on the
+top-k path). This pass AOT-compiles the four sharded jits on a
+2-device mesh with the real NamedShardings attached, reuses
+``launch/hlo_analysis.collective_stats`` + ``launch/hlo_walk.analyze``
+on the compiled text, and flags
+
+  * any collective kind outside {all-reduce, all-gather} -- a new
+    collective is a contract break, whatever its size;
+  * modeled per-device collective bytes beyond ``SLACK`` x the ring
+    model of the contract (psum + frontier gathers + merge gathers) --
+    XLA is free to reorder, not to move more data.
+
+Skips (recorded, not failed) when fewer than 2 devices are visible;
+``python -m repro.analysis`` forces 2 host devices so CI always runs
+it.
+"""
+from __future__ import annotations
+
+from repro.analysis import programs
+from repro.analysis.core import Context, Finding, Pass, PassSkipped
+
+ALLOWED_KINDS = ("all-reduce", "all-gather")
+SLACK = 1.5
+
+
+def contract_model_bytes(kind: str, *, B: int, W: int, n: int, S: int,
+                         l_max: int, k: int = 16) -> float:
+    """Ring-model bytes/device the section-8 contract permits."""
+    f = (S - 1) / S
+    psum = 2 * (2 * B * W * 4) * f            # keys+vals all-reduce
+    frontier = l_max * (B * n * 4) * f        # one gather per push step
+    merge = 0.0
+    if kind == "topk":
+        k_loc = min(k, n // S)
+        merge = 2 * (B * S * k_loc * 4) * f   # scores + ids gathers
+    return psum + frontier + merge
+
+
+class CollectiveContractPass(Pass):
+    """Sharded programs move psum + all-gather traffic only."""
+
+    pass_id = "collective-contract"
+
+    def run(self, ctx: Context) -> list[Finding]:
+        import jax
+        if jax.device_count() < 2:
+            raise PassSkipped(
+                "needs >= 2 devices (run under "
+                "XLA_FLAGS=--xla_force_host_platform_device_count=2, "
+                "as python -m repro.analysis does)")
+        from repro.launch import hlo_analysis, hlo_walk
+        uni = programs.universe()
+        g = programs._geometry(uni)
+        findings: list[Finding] = []
+        for spec in programs.build_specs(jax.device_count()):
+            if spec.devices < 2:
+                continue
+            fn, args = spec.make()
+            try:
+                txt = jax.jit(fn).lower(*args).compile().as_text()
+            except Exception as e:
+                findings.append(Finding(
+                    pass_id=self.pass_id, file=spec.file, line=1,
+                    key=f"{spec.name}:compile",
+                    message=f"{spec.name} failed to AOT-compile on "
+                            f"the analysis mesh: "
+                            f"{type(e).__name__}: {e}"))
+                continue
+            stats = hlo_analysis.collective_stats(txt)
+            walk = hlo_walk.analyze(txt)
+            for op in sorted(stats.count_by_op):
+                if op not in ALLOWED_KINDS:
+                    findings.append(Finding(
+                        pass_id=self.pass_id, file=spec.file, line=1,
+                        key=f"{spec.name}:kind:{op}",
+                        message=f"{spec.name} emits collective "
+                                f"'{op}' (x{stats.count_by_op[op]}); "
+                                "the section-8 contract allows only "
+                                f"{ALLOWED_KINDS}"))
+            kind = "topk" if "topk" in spec.name else "source"
+            budget = SLACK * contract_model_bytes(
+                kind, B=uni["source_batch"], W=g["W"], n=g["n"],
+                S=spec.devices, l_max=g["l_max"])
+            # take the larger of the two independent parsers: a
+            # collective one of them misses must still fit the budget
+            moved = max(float(stats.total_bytes),
+                        float(walk.coll_bytes))
+            if moved > budget:
+                findings.append(Finding(
+                    pass_id=self.pass_id, file=spec.file, line=1,
+                    key=f"{spec.name}:bytes",
+                    message=f"{spec.name} moves {moved:.0f} modeled "
+                            f"collective bytes/device, over "
+                            f"{budget:.0f} ({SLACK}x the psum + "
+                            "frontier all-gather contract model)"))
+        return findings

@@ -1,0 +1,308 @@
+"""Declared compiled-program universe for the jaxpr/HLO passes.
+
+One registry of every public jit entry point the serving stack
+dispatches into -- pair / single-source / top-k on both push backends,
+the sharded fan-out twins, the join tile runner, and the paired-walk
+sampler -- each with the *declared* bucket class of every shape
+dimension the engine may vary at runtime. The jit-boundary pass traces
+each spec on ShapeDtypeStructs and re-derives the bucket predicates
+from the live EngineConfig/JoinConfig defaults, so a dimension that
+silently stops being bucketed (the recompile-storm class of bug PR 4
+fixed twice dynamically) becomes a static finding.
+
+Everything imports jax lazily: ``python -m repro.analysis`` must be
+able to set XLA_FLAGS before jax initializes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class Dim:
+    """One traced shape dimension and its declared bucket class."""
+    name: str
+    value: int
+    bucket: str
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramSpec:
+    name: str                    # e.g. "source/pallas"
+    file: str                    # repo-relative defining module
+    make: Callable               # () -> (fn, args-of-ShapeDtypeStructs)
+    dims: tuple[Dim, ...]
+    devices: int = 1             # mesh devices the trace needs
+
+
+def universe() -> dict:
+    """The engine's declared shape-bucket universe (one source of
+    truth for every bucket predicate)."""
+    from repro.core import walks
+    from repro.join.sweep import JoinConfig
+    from repro.kernels.horner_push import ops as hp_ops
+    from repro.serve.engine import EngineConfig
+    ec, jc = EngineConfig(), JoinConfig()
+    return {
+        "cap_quantum": ec.cap_quantum,
+        "pair_batch": ec.pair_batch,
+        "source_batch": ec.source_batch,
+        "k_buckets": tuple(ec.k_buckets),
+        "join_tile": jc.tile,
+        "walk_chunk": walks.DEFAULT_CHUNK,
+        "eb": hp_ops.DEFAULT_EB,
+        "bn": hp_ops.DEFAULT_BN,
+    }
+
+
+def bucket_ok(dim: Dim, n: int, uni: dict) -> bool:
+    """Is ``dim.value`` inside the declared universe for its class?"""
+    v = dim.value
+    if dim.bucket == "cap-bucket":
+        q = uni["cap_quantum"]
+        return v >= q and v % q == 0
+    if dim.bucket == "walk-chunk":
+        from repro.core import walks
+        return walks.chunk_bucket(v, uni["walk_chunk"]) == v
+    if dim.bucket == "k-bucket":
+        ks = {b for b in uni["k_buckets"] if b <= n} | {n}
+        return v in ks
+    if dim.bucket == "engine-pair-batch":
+        return v == uni["pair_batch"]
+    if dim.bucket == "engine-source-batch":
+        return v == uni["source_batch"]
+    if dim.bucket == "join-tile":
+        return v == uni["join_tile"]
+    if dim.bucket == "eb-multiple":
+        return v > 0 and v % uni["eb"] == 0
+    raise ValueError(f"unknown bucket class {dim.bucket!r}")
+
+
+# ----------------------------------------------------------------------
+# spec construction (tiny representative geometry; traces only)
+# ----------------------------------------------------------------------
+def _geometry(uni: dict) -> dict:
+    from repro.core.hp_index import capacity_bucket
+    n, deg = 256, 3
+    m = deg * n
+    g = {
+        "n": n, "m": m, "l_max": 10, "W": 64,
+        "E": capacity_bucket(m, uni["cap_quantum"]),
+        "bn": uni["bn"], "eb": uni["eb"],
+    }
+    nb = -(-n // g["bn"])
+    per_blk = (m + nb - 1) // nb
+    g["nb"] = nb
+    g["ep"] = max(g["eb"], -(-per_blk // g["eb"]) * g["eb"])
+    return g
+
+
+def build_specs(device_count: int = 1) -> list[ProgramSpec]:
+    """Every public compiled program, as (fn, abstract args) thunks.
+
+    Specs with ``devices`` beyond ``device_count`` are still returned;
+    the caller decides whether to skip or fail them.
+    """
+    uni = universe()
+    g = _geometry(uni)
+    import jax.numpy as jnp
+    n, m, W, E, l_max = g["n"], g["m"], g["W"], g["E"], g["l_max"]
+    bn, eb, nb, ep = g["bn"], g["eb"], g["nb"], g["ep"]
+    B_src, B_pair, tile = (uni["source_batch"], uni["pair_batch"],
+                           uni["join_tile"])
+    i32, f32 = jnp.int32, jnp.float32
+
+    def s(shape, dtype):
+        import jax
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    def index_args(B):
+        return (s((n, W), i32), s((n, W), f32), s((n,), f32))
+
+    def flat_edges():
+        # serving shape: the edge list padded to its capacity bucket
+        return (s((E,), i32), s((E,), i32), s((E,), f32))
+
+    def blk_edges():
+        return (s((nb, ep), i32), s((nb, ep), i32), s((nb, ep), f32))
+
+    specs: list[ProgramSpec] = []
+
+    def pair_make():
+        from repro.core.index import _pair_query_batch
+        args = (*index_args(B_pair), s((B_pair,), i32),
+                s((B_pair,), i32))
+        return (lambda *a: _pair_query_batch(*a, n=n)), args
+
+    specs.append(ProgramSpec(
+        name="pair/lax", file="src/repro/core/index.py",
+        make=pair_make,
+        dims=(Dim("batch", B_pair, "engine-pair-batch"),
+              Dim("width", W, "cap-bucket"))))
+
+    def source_make():
+        from repro.core.single_source import batched_single_source
+        args = (*index_args(B_src), *flat_edges(), s((B_src,), i32),
+                s((), f32))
+        return (lambda *a: batched_single_source(
+            *a, n=n, l_max=l_max)), args
+
+    specs.append(ProgramSpec(
+        name="source/lax", file="src/repro/core/single_source.py",
+        make=source_make,
+        dims=(Dim("batch", B_src, "engine-source-batch"),
+              Dim("width", W, "cap-bucket"),
+              Dim("edges", E, "cap-bucket"))))
+
+    def source_pl_make():
+        from repro.core.single_source import batched_single_source_pallas
+        args = (*index_args(B_src), *blk_edges(), s((B_src,), i32),
+                s((), f32))
+        return (lambda *a: batched_single_source_pallas(
+            *a, n=n, l_max=l_max, bn=bn, eb=eb, interpret=True)), args
+
+    specs.append(ProgramSpec(
+        name="source/pallas", file="src/repro/core/single_source.py",
+        make=source_pl_make,
+        dims=(Dim("batch", B_src, "engine-source-batch"),
+              Dim("width", W, "cap-bucket"),
+              Dim("edge_pad", ep, "eb-multiple"))))
+
+    for k in sorted({b for b in uni["k_buckets"] if b <= n} | {n}):
+        def topk_make(k=k):
+            from repro.core.topk import batched_topk
+            args = (*index_args(B_src), *flat_edges(),
+                    s((B_src,), i32), s((), f32))
+            return (lambda *a: batched_topk(
+                *a, n=n, l_max=l_max, k=k)), args
+
+        specs.append(ProgramSpec(
+            name=f"topk/lax/k={k}", file="src/repro/core/topk.py",
+            make=topk_make,
+            dims=(Dim("batch", B_src, "engine-source-batch"),
+                  Dim("k", k, "k-bucket"))))
+
+    def topk_pl_make():
+        from repro.core.topk import batched_topk_pallas
+        args = (*index_args(B_src), *blk_edges(), s((B_src,), i32),
+                s((), f32))
+        return (lambda *a: batched_topk_pallas(
+            *a, n=n, l_max=l_max, k=16, bn=bn, eb=eb,
+            interpret=True)), args
+
+    specs.append(ProgramSpec(
+        name="topk/pallas/k=16", file="src/repro/core/topk.py",
+        make=topk_pl_make,
+        dims=(Dim("batch", B_src, "engine-source-batch"),
+              Dim("k", 16, "k-bucket"),
+              Dim("edge_pad", ep, "eb-multiple"))))
+
+    def join_make():
+        from repro.core.topk import batched_topk
+        args = (*index_args(tile), *flat_edges(), s((tile,), i32),
+                s((), f32))
+        return (lambda *a: batched_topk(
+            *a, n=n, l_max=l_max, k=16)), args
+
+    specs.append(ProgramSpec(
+        name="join/tile", file="src/repro/join/sweep.py",
+        make=join_make,
+        dims=(Dim("tile", tile, "join-tile"),
+              Dim("k", 16, "k-bucket"))))
+
+    def walk_make():
+        from repro.core import walks
+        import jax.random as jr
+        Wb = walks.WALK_CHUNK_MIN
+        args = (s((n + 1,), i32), s((E,), i32), s((n,), i32),
+                s((Wb,), i32), s((Wb,), i32), jr.PRNGKey(0), 0.6)
+        return (lambda *a: walks.paired_meet(*a, t_max=10)), args
+
+    from repro.core import walks as _walks
+    specs.append(ProgramSpec(
+        name="walk/paired_meet", file="src/repro/core/walks.py",
+        make=walk_make,
+        dims=(Dim("chunk", _walks.WALK_CHUNK_MIN, "walk-chunk"),
+              Dim("edge_cap", E, "cap-bucket"))))
+
+    specs.extend(_sharded_specs(g, uni))
+    return specs
+
+
+def _sharded_specs(g: dict, uni: dict) -> list[ProgramSpec]:
+    """The 4 shard_map fan-out jits on a 2-device mesh (DESIGN.md §8);
+    shapes carry NamedShardings so AOT lowering sees the real layout
+    instead of inserting reshard collectives."""
+    n, W, l_max = g["n"], g["W"], g["l_max"]
+    bn, eb = g["bn"], g["eb"]
+    S = 2
+    n_loc = n // S
+    E_loc = g["E"]                       # per-shard edge cap bucket
+    nb_loc = -(-n_loc // bn)
+    pw = eb                              # pblk cap (multiple of eb)
+    B = uni["source_batch"]
+    file = "src/repro/core/shard_query.py"
+
+    def make_factory(pallas: bool, topk: bool):
+        def make():
+            import jax
+            import jax.numpy as jnp
+            from jax.sharding import NamedSharding
+            from repro.core import shard_query
+            from repro.launch.sharding import sling_index_specs
+            mesh = shard_query.serving_mesh(S)
+            sp = sling_index_specs("data")
+
+            def sh(shape, dtype, spec):
+                return jax.ShapeDtypeStruct(
+                    shape, dtype, sharding=NamedSharding(mesh, spec))
+
+            i32, f32 = jnp.int32, jnp.float32
+            idx = (sh((n, W), i32, sp["keys"]),
+                   sh((n, W), f32, sp["vals"]),
+                   sh((n,), f32, sp["d"]))
+            if pallas:
+                e = sp["pblk"]
+                edges = (sh((S, nb_loc, pw), i32, e),
+                         sh((S, nb_loc, pw), i32, e),
+                         sh((S, nb_loc, pw), f32, e))
+            else:
+                e = sp["blk_src"]
+                edges = (sh((S, E_loc), i32, e),
+                         sh((S, E_loc), i32, e),
+                         sh((S, E_loc), f32, e))
+            args = (*idx, *edges, sh((B,), i32, sp["queries"]),
+                    jax.ShapeDtypeStruct((), f32))
+            kw = dict(mesh=mesh, axis="data", n=n, n_loc=n_loc,
+                      l_max=l_max)
+            if pallas:
+                kw.update(bn=bn, eb=eb, interpret=True)
+            if topk:
+                kw.update(k=16)
+                fn = (shard_query._sharded_topk_pallas if pallas
+                      else shard_query._sharded_topk)
+            else:
+                fn = (shard_query._sharded_source_pallas if pallas
+                      else shard_query._sharded_source)
+            return (lambda *a: fn(*a, **kw)), args
+        return make
+
+    out = []
+    for pallas in (False, True):
+        for topk in (False, True):
+            kind = "topk" if topk else "source"
+            backend = "pallas" if pallas else "lax"
+            dims = [Dim("batch", B, "engine-source-batch"),
+                    Dim("width", W, "cap-bucket")]
+            if pallas:
+                dims.append(Dim("pblk_cap", pw, "eb-multiple"))
+            else:
+                dims.append(Dim("edge_cap", E_loc, "cap-bucket"))
+            if topk:
+                dims.append(Dim("k", 16, "k-bucket"))
+            out.append(ProgramSpec(
+                name=f"sharded-{kind}/{backend}", file=file,
+                make=make_factory(pallas, topk), dims=tuple(dims),
+                devices=S))
+    return out

@@ -1,0 +1,33 @@
+"""Shared compile-cache introspection (the dynamic recompile gates).
+
+The zero-recompile invariants are enforced twice: statically by the
+jit-boundary pass (repro.analysis.jaxpr_passes) and dynamically by the
+``compile_count()`` gates the walk/join benches and tests assert
+around. The dynamic counters used to be duplicated in
+``core/walks.py`` and ``join/sweep.py``; this module is now the one
+definition -- both keep thin re-exports so call sites don't churn.
+"""
+from __future__ import annotations
+
+
+def compile_count(*jitted) -> int:
+    """Distinct compiled programs across the given jitted callables
+    (sum of jax's per-function pjit cache sizes)."""
+    return sum(int(f._cache_size()) for f in jitted)
+
+
+def walk_compile_count() -> int:
+    """Distinct compiled paired-walk programs in this process (the
+    preprocessing-path recompile-storm gate)."""
+    from repro.core import walks
+    return compile_count(walks.paired_meet)
+
+
+def join_compile_count() -> int:
+    """Distinct compiled tile programs in this process: single-device
+    fused top-k + sharded fan-out, both push backends (the
+    recompiles-across-tiles gate, benchmarks/bench_join.py)."""
+    from repro.core import shard_query, topk
+    return compile_count(topk.batched_topk, topk.batched_topk_pallas,
+                         shard_query._sharded_topk,
+                         shard_query._sharded_topk_pallas)

@@ -394,7 +394,7 @@ class _CooSink:
             import os
             os.makedirs(self.spill_dir, exist_ok=True)
             path = os.path.join(self.spill_dir, f"{self.tag}_{b0}.npz")
-            np.savez(path, src=src, key=key, val=val)
+            np.savez(path, src=src, key=key, val=val)  # slinglint: disable=banned-api -- scratch spill, re-read and deleted within this build
             self._files.append(path)
         else:
             self._acc.append((src, key, val))

@@ -267,7 +267,7 @@ def _save_v2(idx: SlingIndex, path: str) -> None:
     meta["_stale"] = float(idx.stale)
     meta["_epoch"] = int(idx.epoch)
     tmp = path + ".tmp.npz"
-    np.savez_compressed(
+    np.savez_compressed(  # slinglint: disable=banned-api -- the atomic writer itself (tmp + os.replace below)
         tmp, d=idx.d, keys=idx.hp.keys, vals=idx.hp.vals,
         counts=idx.hp.counts,
         reduced=(idx.reduced if idx.reduced is not None

@@ -107,8 +107,11 @@ def check_walk_mesh(mesh, mesh_axis: str, chunk: int) -> None:
 
 def compile_count() -> int:
     """Distinct compiled paired-walk programs in this process (the
-    regression gate for recompile storms on the preprocessing path)."""
-    return int(paired_meet._cache_size())
+    regression gate for recompile storms on the preprocessing path).
+    Thin re-export of :func:`repro.analysis.runtime.walk_compile_count`
+    (one cache-introspection definition, shared with the join gate)."""
+    from repro.analysis.runtime import walk_compile_count
+    return walk_compile_count()
 
 
 def prime_chunk_buckets(dg: DeviceGraph, key, sqrt_c: float, t_max: int,

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 
 import numpy as np
 
@@ -108,13 +109,20 @@ class KnnGraph:
             "l_max": int(self.l_max), "epoch": int(self.epoch),
             "n": int(self.n), "mesh_shards": int(self.mesh_shards),
         }
-        with open(path, "wb") as f:
-            np.savez_compressed(
+        # atomic publish: write the payload to a sibling tmp, fsync,
+        # then os.replace -- a preemption mid-save leaves the previous
+        # artifact intact, never a torn file (INDEX_FORMAT.md)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            np.savez_compressed(  # slinglint: disable=banned-api -- the atomic writer itself
                 f, meta=json.dumps(meta), sources=self.sources,
                 indptr=self.indptr, nbr_ids=self.nbr_ids,
                 nbr_scores=self.nbr_scores,
                 truncated=(self.truncated if self.truncated is not None
                            else np.zeros(0, bool)))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
 
     @staticmethod
     def load(path: str) -> "KnnGraph":

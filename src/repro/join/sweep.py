@@ -72,12 +72,11 @@ def compile_count() -> int:
     """Distinct compiled tile programs in this process (single-device
     fused top-k + sharded fan-out, both push backends) -- the
     regression gate for recompiles across tiles
-    (benchmarks/bench_join.py)."""
-    from repro.core import shard_query, topk
-    return int(topk.batched_topk._cache_size()
-               + topk.batched_topk_pallas._cache_size()
-               + shard_query._sharded_topk._cache_size()
-               + shard_query._sharded_topk_pallas._cache_size())
+    (benchmarks/bench_join.py). Thin re-export of
+    :func:`repro.analysis.runtime.join_compile_count` (one
+    cache-introspection definition, shared with the walk gate)."""
+    from repro.analysis.runtime import join_compile_count
+    return join_compile_count()
 
 
 def _kq(cfg: JoinConfig, n: int) -> int:
@@ -135,7 +134,7 @@ def _save_checkpoint(path: str, fp: dict, sources: np.ndarray,
     meta["tiles_done"] = int(tiles_done)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
-        np.savez_compressed(f, meta=json.dumps(meta), sources=sources,
+        np.savez_compressed(f, meta=json.dumps(meta), sources=sources,  # slinglint: disable=banned-api -- the atomic writer itself (tmp + os.replace below)
                             vals=vals[:done], ids=ids[:done])
     os.replace(tmp, path)
 

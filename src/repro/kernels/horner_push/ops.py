@@ -162,25 +162,6 @@ def push_cost_model(n: int, m: int, B: int, W: int, l_max: int, *,
             "lax_bytes": int(4 * lax), "pallas_bytes": int(4 * pallas)}
 
 
-def _sub_jaxprs(v):
-    from jax import core
-    if isinstance(v, core.Jaxpr):
-        return [v]
-    if isinstance(v, core.ClosedJaxpr):
-        return [v.jaxpr]
-    if isinstance(v, (list, tuple)):
-        return [s for x in v for s in _sub_jaxprs(x)]
-    return []
-
-
-def _iter_eqns(jaxpr):
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for v in eqn.params.values():
-            for sub in _sub_jaxprs(v):
-                yield from _iter_eqns(sub)
-
-
 def count_hbm_intermediates(fn, *args, min_elems: int) -> int:
     """Interpret-measurable fusion metric: the number of traced ops
     (recursively, through jit/scan sub-jaxprs) producing an array of
@@ -189,11 +170,10 @@ def count_hbm_intermediates(fn, *args, min_elems: int) -> int:
     per-step prune/gather/messages/scatter/add chain to one pallas_call
     op, so its count is structurally smaller at every n -- the op-count
     form of the acceptance gate, measurable on CPU without a TPU run.
-    """
-    jaxpr = jax.make_jaxpr(fn)(*args)
-    count = 0
-    for eqn in _iter_eqns(jaxpr.jaxpr):
-        if any(getattr(v.aval, "size", 0) >= min_elems
-               for v in eqn.outvars):
-            count += 1
-    return count
+
+    Promoted to a general analyzer pass (repro.analysis.jaxpr_passes:
+    the ``hbm-budget`` pass gates every push program against baselined
+    budgets); this thin re-export keeps the historical call sites."""
+    from repro.analysis.jaxpr_passes import \
+        count_hbm_intermediates as _count
+    return _count(fn, *args, min_elems=min_elems)

@@ -34,17 +34,17 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
     from repro.launch import sharding as sh
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = mesh.size
-    t0 = time.time()
+    t0 = time.perf_counter()
     # tracing must happen inside use_mesh_rules so the models' logical()
     # activation annotations resolve against this mesh; the cell may
     # refine the rules (e.g. decode's split-KV overrides)
     cell = specs.make_cell(arch_id, shape_name, mesh, rules)
     with mesh, sh.use_mesh_rules(mesh, cell.rules):
         lowered = cell.jitted().lower(*cell.args)
-        t_lower = time.time() - t0
-        t0 = time.time()
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
         compiled = lowered.compile()
-        t_compile = time.time() - t0
+        t_compile = time.perf_counter() - t0
     ma = compiled.memory_analysis()
     roof = hlo_analysis.analyze_compiled(compiled, cell.model_flops, n_dev)
     rec = {

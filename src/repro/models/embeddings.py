@@ -16,6 +16,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.launch.sharding import logical
 
 
@@ -36,10 +38,10 @@ def embedding_bag(table, ids, bag_ids, n_bags: int, mode: str = "sum",
     if weights is not None:
         rows = rows * weights[:, None]
     if mode == "sum":
-        return jax.ops.segment_sum(rows, bag_ids, num_segments=n_bags)
+        return compat.segment_sum(rows, bag_ids, num_segments=n_bags)
     if mode == "mean":
-        s = jax.ops.segment_sum(rows, bag_ids, num_segments=n_bags)
-        c = jax.ops.segment_sum(jnp.ones_like(ids, jnp.float32), bag_ids,
+        s = compat.segment_sum(rows, bag_ids, num_segments=n_bags)
+        c = compat.segment_sum(jnp.ones_like(ids, jnp.float32), bag_ids,
                                 num_segments=n_bags)
         return s / jnp.maximum(c, 1.0)[:, None]
     if mode == "max":

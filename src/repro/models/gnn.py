@@ -1,7 +1,7 @@
 """GNN family: GCN, GAT, PNA, and a GraphCast-style
 encoder-processor-decoder mesh GNN.
 
-Message passing is built on edge-index gather + ``jax.ops.segment_sum``
+Message passing is built on edge-index gather + ``compat.segment_sum``
 / ``segment_max`` (JAX has no CSR SpMM -- DESIGN.md section 2); this is
 the *same* pull operator that powers the SLING HP index, and both share
 the Pallas ELL kernel (repro.kernels.spmv_ell) on the hot path.
@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 import jax.random as jr
 import numpy as np
+
+from repro import compat
 
 from repro.launch.sharding import logical
 from repro.models.layers import dense_init, leaky_relu, segment_softmax
@@ -115,8 +117,8 @@ def gcn_norm_weights(edge_src, edge_dst, edge_mask, n: int):
     """Symmetric normalization: edge weight 1/sqrt(d~_src d~_dst) and
     self-loop weight 1/d~_v, with d~ = deg + 1 (Kipf & Welling)."""
     ones = edge_mask.astype(jnp.float32)
-    deg = jax.ops.segment_sum(ones, edge_dst, num_segments=n) + 1.0
-    deg_s = jax.ops.segment_sum(ones, edge_src, num_segments=n) + 1.0
+    deg = compat.segment_sum(ones, edge_dst, num_segments=n) + 1.0
+    deg_s = compat.segment_sum(ones, edge_src, num_segments=n) + 1.0
     w_edge = ones * jax.lax.rsqrt(deg_s[edge_src]) * jax.lax.rsqrt(deg[edge_dst])
     w_self = 1.0 / deg
     return w_edge, w_self
@@ -126,7 +128,7 @@ def spmm(h, edge_src, edge_dst, w_edge, n: int):
     """segment-sum SpMM: out[v] = sum_{e: dst=v} w_e * h[src_e]."""
     msgs = h[edge_src] * w_edge[:, None]
     msgs = logical(msgs, "edges", "feat")
-    return jax.ops.segment_sum(msgs, edge_dst, num_segments=n)
+    return compat.segment_sum(msgs, edge_dst, num_segments=n)
 
 
 # ----------------------------------------------------------------------
@@ -169,7 +171,7 @@ def forward(cfg: GNNConfig, params: dict, batch: dict):
                 out_axes=1)(e)
             alpha = alpha * em[:, None]
             msgs = z[es] * alpha[:, :, None]             # (M, H, dh)
-            agg = jax.ops.segment_sum(msgs, ed, num_segments=n)
+            agg = compat.segment_sum(msgs, ed, num_segments=n)
             h = agg.reshape(n, H * dh)
             h = logical(h, "nodes", "feat")
             if i < L - 1:
@@ -178,14 +180,14 @@ def forward(cfg: GNNConfig, params: dict, batch: dict):
 
     if cfg.kind == "pna":
         ones = em.astype(jnp.float32)
-        deg = jax.ops.segment_sum(ones, ed, num_segments=n)
+        deg = compat.segment_sum(ones, ed, num_segments=n)
         log_deg = jnp.log1p(deg)[:, None]
         mean_log_deg = jnp.mean(log_deg) + 1e-6
         h = feats
         for i in range(cfg.n_layers):
             z = jax.nn.relu(h @ g["w_pre"][i])           # (N, dh)
             msgs = z[es] * em[:, None]
-            s_sum = jax.ops.segment_sum(msgs, ed, num_segments=n)
+            s_sum = compat.segment_sum(msgs, ed, num_segments=n)
             s_mean = s_sum / jnp.maximum(deg, 1.0)[:, None]
             neg_inf = jnp.where(em[:, None] > 0, z[es], -1e30)
             s_max = jax.ops.segment_max(neg_inf, ed, num_segments=n)
@@ -193,7 +195,7 @@ def forward(cfg: GNNConfig, params: dict, batch: dict):
             pos_inf = jnp.where(em[:, None] > 0, z[es], 1e30)
             s_min = -jax.ops.segment_max(-pos_inf, ed, num_segments=n)
             s_min = jnp.where(jnp.isfinite(s_min), s_min, 0.0)
-            sq = jax.ops.segment_sum(msgs * msgs, ed, num_segments=n)
+            sq = compat.segment_sum(msgs * msgs, ed, num_segments=n)
             var = sq / jnp.maximum(deg, 1.0)[:, None] - s_mean ** 2
             s_std = jnp.sqrt(jnp.maximum(var, 0.0))
             aggs = {"mean": s_mean, "max": s_max, "min": s_min, "std": s_std,
@@ -226,7 +228,7 @@ def forward(cfg: GNNConfig, params: dict, batch: dict):
                        "edges", "feat")
         msg = jax.nn.relu(pair @ g["g2m_edge"])
         msg = logical(msg, "edges", "feat")
-        h = h + jax.ops.segment_sum(msg * g2m_m[:, None], g2m_d,
+        h = h + compat.segment_sum(msg * g2m_m[:, None], g2m_d,
                                     num_segments=n)
         # mesh processor
         for i in range(cfg.n_layers):
@@ -234,7 +236,7 @@ def forward(cfg: GNNConfig, params: dict, batch: dict):
                            "edges", "feat")
             msg = jax.nn.relu(pair @ g["proc_edge"][i])
             msg = logical(msg, "edges", "feat")
-            agg = jax.ops.segment_sum(msg * em[:, None], ed, num_segments=n)
+            agg = compat.segment_sum(msg * em[:, None], ed, num_segments=n)
             h = h + jax.nn.relu(
                 jnp.concatenate([h, agg], -1) @ g["proc_node"][i])
             h = logical(h, "nodes", "feat")
@@ -244,7 +246,7 @@ def forward(cfg: GNNConfig, params: dict, batch: dict):
                        "edges", "feat")
         msg = jax.nn.relu(pair @ g["m2g_edge"])
         msg = logical(msg, "edges", "feat")
-        h = h + jax.ops.segment_sum(msg * m2g_m[:, None], m2g_d,
+        h = h + compat.segment_sum(msg * m2g_m[:, None], m2g_d,
                                     num_segments=n)
         return h @ g["dec"]
 

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.launch.sharding import active_mesh
 
 
@@ -58,7 +59,7 @@ def gcn_loss_sharded(cfg, params, batch):
             h = h @ ws_l[i] + bs_l[i]
             h_full = jax.lax.all_gather(h, axes, tiled=True)   # (n, Fi)
             msgs = h_full[src] * w_e[:, None]
-            h = jax.ops.segment_sum(msgs, dstl, num_segments=n_l) \
+            h = compat.segment_sum(msgs, dstl, num_segments=n_l) \
                 + h * w_self_l[:, None]
             if i < cfg.n_layers - 1:
                 h = jax.nn.relu(h)
@@ -72,7 +73,6 @@ def gcn_loss_sharded(cfg, params, batch):
         return (tot / jnp.maximum(cnt, 1.0)).reshape(1)
 
     node_spec = P(axes, *([None] * 1))
-    from repro import compat
     sm = compat.shard_map(
         local, mesh=mesh,
         in_specs=(P(axes, None), P(axes, None), P(axes, None),

@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import jax.random as jr
 import numpy as np
 
+from repro import compat
+
 
 def rms_norm(x, scale, eps: float = 1e-6):
     var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
@@ -61,5 +63,5 @@ def segment_softmax(scores, seg_ids, num_segments: int):
     """Softmax over groups (e.g. GAT edge scores grouped by dst node)."""
     smax = jax.ops.segment_max(scores, seg_ids, num_segments=num_segments)
     ex = jnp.exp(scores - smax[seg_ids])
-    den = jax.ops.segment_sum(ex, seg_ids, num_segments=num_segments)
+    den = compat.segment_sum(ex, seg_ids, num_segments=num_segments)
     return ex / jnp.maximum(den[seg_ids], 1e-20)

@@ -172,6 +172,18 @@ class BatchRecord:
 class ServeFrontend:
     """SLO-aware admission + routing over ``QueryEngine`` replicas."""
 
+    # Lock contract, checked statically by repro.analysis
+    # (ast_passes.LockDisciplinePass): these fields are only mutated
+    # under self._lock (self._idle is a Condition sharing it), inside
+    # *_locked helpers, or in __init__; and nothing blocking --
+    # dispatch, drain, joins -- runs while the lock is held.
+    _SLINGLINT_GUARDED = {
+        "locks": ("_lock", "_idle"),
+        "fields": ("_queues", "_inflight", "_rr", "_epoch",
+                   "_swapping", "_closed", "_counts", "_occ_sum",
+                   "batch_log"),
+    }
+
     def __init__(self, index, g, config: FrontendConfig | None = None,
                  clock=None, engines=None):
         self.cfg = config or FrontendConfig()

@@ -1,0 +1,20 @@
+"""slinglint fixture: planted banned-API uses.
+
+Never imported -- parsed only (the jax import below never executes).
+"""
+import os
+
+import numpy as np
+
+
+def planted_savez(path, arr):
+    np.savez(path, arr=arr)            # PLANTED: raw np.savez
+
+
+def planted_rename(a, b):
+    os.rename(a, b)                    # PLANTED: os.rename
+
+
+def planted_segment_sum(data, ids, n):
+    import jax
+    return jax.ops.segment_sum(data, ids, n)   # PLANTED: removed API

@@ -1,0 +1,19 @@
+"""slinglint fixture: planted wall-clock reads outside the seam.
+
+Never imported -- parsed only. ``perf_counter`` documents the allowed
+duration-metrics exception.
+"""
+import time
+from time import monotonic as mono
+
+
+def planted_sleep():
+    time.sleep(0.1)                    # PLANTED: time.sleep
+
+
+def planted_aliased_read():
+    return mono()                      # PLANTED: aliased time.monotonic
+
+
+def ok_duration():
+    return time.perf_counter()         # allowed: metrics, not scheduling

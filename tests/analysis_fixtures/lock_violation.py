@@ -1,0 +1,36 @@
+"""slinglint fixture: planted lock-discipline violations.
+
+Never imported -- tests/test_analysis.py parses it and asserts the
+``lock-discipline`` pass fires on exactly these lines. The ``ok``
+methods document the shapes the pass must NOT flag.
+"""
+import threading
+
+
+class Racy:
+    _SLINGLINT_GUARDED = {"locks": ("_lock",), "fields": ("_items",)}
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items = []
+        self._free = 0
+
+    def ok_with(self, x):
+        with self._lock:
+            self._items.append(x)
+
+    def ok_locked_helper_locked(self, x):
+        self._items.append(x)          # *_locked: caller holds it
+
+    def ok_unguarded(self):
+        self._free += 1                # not a declared field
+
+    def racy_mutate(self, x):
+        self._items.append(x)          # PLANTED: mutation, no lock
+
+    def racy_assign(self):
+        self._items = []               # PLANTED: rebind, no lock
+
+    def racy_block(self, t):
+        with self._lock:
+            t.join()                   # PLANTED: blocking under lock

@@ -1,0 +1,14 @@
+"""slinglint fixture: the same violation classes, suppressed inline.
+
+The runner must report these as ``suppressed``, not as findings.
+"""
+import os
+import time
+
+
+def justified_sleep():
+    time.sleep(0.1)  # slinglint: disable=clock-seam -- fixture twin
+
+
+def justified_rename(a, b):
+    os.rename(a, b)  # slinglint: disable=banned-api -- fixture twin

@@ -52,15 +52,20 @@ def test_virtual_clock_fires_in_order_at_exact_deadlines():
 
 
 def test_scheduler_has_no_wall_clock_sleeps():
-    """The determinism claim, enforced: neither the frontend nor the
-    clock seam may ever call time.sleep (blocking waits go through
-    condition variables / events, never polling)."""
-    import inspect
-
+    """The determinism claim, enforced statically: neither the frontend
+    nor the clock seam may reference time.sleep/monotonic/time
+    (blocking waits go through condition variables / events, never
+    polling). Runs the slinglint clock-seam AST pass on the two
+    modules -- the same analysis CI gates repo-wide -- instead of the
+    old source grep, so aliased imports are caught too."""
+    from repro import analysis
+    from repro.analysis.ast_passes import ClockSeamPass
     from repro.serve import clock as clock_mod
     from repro.serve import frontend as frontend_mod
-    for mod in (frontend_mod, clock_mod):
-        assert "time.sleep(" not in inspect.getsource(mod), mod.__name__
+
+    findings = analysis.check_modules(ClockSeamPass(),
+                                      [clock_mod, frontend_mod])
+    assert findings == [], [f.message for f in findings]
 
 
 def test_monotonic_clock_timer_thread_survives_bad_callbacks():
