@@ -69,6 +69,75 @@ def run(sizes=(300, 1000), eps: float = 0.2):
 
 
 # ----------------------------------------------------------------------
+# builder rows: prsim hub schedule vs sling blocked schedule
+# ----------------------------------------------------------------------
+def run_builders(n: int = 1000, eps: float = 0.15) -> None:
+    """prsim-vs-sling HP-construction wall on a power-law graph
+    (schema-v2 rows; DESIGN.md section 15). Both schedules emit the
+    same certified entry set -- asserted here entry for entry, so the
+    wall comparison is between genuinely equivalent builds."""
+    import numpy as np
+
+    from benchmarks.common import emit_row
+    from repro import prsim
+    from repro.graph import stats as gstats
+
+    g = generators.powerlaw_fast(n, k=6, seed=0)
+    p = theory.plan(eps=eps, n=g.n)
+    skew = gstats.measure_skew(g)
+    # warm the PageRank step once so the row compares steady-state
+    # schedules, not first-call XLA compilation (same idiom as the
+    # fused-vs-host rows in run())
+    prsim.reverse_pagerank(g, max_iters=2)
+    collected = {}
+    for builder in ("sling", "prsim"):
+        sink = hp_index._CooSink(None, tag=f"bench_{builder}")
+        t0 = time.perf_counter()
+        if builder == "prsim":
+            ps = prsim.build_prsim_coo(g, p, sink)
+            derived = (f"hubs={ps.n_hubs} hub_mass={ps.hub_mass:.3f} "
+                       f"pr_iters={ps.pr_iters}")
+        else:
+            hp_index.sparse_hp_coo(g, p.theta, p.sqrt_c, p.l_max,
+                                   4096, sink)
+            derived = f"alpha={skew.alpha} score={skew.score:.1f}"
+        wall = time.perf_counter() - t0
+        collected[builder] = sink.collect()
+        emit_row(f"preprocess/build/builder={builder}", n=n,
+                 backend="host", mesh=1, wall_us=1e6 * wall,
+                 derived=derived,
+                 entries=int(len(collected[builder][1])))
+    def _canon(triple):
+        src, key, val = triple
+        order = np.lexsort((key, src))
+        return src[order], key[order], val[order]
+
+    for a, b in zip(_canon(collected["sling"]),
+                    _canon(collected["prsim"])):
+        assert np.array_equal(a, b), "builder entry sets diverged"
+
+
+def builder_smoke(n: int = 400) -> None:
+    """run.py --smoke gate: ``builder='auto'`` must pick prsim on a
+    measurably skewed graph and sling on a flat one (the selection
+    contract in graph/stats.py)."""
+    from benchmarks.common import emit_row
+    from repro.core import build
+
+    for gen, expect in ((generators.powerlaw_fast(n, k=6, seed=0),
+                         "prsim"),
+                        (generators.erdos_renyi(n, 4 * n, seed=0),
+                         "sling")):
+        got, skew = build.resolve_builder(gen, "auto")
+        emit_row(f"preprocess/builder_auto/expect={expect}", n=n,
+                 backend="host", mesh=1, wall_us=float("nan"),
+                 derived=f"picked={got} {skew.as_row()}")
+        assert got == expect, \
+            f"auto picked {got}, expected {expect}: {skew.as_row()}"
+    print("BUILDER_AUTO_OK")
+
+
+# ----------------------------------------------------------------------
 # mesh-scaling rows + the preprocess recompile gate
 # ----------------------------------------------------------------------
 def run_mesh(n: int = 1000, mesh: int = 2, eps: float = 0.2,

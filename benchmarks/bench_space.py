@@ -9,9 +9,14 @@ Three row families, all schema-v2 structured (``emit_row``):
     format-v3 eager vs format-v3 ``mmap=True`` (the O(1) path);
   * ``space/scale`` (``run_scale``) -- the 10^6-node out-of-core
     build: bytes/node, per-phase build walls, mmap-load wall, a served
-    single-source sample, and the process peak RSS. Full/--scale runs
-    only, never per-commit CI (scripts/ci.sh runs the 10^5 pytest
-    twin, tests/test_scale.py).
+    single-source sample, and the process peak RSS; asserts the
+    builder="auto" default selects prsim on the power-law graph and
+    the diagonal stays certified. Full/--scale runs only, never
+    per-commit CI (scripts/ci.sh runs the 10^5 pytest twin,
+    tests/test_scale.py);
+  * ``space/*/builder=`` (``run_builders``) -- prsim-vs-sling
+    bytes/node (must match exactly: same entry set) and mmap'd
+    serve throughput per builder provenance (DESIGN.md section 15).
 
 Smoke gate: quantized *float-channel payload* (HP vals + diagonal)
 bytes/node must be <= ``QUANT_GATE`` x the fp32 payload. The gate is
@@ -96,6 +101,50 @@ def run(sizes=(300, 1000, 3000), smoke: bool = False) -> None:
             os.rmdir(tmp)
 
 
+def run_builders(n: int = 2000, eps: float = 0.3,
+                 quant_frac: float = 0.2) -> None:
+    """prsim-vs-sling artifact rows (DESIGN.md section 15): bytes/node
+    of the packed v3 file and served single-source throughput off the
+    mmap'd artifact. The entry sets are identical by construction, so
+    bytes/node must match exactly; the rows exist to keep that claim
+    measured and to put a serve-throughput number next to each
+    builder's provenance."""
+    from repro.serve import EngineConfig, QueryEngine
+
+    g = generators.powerlaw_fast(n, k=6, seed=0)
+    tmp = tempfile.mkdtemp(prefix="sling_builders_")
+    sizes = {}
+    try:
+        for builder in ("sling", "prsim"):
+            path = os.path.join(tmp, f"{builder}.sling")
+            stats = build.build_index_scale(
+                g, path, eps=eps, quant_frac=quant_frac,
+                quantize="int16", builder=builder)
+            sizes[builder] = stats["bytes"]
+            emit_row(f"space/bytes_per_node/builder={builder}", n=n,
+                     backend="host", mesh=1, wall_us=float("nan"),
+                     derived=f"entries={stats['entries']}",
+                     bytes_per_node=stats["bytes"] / n)
+            idx = SlingIndex.load(path, mmap=True)
+            assert idx.builder == builder and not idx.uncertified_d
+            eng = QueryEngine(idx, g, EngineConfig(pair_batch=8,
+                                                   source_batch=2,
+                                                   k_buckets=(8,)))
+            us = np.array([0, 1], np.int32)
+            eng.single_source(us)               # compile once
+            wall = timeit(lambda: eng.single_source(us), repeat=3)
+            emit_row(f"space/serve_source/builder={builder}", n=n,
+                     backend="lax", mesh=1, wall_us=wall,
+                     throughput=len(us) / (wall * 1e-6),
+                     derived="2-source batch, mmap'd int16 index")
+            os.remove(path)
+        assert sizes["sling"] == sizes["prsim"], sizes
+    finally:
+        for f in os.listdir(tmp):
+            os.remove(os.path.join(tmp, f))
+        os.rmdir(tmp)
+
+
 def run_scale(n: int = 1_000_000, eps: float = 0.5,
               quant_frac: float = 0.2) -> None:
     """The 10^6-node out-of-core row (DESIGN.md section 13): sparse
@@ -113,6 +162,11 @@ def run_scale(n: int = 1_000_000, eps: float = 0.5,
         stats = build.build_index_scale(g, path, eps=eps,
                                         quant_frac=quant_frac,
                                         quantize="int16")
+        # the scale default is builder="auto" + the certified chunked
+        # diagonal; a power-law graph must select prsim (acceptance
+        # gate of the prsim issue, DESIGN.md section 15)
+        assert stats["d_mode"] == "estimate", stats["d_mode"]
+        assert stats["builder"] == "prsim", stats["builder"]
         emit_row("space/scale/build", n=n, backend="host", mesh=1,
                  wall_us=1e6 * (stats["d_wall_s"] + stats["hp_wall_s"]
                                 + stats["pack_wall_s"]),
@@ -120,6 +174,12 @@ def run_scale(n: int = 1_000_000, eps: float = 0.5,
                           f"width={stats['width']} "
                           f"bytes={stats['bytes']} d={stats['d_mode']}"),
                  bytes_per_node=stats["bytes"] / n)
+        emit_row("space/scale/builder", n=n, backend="host", mesh=1,
+                 wall_us=1e6 * stats["d_wall_s"],
+                 derived=(f"auto->{stats['builder']} "
+                          f"skew={stats.get('skew')} "
+                          f"prsim={stats.get('prsim')} "
+                          f"d certified ({stats['d_mode']})"))
         emit_row("space/scale/load_mmap", n=n, backend="host", mesh=1,
                  wall_us=timeit(lambda: SlingIndex.load(path, mmap=True),
                                 repeat=3))

@@ -82,7 +82,12 @@ def main() -> None:
     if want("preprocess"):
         from benchmarks import bench_preprocess
         bench_preprocess.run(sizes=sizes[:2])
+        # prsim-vs-sling build-wall rows (entry-set equality asserted)
+        bench_preprocess.run_builders(n=max(sizes))
         if args.smoke:
+            # auto-selection gate: builder="auto" must pick prsim on
+            # a power-law graph and sling on an ER graph
+            bench_preprocess.builder_smoke(n=400)
             # preprocess smoke (subprocess, forced host devices):
             # 2-shard build equivalence + the diagonal walk-path
             # recompile gate
@@ -90,6 +95,8 @@ def main() -> None:
     if want("space"):
         from benchmarks import bench_space
         bench_space.run(sizes=sizes, smoke=args.smoke)
+        # prsim-vs-sling artifact bytes/node + serve-throughput rows
+        bench_space.run_builders(n=1000 if args.smoke else 2000)
         if args.scale:
             # 10^6-node out-of-core build + mmap serving row; also
             # runs in full mode at 10^5 so the scale path stays

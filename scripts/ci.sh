@@ -54,8 +54,16 @@ XLA_FLAGS=--xla_force_host_platform_device_count=2 \
 echo "== scale smoke: 10^5-node out-of-core build under the RSS gate =="
 # subprocess child with an address-space rlimit; asserts the format-v3
 # streaming build + mmap serving stays out-of-core (tests/test_scale.py;
-# the 10^6 variant is benchmarks/run.py --scale, not per-commit)
+# the 10^6 variant is benchmarks/run.py --scale, not per-commit).
+# Covers both builders: the prsim twin is parameterized in.
 python -m pytest -x -q -m scale
+
+echo "== prsim suite: hub-decomposed builder wall =="
+# the prsim-built zoo x c oracle wall (quantized + mmap'd, served
+# through the unchanged stack within the UNCHANGED planned eps,
+# zero-new-compiled-shapes swap) minus the scale/serve twins already
+# run above (tests/test_oracle_differential.py, DESIGN.md section 15)
+python -m pytest -x -q -m "prsim and not scale and not serve"
 
 echo "== examples smoke (API drift gate) =="
 # the examples are the public face of the API: run them end to end so

@@ -226,6 +226,20 @@ def build_specs(device_count: int = 1) -> list[ProgramSpec]:
         dims=(Dim("chunk", _walks.WALK_CHUNK_MIN, "walk-chunk"),
               Dim("edge_cap", E, "cap-bucket"))))
 
+    def pr_make():
+        # the prsim builder's reverse-PageRank step: in-edge list
+        # padded to the shared edge-capacity bucket (DESIGN.md §15);
+        # the chunked certified diagonal reuses walk/paired_meet above
+        from repro.prsim.pagerank import _pr_step
+        args = (s((n,), f32), s((E,), i32), s((E,), i32), s((E,), f32),
+                s((n,), f32), s((), f32))
+        return (lambda *a: _pr_step(*a)), args
+
+    specs.append(ProgramSpec(
+        name="prsim/pr_step", file="src/repro/prsim/pagerank.py",
+        make=pr_make,
+        dims=(Dim("edge_cap", E, "cap-bucket"),)))
+
     specs.extend(_sharded_specs(g, uni))
     return specs
 

@@ -27,14 +27,57 @@ from repro.core.index import SlingIndex
 from repro.graph import csr
 
 
+def resolve_builder(g: csr.Graph, builder: str,
+                    mesh=None) -> tuple[str, object]:
+    """Resolve a ``builder=`` argument to a concrete backend.
+
+    "auto" measures the in-degree skew (graph/stats.py) and picks
+    "prsim" on measurably power-law graphs, "sling" otherwise --
+    except under a mesh, where the sharded dense build is the only
+    mesh-aware construction path, so "auto" stays "sling". Returns
+    ``(backend, SkewStats-or-None)``.
+    """
+    if builder == "auto":
+        if mesh is not None:
+            return "sling", None
+        from repro.graph import stats
+        return stats.choose_builder(g)
+    if builder not in ("sling", "prsim"):
+        raise ValueError(f"unknown builder {builder!r}; expected "
+                         "'auto', 'sling', or 'prsim'")
+    if builder == "prsim" and mesh is not None:
+        raise ValueError("the prsim builder is a host-side sparse "
+                         "schedule; mesh builds use builder='sling' "
+                         "(DESIGN.md section 15)")
+    return builder, None
+
+
+def _prsim_hp_table(g: csr.Graph, p: theory.SlingPlan,
+                    spill_dir: str | None, verbose: bool):
+    """In-RAM prsim build: hub/tail COO schedule -> packed HPTable
+    (entry-identical to the sparse SLING schedule; DESIGN.md §15)."""
+    from repro import prsim
+    sink = hp_index._CooSink(spill_dir, tag="hp_prsim")
+    pstats = prsim.build_prsim_coo(g, p, sink, progress=verbose)
+    src, key, val = sink.collect()
+    hp = hp_index._pack_coo(src, key, val, g.n, None, p.theta,
+                            p.sqrt_c, p.l_max)
+    return hp, pstats
+
+
 def build_index(g: csr.Graph, eps: float = 0.025, delta: float | None = None,
                 c: float = 0.6, seed: int = 0, adaptive: bool = True,
                 block: int = 256, spill_dir: str | None = None,
                 space_reduce: bool = False, enhance: bool = False,
                 exact_d: bool = False, stale_frac: float = 0.0,
                 quant_frac: float = 0.0,
+                builder: str = "sling",
                 mesh=None, mesh_axis: str = "data",
                 verbose: bool = False) -> SlingIndex:
+    backend, skew = resolve_builder(g, builder, mesh=mesh)
+    if verbose and builder == "auto":
+        print(f"build_index: auto-selected builder={backend}"
+              + ("" if skew is None else f" skew={skew.as_row()}"))
     p = theory.plan(eps=eps, delta=delta, c=c, n=g.n,
                     stale_frac=stale_frac, eps_quant_frac=quant_frac)
     if mesh is not None and not exact_d:
@@ -47,7 +90,9 @@ def build_index(g: csr.Graph, eps: float = 0.025, delta: float | None = None,
         d = diagonal.estimate_diagonal(g, p, seed=seed, adaptive=adaptive,
                                        mesh=mesh, mesh_axis=mesh_axis)
     t1 = time.perf_counter()
-    if mesh is not None:
+    if backend == "prsim":
+        hp, _ = _prsim_hp_table(g, p, spill_dir, verbose)
+    elif mesh is not None:
         hp = hp_index.shard_build_hp(g, theta=p.theta, sqrt_c=p.sqrt_c,
                                      l_max=p.l_max, mesh=mesh,
                                      axis=mesh_axis, block=block,
@@ -57,7 +102,7 @@ def build_index(g: csr.Graph, eps: float = 0.025, delta: float | None = None,
                                      l_max=p.l_max, block=block,
                                      spill_dir=spill_dir, progress=verbose)
     t2 = time.perf_counter()
-    idx = SlingIndex(plan=p, d=d, hp=hp)
+    idx = SlingIndex(plan=p, d=d, hp=hp, builder=backend)
     if space_reduce:
         from repro.core import optimizations
         optimizations.apply_space_reduction(idx, g)
@@ -65,22 +110,24 @@ def build_index(g: csr.Graph, eps: float = 0.025, delta: float | None = None,
         from repro.core import optimizations
         optimizations.mark_for_enhancement(idx, g)
     if verbose:
-        print(f"build_index: d={t1 - t0:.2f}s hp={t2 - t1:.2f}s "
-              f"entries={int(hp.counts.sum())} bytes={idx.nbytes()}")
+        print(f"build_index: builder={backend} d={t1 - t0:.2f}s "
+              f"hp={t2 - t1:.2f}s entries={int(hp.counts.sum())} "
+              f"bytes={idx.nbytes()}")
     return idx
 
 
 def approx_diagonal_degree(g: csr.Graph, c: float) -> np.ndarray:
-    """O(n) degree-based diagonal approximation for the scale path.
+    """O(n) degree-based diagonal approximation (UNCERTIFIED).
 
     Eq. 15: d_k = 1 - c/|I(k)| - c * mu_k with mu_k the mean pair
     SimRank of k's in-neighbors; dropping the mu_k term gives
     d_k ~= 1 - c/|I(k)| (1.0 for in-degree 0). This is NOT certified
     by Theorem 1 -- the walk estimator's eps_d bound does not apply --
-    so it is reserved for the million-node mechanics benches and the
-    scale smoke test, where the gate is memory/latency, not the eps
-    certificate (``build_index_scale(d_mode="exact"/"estimate")``
-    keeps the certified paths).
+    so it sits behind ``build_index_scale(uncertified_diagonal=True)``,
+    is recorded as such in the artifact header, and is refused by
+    ``QueryEngine`` unless ``EngineConfig(allow_uncertified=True)``
+    (DESIGN.md section 15). The certified scale default is the chunked
+    Alg-4 pass, :func:`~repro.core.diagonal.estimate_diagonal_chunked`.
     """
     deg = np.maximum(g.in_deg, 1).astype(np.float64)
     d = np.where(g.in_deg > 0, 1.0 - c / deg, 1.0)
@@ -91,50 +138,87 @@ def build_index_scale(g: csr.Graph, path: str, eps: float = 0.1,
                       delta: float | None = None, c: float = 0.6,
                       seed: int = 0, quant_frac: float = 0.2,
                       quantize: str | None = "int16",
-                      d_mode: str = "degree", block: int = 4096,
+                      builder: str = "auto",
+                      d_mode: str = "estimate",
+                      d_shard: int = diagonal.DEFAULT_D_SHARD,
+                      uncertified_diagonal: bool = False,
+                      block: int = 4096,
                       spill_dir: str | None = None,
                       row_chunk: int = 1 << 16,
                       verbose: bool = False) -> dict:
     """Out-of-core build straight to a format-v3 file (DESIGN.md
-    section 13): sparse pure-NumPy HP propagation
-    (:func:`~repro.core.hp_index.build_hp_table_sparse`'s driver)
-    feeding ``pack_coo_to_v3`` -- the packed (n, width) arrays never
+    sections 13 and 15): sparse pure-NumPy HP propagation feeding
+    ``pack_coo_to_v3`` -- the packed (n, width) arrays never
     materialize in RAM, so a 10^6-node power-law index builds and
     saves inside the scale smoke test's peak-RSS gate, then serves
     via ``SlingIndex.load(path, mmap=True)``.
 
-    ``d_mode``: "degree" (O(n) uncertified approximation, the scale
-    default -- see :func:`approx_diagonal_degree`), "estimate" (Alg 4
-    walks, certified, O(n * walks)), or "exact" (O(n^3)-ish, tiny
-    graphs only). Returns the ``pack_coo_to_v3`` stats dict plus
-    build wall times.
+    ``builder``: "auto" (measure in-degree skew and pick, the
+    default -- power-law graphs get the prsim hub schedule), "sling",
+    or "prsim"; the choice is recorded in the artifact header.
+
+    ``d_mode``: "estimate" (chunked out-of-core Alg 4 over ``d_shard``
+    node shards, certified, the default) or "exact" (O(n^3)-ish, tiny
+    graphs only). The O(n) degree approximation is NOT a d_mode:
+    it voids the eps certificate, so it sits behind the explicit
+    ``uncertified_diagonal=True`` opt-in, which is recorded in the
+    artifact header and refused at serve time unless
+    ``EngineConfig(allow_uncertified=True)``.
+
+    Returns the ``pack_coo_to_v3`` stats dict plus build wall times,
+    builder provenance, and (prsim) hub-phase stats.
     """
     from repro.core.index import pack_coo_to_v3
 
+    if d_mode == "degree":
+        raise ValueError(
+            "d_mode='degree' is gone: the degree approximation is "
+            "uncertified. Pass uncertified_diagonal=True explicitly "
+            "(recorded in the artifact and refused at serve time "
+            "unless allowed; DESIGN.md section 15)")
+    backend, skew = resolve_builder(g, builder)
+    if verbose and builder == "auto":
+        print(f"build_index_scale: auto-selected builder={backend}"
+              + ("" if skew is None else f" skew={skew.as_row()}"))
     p = theory.plan(eps=eps, delta=delta, c=c, n=g.n,
                     eps_quant_frac=quant_frac)
     t0 = time.perf_counter()
-    if d_mode == "exact":
+    if uncertified_diagonal:
+        d = approx_diagonal_degree(g, c)
+        d_mode = "degree"
+    elif d_mode == "exact":
         d = diagonal.exact_diagonal(g, c).astype(np.float32)
     elif d_mode == "estimate":
-        d = diagonal.estimate_diagonal(g, p, seed=seed)
-    elif d_mode == "degree":
-        d = approx_diagonal_degree(g, c)
+        d = diagonal.estimate_diagonal_chunked(g, p, seed=seed,
+                                               shard=d_shard,
+                                               verbose=verbose)
     else:
         raise ValueError(f"unknown d_mode {d_mode!r}")
     t1 = time.perf_counter()
     sink = hp_index._CooSink(spill_dir, tag="hp_scale")
-    hp_index.sparse_hp_coo(g, p.theta, p.sqrt_c, p.l_max, block, sink,
-                           progress=verbose)
+    pstats = None
+    if backend == "prsim":
+        from repro import prsim
+        pstats = prsim.build_prsim_coo(g, p, sink, progress=verbose)
+    else:
+        hp_index.sparse_hp_coo(g, p.theta, p.sqrt_c, p.l_max, block,
+                               sink, progress=verbose)
     src, key, val = sink.collect()
     t2 = time.perf_counter()
     stats = pack_coo_to_v3(path, p, d, src, key, val, g.n,
-                           quantize=quantize, row_chunk=row_chunk)
+                           quantize=quantize, row_chunk=row_chunk,
+                           builder=backend,
+                           uncertified_d=uncertified_diagonal)
     t3 = time.perf_counter()
     stats.update(d_mode=d_mode, d_wall_s=t1 - t0, hp_wall_s=t2 - t1,
                  pack_wall_s=t3 - t2)
+    if skew is not None:
+        stats["skew"] = skew.as_row()
+    if pstats is not None:
+        stats["prsim"] = pstats.as_row()
     if verbose:
-        print(f"build_index_scale: d={t1 - t0:.2f}s hp={t2 - t1:.2f}s "
+        print(f"build_index_scale: builder={backend} d={t1 - t0:.2f}s "
+              f"({d_mode}) hp={t2 - t1:.2f}s "
               f"pack={t3 - t2:.2f}s entries={stats['entries']} "
               f"bytes={stats['bytes']}")
     return stats

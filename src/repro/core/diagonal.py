@@ -141,6 +141,42 @@ def estimate_diagonal(g: csr.Graph, plan: theory.SlingPlan,
     return d.astype(np.float32)
 
 
+DEFAULT_D_SHARD = 1 << 14  # nodes per chunked-estimation shard
+
+
+def estimate_diagonal_chunked(g: csr.Graph, plan: theory.SlingPlan,
+                              seed: int = 0,
+                              shard: int = DEFAULT_D_SHARD,
+                              chunk: int = walks.DEFAULT_CHUNK,
+                              dg: walks.DeviceGraph | None = None,
+                              verbose: bool = False) -> np.ndarray:
+    """Out-of-core Algorithm 4: the certified diagonal at scale
+    (DESIGN.md section 15).
+
+    A full-graph :func:`estimate_diagonal` materializes the phase-1
+    sample stream for every node at once -- O(n * n_r1) start pairs --
+    which at 10^6 nodes is gigabytes of host arrays before a single
+    walk runs. This driver runs the *same* estimator over contiguous
+    node shards (the subset mode incremental maintenance already
+    uses), so peak sample RAM is O(shard * n_r1) while every walk
+    batch still dispatches through the shared
+    ``walks.paired_meet_chunked`` compiled programs. Each shard draws
+    from its own seed stream (``seed + shard_index``), keeping samples
+    independent across shards; per node the two-phase Lemma-11
+    schedule -- and therefore the eps_d certificate -- is exactly that
+    of the monolithic pass.
+    """
+    dg = dg or walks.DeviceGraph.from_graph(g)
+    d = np.ones(g.n, np.float32)
+    for i, s0 in enumerate(range(0, g.n, shard)):
+        nodes = np.arange(s0, min(g.n, s0 + shard), dtype=np.int64)
+        d = estimate_diagonal(g, plan, seed=seed + i, chunk=chunk,
+                              dg=dg, nodes=nodes, d_init=d)
+        if verbose and i % 8 == 0:
+            print(f"  diagonal shard {s0}/{g.n}")
+    return d
+
+
 def exact_diagonal(g: csr.Graph, c: float, iters: int = 50) -> np.ndarray:
     """Ground-truth d_k from the power method (tests only; O(n^2) space).
 

@@ -486,9 +486,10 @@ def build_hp_table(g: csr.Graph, theta: float, sqrt_c: float,
 # ----------------------------------------------------------------------
 # sparse pure-NumPy build (million-node scale, DESIGN.md section 13)
 # ----------------------------------------------------------------------
-def _sparse_block_coo(g: csr.Graph, b0: int, b1: int, theta: float,
-                      sqrt_c: float, l_max: int):
-    """Alg 2 for seed block [b0, b1) with the frontier kept *sparse*.
+def _sparse_targets_coo(g: csr.Graph, targets: np.ndarray, theta: float,
+                        sqrt_c: float, l_max: int):
+    """Alg 2 for an arbitrary seed-column set ``targets`` with the
+    frontier kept *sparse*.
 
     Same prune-then-push recurrence as :func:`_propagate_block_coo`
     (strict ``> theta`` prune, pull weight sqrt_c / in_deg(dst)), but
@@ -499,12 +500,22 @@ def _sparse_block_coo(g: csr.Graph, b0: int, b1: int, theta: float,
     entries match the dense build away from the theta boundary (float
     summation order differs, so entries with value == theta +/- 1 ulp
     may differ; tests/test_scale.py bounds the discrepancy).
+
+    Columns are independent and each column's float64 summation order
+    depends only on its own frontier (sorted by destination node every
+    step), so the emitted entries for a given target are identical no
+    matter how targets are batched -- SLING's contiguous blocks and
+    prsim's hub/tail partition (repro.prsim) produce the same triples.
     """
-    B = b1 - b0
+    targets = np.asarray(targets, np.int64)
+    B = len(targets)
+    if B == 0:
+        return (np.zeros(0, np.int32), np.zeros(0, np.int32),
+                np.zeros(0, np.float32))
     out_ptr = g.out_ptr.astype(np.int64)
     out_idx = g.out_idx
     inv_in = sqrt_c / np.maximum(g.in_deg, 1).astype(np.float64)
-    node = np.arange(b0, b1, dtype=np.int64)
+    node = targets.copy()
     col = np.arange(B, dtype=np.int64)
     val = np.ones(B, np.float64)
     srcs, keys, vals = [], [], []
@@ -515,7 +526,8 @@ def _sparse_block_coo(g: csr.Graph, b0: int, b1: int, theta: float,
         if not len(node):
             break
         srcs.append(node.astype(np.int32))
-        keys.append((np.int64(l) * g.n + b0 + col).astype(np.int32))
+        keys.append((np.int64(l) * g.n
+                     + targets[col]).astype(np.int32))
         vals.append(v32)
         if l == l_max:
             break
@@ -542,6 +554,14 @@ def _sparse_block_coo(g: csr.Graph, b0: int, b1: int, theta: float,
     return (np.concatenate(srcs) if srcs else np.zeros(0, np.int32),
             np.concatenate(keys) if keys else np.zeros(0, np.int32),
             np.concatenate(vals) if vals else np.zeros(0, np.float32))
+
+
+def _sparse_block_coo(g: csr.Graph, b0: int, b1: int, theta: float,
+                      sqrt_c: float, l_max: int):
+    """Contiguous-block wrapper over :func:`_sparse_targets_coo` --
+    the seed schedule of the SLING sparse build."""
+    return _sparse_targets_coo(g, np.arange(b0, b1, dtype=np.int64),
+                               theta, sqrt_c, l_max)
 
 
 def sparse_hp_coo(g: csr.Graph, theta: float, sqrt_c: float,

@@ -49,7 +49,12 @@ V3_MAGIC = b"SLINGIDX"
 _V3_ALIGN = 64
 # every array member a v3 file may carry; anything else is refused
 _V3_MEMBERS = ("d", "keys", "vals", "counts", "reduced", "marks")
-_V3_HEADER_KEYS = {"plan", "stale", "epoch", "quant", "arrays"}
+_V3_HEADER_KEYS = {"plan", "stale", "epoch", "quant", "arrays",
+                   "builder", "uncertified_d"}
+# builder provenance values a v3 header may carry (INDEX_FORMAT.md):
+# an unknown builder is refused on load -- the reader cannot know
+# which certificate the entries were built under
+KNOWN_BUILDERS = ("sling", "prsim")
 
 
 @dataclasses.dataclass
@@ -67,6 +72,17 @@ class SlingIndex:
     # quantization recipe when hp.vals are int16/bf16 codes
     # (core/quantize.py); None = fp32 index
     quant: QuantInfo | None = None
+    # construction provenance (DESIGN.md section 15): which builder
+    # produced the HP entries. Both builders emit the same certified
+    # pruned-propagation entries, so this is provenance, not a serving
+    # switch -- but it must survive round-trips (bench attribution,
+    # and the refusal rule for builders this build does not know)
+    builder: str = "sling"
+    # True when d came from the O(n) degree approximation instead of a
+    # certified Alg-4 pass: the Theorem-1 eps bound does NOT hold.
+    # Recorded in the artifact and refused by QueryEngine unless
+    # EngineConfig.allow_uncertified (DESIGN.md section 15)
+    uncertified_d: bool = False
 
     @property
     def n(self) -> int:
@@ -173,6 +189,11 @@ class SlingIndex:
             if self.quant is not None:
                 raise ValueError("format v2 cannot carry a quantized "
                                  "index; save as v3 (INDEX_FORMAT.md)")
+            if self.builder != "sling" or self.uncertified_d:
+                raise ValueError(
+                    "format v2 has no builder/uncertified_d metadata "
+                    "slots; a reader would silently assume a certified "
+                    "sling build -- save as v3 (INDEX_FORMAT.md)")
             _save_v2(self, path)
         else:
             raise ValueError(f"cannot write format v{version}; this "
@@ -341,9 +362,13 @@ class V3Writer:
 
     def __init__(self, path: str, plan: theory.SlingPlan,
                  specs: dict[str, tuple], stale: float = 0.0,
-                 epoch: int = 0, quant: QuantInfo | None = None):
+                 epoch: int = 0, quant: QuantInfo | None = None,
+                 builder: str = "sling", uncertified_d: bool = False):
         self.path = path = os.fspath(path)
         self.tmp = path + ".tmp"
+        if builder not in KNOWN_BUILDERS:
+            raise ValueError(f"unknown builder {builder!r}; this build "
+                             f"writes {KNOWN_BUILDERS} (INDEX_FORMAT.md)")
         arrays = {}
         off = 0
         for name, (dt, shape) in specs.items():
@@ -360,6 +385,8 @@ class V3Writer:
             "stale": float(stale),
             "epoch": int(epoch),
             "quant": None if quant is None else quant.to_meta(),
+            "builder": builder,
+            "uncertified_d": bool(uncertified_d),
             "arrays": arrays,
         }
         blob = json.dumps(header).encode()
@@ -418,7 +445,8 @@ def _save_v3(idx: SlingIndex, path: str) -> None:
     if idx.marks is not None:
         specs["marks"] = (np.int32, idx.marks.shape)
     w = V3Writer(path, idx.plan, specs, stale=idx.stale,
-                 epoch=idx.epoch, quant=idx.quant)
+                 epoch=idx.epoch, quant=idx.quant,
+                 builder=idx.builder, uncertified_d=idx.uncertified_d)
     try:
         if idx.quant is not None and idx.quant.d_scale > 0:
             w.array("d")[:] = quantization.quantize_d_codes(
@@ -472,6 +500,15 @@ def _load_v3(path: str, mmap: bool,
     plan = _parse_plan(dict(header.get("plan", {})))
     quant = (None if header.get("quant") is None
              else QuantInfo.from_meta(header["quant"]))
+    # builder provenance (INDEX_FORMAT.md): absent = "sling" (every
+    # pre-provenance artifact was a sling build); unknown values are
+    # refused -- this build cannot vouch for their certificate
+    builder = str(header.get("builder", "sling"))
+    if builder not in KNOWN_BUILDERS:
+        raise ValueError(f"{path}: index built by unknown builder "
+                         f"{builder!r}; this build serves "
+                         f"{KNOWN_BUILDERS} (INDEX_FORMAT.md)")
+    uncertified_d = bool(header.get("uncertified_d", False))
     arrays_meta = header.get("arrays", {})
     unknown = set(arrays_meta) - set(_V3_MEMBERS)
     if unknown:
@@ -533,7 +570,8 @@ def _load_v3(path: str, mmap: bool,
     return SlingIndex(plan=plan, d=np.asarray(d, np.float32), hp=hp,
                       reduced=reduced, marks=marks,
                       stale=float(header.get("stale", 0.0)),
-                      epoch=int(header.get("epoch", 0)), quant=quant)
+                      epoch=int(header.get("epoch", 0)), quant=quant,
+                      builder=builder, uncertified_d=uncertified_d)
 
 
 # ----------------------------------------------------------------------
@@ -543,7 +581,9 @@ def pack_coo_to_v3(path: str, plan: theory.SlingPlan, d: np.ndarray,
                    src: np.ndarray, key: np.ndarray, val: np.ndarray,
                    n: int, quantize: str | None = None,
                    quantize_d: bool = True,
-                   row_chunk: int = 1 << 16) -> dict:
+                   row_chunk: int = 1 << 16,
+                   builder: str = "sling",
+                   uncertified_d: bool = False) -> dict:
     """Assemble packed HP rows straight into a format-v3 file.
 
     The scale-path twin of ``hp_index._pack_coo`` + ``save``: the COO
@@ -589,7 +629,8 @@ def pack_coo_to_v3(path: str, plan: theory.SlingPlan, d: np.ndarray,
         "vals": (vals_dt, (n, width)),
         "counts": (np.int32, (n,)),
     }
-    w = V3Writer(path, plan, specs, quant=quant)
+    w = V3Writer(path, plan, specs, quant=quant, builder=builder,
+                 uncertified_d=uncertified_d)
     try:
         w.array("d")[:] = d_codes if d_codes is not None else d
         w.array("counts")[:] = counts
@@ -620,7 +661,8 @@ def pack_coo_to_v3(path: str, plan: theory.SlingPlan, d: np.ndarray,
     return {"path": path, "n": int(n), "width": int(width),
             "entries": int(len(src)),
             "bytes": int(os.path.getsize(path)),
-            "quant": None if quant is None else quant.scheme}
+            "quant": None if quant is None else quant.scheme,
+            "builder": builder, "uncertified_d": bool(uncertified_d)}
 
 
 @partial(jax.jit, static_argnames=("n",))

@@ -188,7 +188,9 @@ def quantize_index(idx, scheme: str = "int16", quantize_d: bool = True):
                  vals=stored, counts=idx.hp.counts, theta=idx.hp.theta,
                  sqrt_c=idx.hp.sqrt_c, l_max=idx.hp.l_max)
     return SlingIndex(plan=p, d=d, hp=hp, stale=idx.stale,
-                      epoch=idx.epoch, quant=info)
+                      epoch=idx.epoch, quant=info,
+                      builder=idx.builder,
+                      uncertified_d=idx.uncertified_d)
 
 
 def quantize_d_codes(d: np.ndarray, info: QuantInfo) -> np.ndarray:

@@ -1,0 +1,119 @@
+"""Degree-skew measurement for builder selection (DESIGN.md §15).
+
+PRSim's sublinear bound (PAPERS.md: "Sublinear Time SimRank
+Computation on Large Power-Law Graphs") holds on graphs whose
+in-degree distribution has a heavy Pareto tail; on light-tailed
+(Erdos-Renyi-like) graphs its hub decomposition buys nothing over
+SLING's uniform blocked propagation. ``build.build_index(builder=
+"auto")`` therefore measures the tail before picking a backend:
+
+  * :func:`hill_alpha` -- the Hill estimator of the CCDF tail exponent
+    ``alpha`` (P[D > x] ~ x^-alpha) over the top-k in-degree order
+    statistics. Power-law in-degrees (exponent ``gamma`` ~ 2.2, the
+    regime ``generators.powerlaw_fast`` samples) give
+    ``alpha = gamma - 1`` ~ 1.2; Poisson (ER) in-degrees have a
+    super-polynomial tail and the estimator diverges upward.
+  * :func:`top_mass` -- the fraction of total in-degree mass held by
+    the top ``ceil(frac * n)`` nodes: the direct measure of whether a
+    hub set small enough to materialize densely can cover most of the
+    propagation mass.
+
+Both feed :func:`measure_skew`; :func:`choose_builder` applies the
+selection contract (prsim iff the tail is measurably Pareto AND the
+hub concentration clears the coverage threshold). The thresholds are
+deliberately conservative: a false "sling" costs only the PRSim
+speedup, a false "prsim" costs nothing in correctness (both builders
+emit the same certified entries) but wastes the hub pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.graph import csr
+
+# selection contract (DESIGN.md §15): prsim iff both hold
+ALPHA_MAX = 3.0        # Hill tail exponent: Pareto-ish tails only
+CONCENTRATION_MIN = 4.0  # top-mass share must be >= 4x the node share
+HUB_FRAC = 0.05        # "top nodes" = top ceil(HUB_FRAC * n) by in-deg
+
+
+@dataclasses.dataclass(frozen=True)
+class SkewStats:
+    """Measured in-degree skew of one graph (see module docstring)."""
+    n: int
+    m: int
+    alpha: float        # Hill tail exponent (inf = no Pareto tail)
+    top_frac: float     # node share of the measured top set
+    top_mass: float     # in-degree mass share of that top set
+    score: float        # concentration ratio: top_mass / top_frac
+
+    def as_row(self) -> dict:
+        return {"n": self.n, "m": self.m,
+                "alpha": (None if math.isinf(self.alpha)
+                          else round(self.alpha, 4)),
+                "top_frac": round(self.top_frac, 6),
+                "top_mass": round(self.top_mass, 6),
+                "score": round(self.score, 4)}
+
+
+def hill_alpha(deg: np.ndarray, k: int | None = None) -> float:
+    """Hill estimator of the CCDF tail exponent over the top-k order
+    statistics of ``deg`` (zeros excluded -- they carry no tail
+    information). Returns ``inf`` when the tail is degenerate (fewer
+    than 3 distinct positive degrees, or the top-k are all ties), which
+    :func:`choose_builder` reads as "no Pareto tail"."""
+    d = np.asarray(deg, np.float64)
+    d = d[d > 0]
+    if d.size < 8:
+        return float("inf")
+    d = np.sort(d)[::-1]
+    if k is None:
+        # sqrt-k rule: enough order statistics for a stable estimate,
+        # few enough to stay inside the tail at bench/scale sizes
+        k = int(np.clip(math.isqrt(d.size), 8, d.size - 1))
+    k = min(k, d.size - 1)
+    ref = d[k]
+    logs = np.log(d[:k] / ref)
+    s = float(logs.sum())
+    if s <= 0.0:
+        return float("inf")
+    return k / s
+
+
+def top_mass(deg: np.ndarray, frac: float = HUB_FRAC) -> tuple[float, float]:
+    """(node share, mass share) of the top ``ceil(frac * n)`` nodes by
+    degree. The mass share is what a hub set of that size would cover."""
+    d = np.asarray(deg, np.float64)
+    total = float(d.sum())
+    if d.size == 0 or total <= 0:
+        return 0.0, 0.0
+    k = max(1, int(math.ceil(frac * d.size)))
+    top = np.partition(d, d.size - k)[d.size - k:]
+    return k / d.size, float(top.sum()) / total
+
+
+def measure_skew(g: csr.Graph, frac: float = HUB_FRAC) -> SkewStats:
+    """Measure in-degree skew: O(n log n), pure NumPy, no device work
+    (it runs before the builder is even chosen)."""
+    deg = g.in_deg
+    alpha = hill_alpha(deg)
+    top_frac, mass = top_mass(deg, frac=frac)
+    score = mass / top_frac if top_frac > 0 else 0.0
+    return SkewStats(n=g.n, m=g.m, alpha=alpha, top_frac=top_frac,
+                     top_mass=mass, score=score)
+
+
+def choose_builder(g: csr.Graph) -> tuple[str, SkewStats]:
+    """The ``builder="auto"`` selection contract (DESIGN.md §15):
+    "prsim" iff the in-degree tail is measurably Pareto
+    (``hill_alpha <= ALPHA_MAX``) and the top-``HUB_FRAC`` nodes
+    concentrate at least ``CONCENTRATION_MIN``x their node share of
+    the in-degree mass; "sling" otherwise. Returns the choice together
+    with the measured stats so callers can log / bench it."""
+    stats = measure_skew(g)
+    skewed = (stats.alpha <= ALPHA_MAX
+              and stats.score >= CONCENTRATION_MIN)
+    return ("prsim" if skewed else "sling"), stats

@@ -1,0 +1,15 @@
+"""PRSim-style power-law index backend (DESIGN.md §15).
+
+An alternate *construction* schedule for the same certified SLING
+index: a reverse-PageRank pass ranks nodes, the high-PR hub set gets
+its HP columns materialized hub-centrically (small dense batches), and
+the long tail falls back to SLING's sparse pruned propagation. The
+output is bit-identical COO triples packed into the unchanged
+format-v3 artifact -- serving code never knows which builder ran.
+"""
+from repro.prsim.pagerank import reverse_pagerank
+from repro.prsim.builder import (PrsimStats, build_prsim_coo, hub_set,
+                                 prsim_hp_coo)
+
+__all__ = ["reverse_pagerank", "PrsimStats", "build_prsim_coo",
+           "hub_set", "prsim_hp_coo"]

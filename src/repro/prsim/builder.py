@@ -1,0 +1,140 @@
+"""PRSim-style hub-decomposed HP construction (DESIGN.md §15).
+
+The builder contract: emit exactly the entries SLING's pruned Alg-2
+propagation certifies (strict ``> theta`` prune, Lemma 7), but
+*scheduled* around the graph's hub structure instead of uniform node
+blocks:
+
+  1. Reverse PageRank ranks every node (repro.prsim.pagerank).
+  2. The hub set = the smallest high-PR prefix covering
+     ``hub_mass`` of the PR mass, capped at ``hub_cap_frac * n``.
+  3. Hub columns -- the ones most walks hit, whose frontiers go dense
+     -- materialize in small hub-centric batches (``hub_batch``), so
+     the peak live-frontier footprint is bounded by a few dense
+     columns, not a block's worth.
+  4. Tail columns fall back to SLING's sparse blocked propagation at
+     ``tail_block`` granularity -- their frontiers stay sparse, large
+     blocks amortize the per-block overhead.
+
+Per-column float64 accumulation order in
+:func:`~repro.core.hp_index._sparse_targets_coo` is independent of how
+columns are batched, so the COO triples are bit-identical to the SLING
+schedule -- the packed artifact differs only in the recorded builder
+provenance, and every Theorem-1 certificate carries over unchanged.
+On power-law graphs this schedule is what makes the hub columns
+tractable at scale: a 10^6-node hub column can hold ~n live entries,
+and batching 4096 of them (one SLING block) at once is exactly the
+dense-slab footprint the sparse build exists to avoid.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+
+import numpy as np
+
+from repro.core import hp_index, theory
+from repro.graph import csr
+from repro.prsim.pagerank import DEFAULT_DAMPING, reverse_pagerank
+
+DEFAULT_HUB_MASS = 0.5      # PR mass the hub set must cover ...
+DEFAULT_HUB_CAP_FRAC = 0.05  # ... capped at this node share
+DEFAULT_HUB_BATCH = 128     # dense hub columns per propagation batch
+DEFAULT_TAIL_BLOCK = 4096   # sparse tail columns per block
+
+
+@dataclasses.dataclass(frozen=True)
+class PrsimStats:
+    """Build-phase accounting returned by :func:`build_prsim_coo`."""
+    n_hubs: int
+    pr_iters: int
+    hub_mass: float          # PR mass the chosen hub set covers
+    pr_wall_s: float
+    hub_wall_s: float
+    tail_wall_s: float
+
+    def as_row(self) -> dict:
+        return {"n_hubs": self.n_hubs, "pr_iters": self.pr_iters,
+                "hub_mass": round(self.hub_mass, 6),
+                "pr_wall_s": round(self.pr_wall_s, 4),
+                "hub_wall_s": round(self.hub_wall_s, 4),
+                "tail_wall_s": round(self.tail_wall_s, 4)}
+
+
+def hub_set(pr: np.ndarray, mass: float = DEFAULT_HUB_MASS,
+            cap_frac: float = DEFAULT_HUB_CAP_FRAC) -> np.ndarray:
+    """The smallest top-PR prefix covering ``mass`` of the PR mass,
+    capped at ``ceil(cap_frac * n)`` nodes. Returned sorted ascending
+    (deterministic; ties broken by node id via the stable sort)."""
+    n = len(pr)
+    if n == 0:
+        return np.zeros(0, np.int64)
+    order = np.argsort(-pr, kind="stable")
+    csum = np.cumsum(pr[order], dtype=np.float64)
+    total = float(csum[-1])
+    k = int(np.searchsorted(csum, mass * total)) + 1
+    cap = max(1, int(math.ceil(cap_frac * n)))
+    k = max(1, min(k, cap, n))
+    return np.sort(order[:k].astype(np.int64))
+
+
+def prsim_hp_coo(g: csr.Graph, theta: float, sqrt_c: float, l_max: int,
+                 sink: "hp_index._CooSink", hub_ids: np.ndarray,
+                 hub_batch: int = DEFAULT_HUB_BATCH,
+                 tail_block: int = DEFAULT_TAIL_BLOCK,
+                 progress: bool = False) -> tuple[float, float]:
+    """Drive the hub/tail schedule into a ``_CooSink``; returns the
+    (hub, tail) wall seconds. The sink sees every target column
+    exactly once, so ``_pack_coo`` / ``pack_coo_to_v3`` assemble the
+    same packed rows as the SLING schedule."""
+    n = g.n
+    assert (l_max + 1) * n < 2**31 - 1, "int32 key space exceeded"
+    hub_ids = np.asarray(hub_ids, np.int64)
+    seq = 0
+    t0 = time.perf_counter()
+    for i in range(0, len(hub_ids), hub_batch):
+        sink.add(seq, *hp_index._sparse_targets_coo(
+            g, hub_ids[i:i + hub_batch], theta, sqrt_c, l_max))
+        seq += 1
+        if progress and (i // hub_batch) % 8 == 0:
+            print(f"  prsim hub batch {i}/{len(hub_ids)}")
+    t1 = time.perf_counter()
+    mask = np.ones(n, bool)
+    mask[hub_ids] = False
+    tail = np.flatnonzero(mask)
+    for i in range(0, len(tail), tail_block):
+        sink.add(seq, *hp_index._sparse_targets_coo(
+            g, tail[i:i + tail_block], theta, sqrt_c, l_max))
+        seq += 1
+        if progress and (i // tail_block) % 8 == 0:
+            print(f"  prsim tail block {i}/{len(tail)}")
+    return t1 - t0, time.perf_counter() - t1
+
+
+def build_prsim_coo(g: csr.Graph, plan: theory.SlingPlan,
+                    sink: "hp_index._CooSink",
+                    hub_mass: float = DEFAULT_HUB_MASS,
+                    hub_cap_frac: float = DEFAULT_HUB_CAP_FRAC,
+                    hub_batch: int = DEFAULT_HUB_BATCH,
+                    tail_block: int = DEFAULT_TAIL_BLOCK,
+                    damping: float = DEFAULT_DAMPING,
+                    progress: bool = False) -> PrsimStats:
+    """The full prsim construction front half: reverse PageRank ->
+    hub set -> hub-centric + tail propagation into ``sink``. The back
+    half (packing / v3 streaming) is shared with the SLING builder."""
+    t0 = time.perf_counter()
+    pr, iters = reverse_pagerank(g, damping=damping)
+    hubs = hub_set(pr, mass=hub_mass, cap_frac=hub_cap_frac)
+    t1 = time.perf_counter()
+    if progress:
+        print(f"  prsim: {len(hubs)} hubs cover "
+              f"{float(pr[hubs].sum()):.3f} PR mass "
+              f"({iters} PR iters, {t1 - t0:.2f}s)")
+    hub_wall, tail_wall = prsim_hp_coo(
+        g, plan.theta, plan.sqrt_c, plan.l_max, sink, hubs,
+        hub_batch=hub_batch, tail_block=tail_block, progress=progress)
+    return PrsimStats(n_hubs=int(len(hubs)), pr_iters=int(iters),
+                      hub_mass=float(pr[hubs].sum()),
+                      pr_wall_s=t1 - t0, hub_wall_s=hub_wall,
+                      tail_wall_s=tail_wall)

@@ -1,0 +1,90 @@
+"""Reverse PageRank: the hub-ranking pass of the prsim builder.
+
+PRSim (PAPERS.md) organizes its index around nodes with high *reverse*
+PageRank -- PageRank on the transposed graph, where a random surfer at
+node v follows a uniformly random **in**-edge of v. That is exactly
+the stationary bias of SimRank's backward sqrt(c)-walks, so high
+reverse-PR nodes are the columns most walks hit: the right hub set for
+a hub-centric HP build (repro.prsim.builder).
+
+The iteration runs as one jitted step over the in-edge list padded to
+its ``capacity_bucket`` (the same edge-cap bucket class the serving
+programs use, registered in analysis/programs.py as ``prsim/pr_step``)
+so repeated builds on a mutating graph reuse the compiled program
+until the bucket overflows. Convergence is checked on the host between
+steps -- build-time code, one sync per iteration is in the noise.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import compat
+from repro.core.hp_index import capacity_bucket
+from repro.graph import csr
+
+DEFAULT_DAMPING = 0.85
+DEFAULT_TOL = 1e-6        # L1 residual on a distribution summing to 1
+MAX_ITERS = 100
+
+
+@jax.jit
+def _pr_step(pr, owner, nbr, inv_deg, dangling, damping):
+    """One reverse-PageRank power-iteration step.
+
+    Edge e carries mass ``pr[owner[e]] / in_deg(owner[e])`` to
+    ``nbr[e]`` (an in-neighbor of the owner). Padding is inert twice
+    over: pad owners gather slot 0 but carry ``inv_deg == 0``, and pad
+    neighbors scatter to id ``n`` which ``segment_sum`` drops.
+    Dangling mass (in-degree-0 owners) redistributes uniformly, so the
+    iterate stays a distribution.
+    """
+    n = pr.shape[0]
+    contrib = pr[owner] * inv_deg
+    agg = compat.segment_sum(contrib, nbr, n)
+    loose = jnp.sum(pr * dangling)
+    return (1.0 - damping) / n + damping * (agg + loose / n)
+
+
+def reverse_pagerank(g: csr.Graph, damping: float = DEFAULT_DAMPING,
+                     tol: float = DEFAULT_TOL,
+                     max_iters: int = MAX_ITERS,
+                     edge_cap: int | None = None
+                     ) -> tuple[np.ndarray, int]:
+    """Reverse-PageRank scores of every node. Returns ``(pr, iters)``.
+
+    ``pr`` is a float32 probability vector (sums to 1); ``iters`` is
+    the number of power-iteration steps until the L1 residual fell
+    under ``tol`` (or ``max_iters``). ``edge_cap`` overrides the edge
+    bucket (tests pin it to hit both sides of the bucket boundary).
+    """
+    n, m = g.n, g.m
+    if n == 0:
+        return np.zeros(0, np.float32), 0
+    E = edge_cap if edge_cap is not None else capacity_bucket(m)
+    if E < m:
+        raise ValueError(f"edge_cap {E} < m {m}")
+    owner = np.zeros(E, np.int32)
+    owner[:m] = np.repeat(np.arange(n, dtype=np.int32),
+                          g.in_deg.astype(np.int64))
+    nbr = np.full(E, n, np.int32)          # pad -> dropped by scatter
+    nbr[:m] = g.in_idx
+    inv_deg = np.zeros(E, np.float32)
+    inv_deg[:m] = 1.0 / np.maximum(g.in_deg, 1)[owner[:m]]
+    dangling = (g.in_deg == 0).astype(np.float32)
+
+    d_owner = jnp.asarray(owner)
+    d_nbr = jnp.asarray(nbr)
+    d_inv = jnp.asarray(inv_deg)
+    d_dang = jnp.asarray(dangling)
+    damp = jnp.float32(damping)
+    pr = jnp.full(n, 1.0 / n, jnp.float32)
+    iters = 0
+    for iters in range(1, max_iters + 1):
+        new = _pr_step(pr, d_owner, d_nbr, d_inv, d_dang, damp)
+        resid = float(jnp.abs(new - pr).sum())
+        pr = new
+        if resid <= tol:
+            break
+    return np.asarray(pr), iters

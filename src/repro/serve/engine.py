@@ -129,6 +129,12 @@ class EngineConfig:
     # for no memory win.
     mesh: object = None
     mesh_axis: str = "data"
+    # serve an index whose diagonal carries no eps_d certificate
+    # (build_index_scale(uncertified_diagonal=True), recorded in the
+    # artifact header). Off by default: an uncertified d silently
+    # voids the Theorem-1 bound every answer is sold under, so the
+    # engine refuses unless the operator opts in explicitly.
+    allow_uncertified: bool = False
 
 
 class QueryEngine:
@@ -137,6 +143,14 @@ class QueryEngine:
     def __init__(self, index: SlingIndex, g: csr.Graph,
                  config: EngineConfig | None = None):
         self.cfg = config or EngineConfig()
+        if getattr(index, "uncertified_d", False) \
+                and not self.cfg.allow_uncertified:
+            raise ValueError(
+                "index diagonal is uncertified (built with "
+                "uncertified_diagonal=True): the Theorem-1 eps bound "
+                "does not hold. Rebuild with a certified d_mode, or "
+                "pass EngineConfig(allow_uncertified=True) to serve "
+                "it anyway (DESIGN.md section 15)")
         backend = self.cfg.pair_backend
         if backend == "auto":
             backend = ("pallas" if jax.default_backend() == "tpu"
@@ -275,6 +289,9 @@ class QueryEngine:
         recompilations** -- it is a device upload plus cache
         invalidation. Overflow grows the bucket and is counted in
         ``stats()["swap_recompiles"]`` (the next dispatch recompiles).
+        The same uncertified-diagonal refusal as construction applies:
+        a hot swap must not launder an uncertified artifact past the
+        certificate gate.
 
         ``affected`` (e.g. ``UpdateReport.affected``) restricts
         invalidation of *pair* entries to those reading an affected
@@ -285,6 +302,12 @@ class QueryEngine:
         cache. Returns swap metrics (also in ``stats()``).
         """
         t0 = time.perf_counter()
+        if getattr(index, "uncertified_d", False) \
+                and not self.cfg.allow_uncertified:
+            raise ValueError(
+                "refusing to hot-swap in an uncertified-diagonal "
+                "index; pass EngineConfig(allow_uncertified=True) "
+                "(DESIGN.md section 15)")
         if index.n != self.index.n:
             raise ValueError("hot-swap requires a fixed node set "
                              f"({index.n} != {self.index.n}); changed n "

@@ -268,3 +268,23 @@ def test_pass_registry_consistent():
     passes = analysis.all_passes()
     assert tuple(p.pass_id for p in passes) == analysis.PASS_IDS
     assert len(set(analysis.PASS_IDS)) == len(analysis.PASS_IDS)
+
+
+def test_markers_used_match_pyproject_declarations():
+    """Marker lint: every ``pytest.mark.<m>`` used under tests/ is
+    declared in pyproject.toml, and every declared marker is used --
+    an undeclared marker silently deselects nothing under ``-m`` and a
+    dead declaration rots the ci.sh step list."""
+    import re
+    root = Path(__file__).parent.parent
+    toml = (root / "pyproject.toml").read_text()
+    block = re.search(r"markers = \[(.*?)\]", toml, re.S).group(1)
+    declared = set(re.findall(r'"(\w+):', block))
+    builtin = {"parametrize", "skip", "skipif", "xfail", "param",
+               "usefixtures", "filterwarnings"}
+    used = set()
+    for f in (root / "tests").glob("test_*.py"):
+        used |= set(re.findall(r"pytest\.mark\.(\w+)", f.read_text()))
+    used -= builtin
+    assert used <= declared, f"undeclared markers: {used - declared}"
+    assert declared <= used, f"declared but unused: {declared - used}"

@@ -306,3 +306,68 @@ def test_pack_coo_to_v3_matches_build_and_save(tmp_path, graph, index,
     if quantized:
         assert got.quant.scheme == "int16"
         assert got.quant.bound == pytest.approx(ref.quant.bound)
+
+
+# ----------------------------------------------------------------------
+# builder provenance + uncertified-diagonal flag (DESIGN.md section 15)
+# ----------------------------------------------------------------------
+def test_builder_provenance_roundtrips_v3(tmp_path, graph):
+    idx = build.build_index(graph, eps=0.1, exact_d=True, seed=0,
+                            quant_frac=0.2, builder="prsim")
+    assert idx.builder == "prsim"
+    # prsim is bit-identical to the sparse SLING schedule: per-column
+    # accumulation order does not depend on the column batching
+    ref = hp_index.build_hp_table_sparse(graph, idx.plan.theta,
+                                         idx.plan.sqrt_c,
+                                         idx.plan.l_max, block=32)
+    np.testing.assert_array_equal(np.asarray(idx.hp.keys),
+                                  np.asarray(ref.keys))
+    np.testing.assert_array_equal(np.asarray(idx.hp.vals),
+                                  np.asarray(ref.vals))
+    p = str(tmp_path / "prsim.sling")
+    idx.save(p)
+    for mmap in (False, True):
+        got = SlingIndex.load(p, mmap=mmap)
+        assert got.builder == "prsim" and not got.uncertified_d
+    # quantization preserves provenance
+    iq = quantize.quantize_index(idx)
+    assert iq.builder == "prsim"
+    iq.save(p)
+    assert SlingIndex.load(p, mmap=True).builder == "prsim"
+
+
+def test_v2_refuses_builder_metadata(tmp_path, graph):
+    idx = build.build_index(graph, eps=0.1, exact_d=True, seed=0,
+                            builder="prsim")
+    with pytest.raises(ValueError, match="no builder/uncertified_d"):
+        idx.save(str(tmp_path / "p.npz"), version=2)
+
+
+def test_refuses_unknown_builder(tmp_path, index):
+    p = str(tmp_path / "mystery.sling")
+    index.save(p)
+    _rewrite_header(p, lambda h: h.update(builder="mystery"))
+    with pytest.raises(ValueError, match="unknown builder 'mystery'"):
+        SlingIndex.load(p)
+    # absent builder = "sling" (every pre-provenance artifact)
+    index.save(p)
+    _rewrite_header(p, lambda h: h.pop("builder"))
+    assert SlingIndex.load(p, validate=False).builder == "sling"
+
+
+def test_uncertified_flag_roundtrips_and_engine_refuses(tmp_path,
+                                                        graph, index):
+    from repro.serve import EngineConfig, QueryEngine
+    p = str(tmp_path / "uncert.sling")
+    index.save(p)
+    _rewrite_header(p, lambda h: h.update(uncertified_d=True))
+    got = SlingIndex.load(p, validate=False)
+    assert got.uncertified_d
+    with pytest.raises(ValueError, match="uncertified"):
+        QueryEngine(got, graph)
+    # explicit opt-in serves it; hot swap still refuses by default
+    eng = QueryEngine(got, graph, EngineConfig(allow_uncertified=True))
+    assert 0.0 <= eng.pair(0, 1) <= 1.0
+    eng2 = QueryEngine(index, graph)
+    with pytest.raises(ValueError, match="hot-swap"):
+        eng2.swap_index(got, graph)

@@ -420,6 +420,173 @@ def test_quantized_mmap_frontend_within_planned_eps(backend):
 
 
 # ----------------------------------------------------------------------
+# prsim-built wall (DESIGN.md section 15): the same zoo x c grid built
+# by the PRSim-style hub-decomposed backend, round-tripped through
+# quantization + a memory-mapped v3 artifact, and served through the
+# UNCHANGED stack against the UNCHANGED planned-eps tolerance -- the
+# hub/tail schedule must be invisible everywhere except the recorded
+# builder provenance.
+# ----------------------------------------------------------------------
+def _pcell(name: str, c: float, eps: float):
+    """prsim twin of ``_qcell``: built by the hub-decomposed backend,
+    int16-quantized, saved as format v3, memory-mapped back, builder
+    provenance asserted."""
+    key = ("prsim", name, c, eps)
+    if key not in _cache:
+        g = oracle.cases()[name]
+        idx = build.build_index(g, eps=eps, c=c, exact_d=True, seed=0,
+                                quant_frac=0.25, builder="prsim")
+        assert idx.builder == "prsim"
+        iq = quantize.quantize_index(idx, scheme="int16")
+        if not _qdir:
+            _qdir.append(tempfile.mkdtemp(prefix="sling_qwall_"))
+            atexit.register(shutil.rmtree, _qdir[0],
+                            ignore_errors=True)
+        path = os.path.join(_qdir[0], f"prsim_{name}_{c}_{eps}.sling")
+        iq.save(path)
+        im = SlingIndex.load(path, mmap=True)
+        assert im.builder == "prsim" and not im.uncertified_d
+        assert im.quant is not None
+        _cache[key] = (g, im, oracle.exact_simrank(g, c))
+    return _cache[key]
+
+
+@pytest.mark.prsim
+@pytest.mark.parametrize("c,eps", SETTINGS)
+@pytest.mark.parametrize("name", CASES)
+def test_prsim_pair_within_planned_eps(name, c, eps):
+    g, idx, S = _pcell(name, c, eps)
+    tol = oracle.tolerance(idx.plan)
+    n = g.n
+    vs, us = np.meshgrid(np.arange(n, dtype=np.int32),
+                         np.arange(n, dtype=np.int32))
+    got = idx.query_pairs(us.ravel(), vs.ravel()).reshape(n, n)
+    assert np.abs(got - S).max() <= tol
+    rng = np.random.default_rng(2)
+    for _ in range(4):
+        u, v = (int(x) for x in rng.integers(0, n, 2))
+        assert abs(idx.query_pair_host(u, v, g) - S[u, v]) <= tol
+
+
+@pytest.mark.prsim
+@pytest.mark.parametrize("backend", oracle.BACKENDS)
+@pytest.mark.parametrize("c,eps", SETTINGS)
+@pytest.mark.parametrize("name", CASES)
+def test_prsim_source_topk_within_planned_eps(name, c, eps, backend):
+    g, idx, S = _pcell(name, c, eps)
+    tol = oracle.tolerance(idx.plan)
+    us = np.unique(np.array([0, 1, g.n // 2, g.n - 1], np.int32))
+    got = single_source_device(idx, g, us, backend=backend)
+    for i, u in enumerate(us.tolist()):
+        assert np.abs(got[i] - S[u]).max() <= tol
+    sv, si = topk_device(idx, g, us, 7, backend=backend)
+    for i, u in enumerate(us.tolist()):
+        truth = np.sort(S[u])[::-1][:7]
+        np.testing.assert_allclose(sv[i], truth, atol=tol)
+        np.testing.assert_allclose(sv[i], S[u][si[i]], atol=tol)
+
+
+@pytest.mark.prsim
+@pytest.mark.parametrize("backend", oracle.BACKENDS)
+def test_prsim_sharded_and_join(backend):
+    from repro.join import JoinConfig, run_join
+    g, idx, S = _pcell("powerlaw", 0.6, 0.1)
+    tol = oracle.tolerance(idx.plan)
+    us = np.array([0, 3, g.n - 1], np.int32)
+    mesh = shard_query.serving_mesh(1)
+    si = shard_query.shard_index(idx, g, mesh, push_backend=backend)
+    sh = shard_query.sharded_single_source(si, us, backend=backend)
+    for i, u in enumerate(us.tolist()):
+        assert np.abs(sh[i] - S[u]).max() <= tol
+    mv, mi = shard_query.sharded_topk(si, us, 8, backend=backend)
+    for i, u in enumerate(us.tolist()):
+        truth = np.sort(S[u])[::-1][:8]
+        np.testing.assert_allclose(mv[i], truth, atol=tol)
+    knn = run_join(idx, g, us, JoinConfig(k=8, tile=4,
+                                          push_backend=backend))
+    for i, u in enumerate(us.tolist()):
+        row = slice(int(knn.indptr[i]), int(knn.indptr[i + 1]))
+        np.testing.assert_allclose(knn.nbr_scores[row],
+                                   np.sort(S[u])[::-1][:8], atol=tol)
+
+
+@pytest.mark.prsim
+@pytest.mark.serve
+@pytest.mark.parametrize("backend", oracle.BACKENDS)
+def test_prsim_frontend_within_planned_eps(backend):
+    """The async frontend over a prsim-built quantized mmap'd
+    artifact: answers bit-identical to a direct engine on the same
+    index, and within planned eps of the oracle."""
+    from repro.serve import (EngineConfig, FrontendConfig, QueryEngine,
+                             ServeFrontend, VirtualClock)
+    g, idx, S = _pcell("powerlaw", 0.6, 0.1)
+    tol = oracle.tolerance(idx.plan)
+    ecfg = EngineConfig(pair_batch=8, source_batch=4, cache_size=32,
+                        k_buckets=(4, 16), push_backend=backend)
+    clk = VirtualClock()
+    fe = ServeFrontend(idx, g, FrontendConfig(
+        max_batch=3, max_pair_batch=4, max_wait=0.004, engine=ecfg),
+        clock=clk)
+    ref = QueryEngine(idx, g, ecfg)
+    rng = np.random.default_rng(11)
+    todo = []
+    for _ in range(12):
+        r = rng.random()
+        u = int(rng.integers(g.n))
+        if r < 0.4:
+            todo.append(("source", fe.submit_source(u), u, None))
+        elif r < 0.7:
+            v = int(rng.integers(g.n))
+            todo.append(("pair", fe.submit_pair(u, v), u, v))
+        else:
+            todo.append(("topk", fe.submit_topk(u, 9), u, 9))
+        if rng.random() < 0.5:
+            clk.advance(float(rng.uniform(0, 0.006)))
+    clk.advance(0.004)
+    fe.flush()
+    for kind, t, a, b in todo:
+        got = t.result()
+        if kind == "source":
+            assert np.array_equal(got, ref.single_source([a])[0])
+            assert np.abs(got - S[a]).max() <= tol
+        elif kind == "pair":
+            assert got == ref.pair(a, b)
+            assert abs(got - S[a, b]) <= tol
+        else:
+            sv, si = got
+            rv, ri = ref.topk([a], b)
+            assert np.array_equal(sv, rv[0])
+            assert np.array_equal(si, ri[0])
+            np.testing.assert_allclose(sv, np.sort(S[a])[::-1][:b],
+                                       atol=tol)
+    fe.close()
+
+
+@pytest.mark.prsim
+def test_prsim_serves_with_zero_new_compiled_shapes():
+    """The acceptance contract made executable: a warmed engine serving
+    a sling-built index hot-swaps to a prsim-built index of the same
+    plan with zero recompiles and an unchanged compiled-shape set --
+    the builder is invisible to every compiled program."""
+    from repro.serve import EngineConfig, QueryEngine
+    g = oracle.cases()["powerlaw"]
+    i_sling = build.build_index(g, eps=0.1, c=0.6, exact_d=True, seed=0)
+    i_prsim = build.build_index(g, eps=0.1, c=0.6, exact_d=True, seed=0,
+                                builder="prsim")
+    eng = QueryEngine(i_sling, g, EngineConfig(
+        pair_batch=8, source_batch=4, k_buckets=(4, 16)))
+    eng.warmup()
+    shapes = list(eng.stats()["unique_shapes"])
+    rep = eng.swap_index(i_prsim, g)
+    assert rep["recompiles"] == 0
+    eng.pair(0, 3)
+    eng.single_source([1, 2])
+    eng.topk([0], 4)
+    assert eng.stats()["unique_shapes"] == shapes
+    assert eng.stats()["swap_recompiles"] == 0
+
+
+# ----------------------------------------------------------------------
 # regression: duplicate (l, k) keys in a packed row
 # ----------------------------------------------------------------------
 def test_seed_matrix_accumulates_duplicate_keys():

@@ -44,14 +44,20 @@ from repro.core import build
 from repro.core.index import SlingIndex
 from repro.serve import EngineConfig, QueryEngine
 
+builder = sys.argv[3]
 g = generators.powerlaw_fast(n, k=6, seed=0)
 path = os.path.join(tempfile.mkdtemp(prefix="sling_scale_"), "idx.sling")
 stats = build.build_index_scale(g, path, eps=0.5, quant_frac=0.2,
-                                quantize="int16")
+                                quantize="int16", builder=builder)
 idx = SlingIndex.load(path, mmap=True)
 assert idx.n == n and idx.quant is not None
 assert isinstance(idx.hp.vals, np.memmap)
 assert not idx.hp.vals.flags.writeable
+# builder provenance round-trips through the v3 header; the scale
+# default diagonal is the chunked certified Alg-4 pass
+assert idx.builder == stats["builder"]
+assert builder == "auto" or idx.builder == builder
+assert not idx.uncertified_d and stats["d_mode"] == "estimate"
 
 eng = QueryEngine(idx, g, EngineConfig(pair_batch=8, source_batch=2,
                                        k_buckets=(8,)))
@@ -86,7 +92,13 @@ print("SCALE_RESULT " + json.dumps(out))
 
 @pytest.mark.scale
 @pytest.mark.slow
-def test_scale_build_mmap_serve_under_rss_gate():
+@pytest.mark.parametrize("builder", [
+    "sling",
+    # prsim twin: the hub-decomposed schedule must meet the SAME gate
+    # (its whole point is bounding the live hub-column footprint)
+    pytest.param("prsim", marks=pytest.mark.prsim),
+])
+def test_scale_build_mmap_serve_under_rss_gate(builder):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(os.path.dirname(__file__), "..", "src"),
@@ -96,7 +108,8 @@ def test_scale_build_mmap_serve_under_rss_gate():
     # the build actually holds, which is what the gate measures
     env["MALLOC_ARENA_MAX"] = "4"
     proc = subprocess.run(
-        [sys.executable, "-c", _CHILD, str(AS_LIMIT_MB), str(N_SCALE)],
+        [sys.executable, "-c", _CHILD, str(AS_LIMIT_MB), str(N_SCALE),
+         builder],
         capture_output=True, text=True, env=env, timeout=900)
     assert proc.returncode == 0, (
         f"scale child failed (rc={proc.returncode}); an rlimit kill "
